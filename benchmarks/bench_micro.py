@@ -1,0 +1,86 @@
+"""Paper section 3 microbenchmarks, re-targeted (Figs. 2, 4, 5).
+
+Fig 2 (OpenMP scheduling cost) -> grid/launch overhead: one static Pallas
+grid of N programs vs N separate dispatches (the "dynamic scheduling"
+shape).  Fig 4 (alloc/dealloc) -> buffer reuse via jit donation vs fresh
+host allocation per call (the XLA arena plays TBB's role; donation is the
+"parallel"/thread-private reuse).  Fig 5 (stanza access, DDR vs MCDRAM) ->
+gather bandwidth vs stanza length; the HBM-vs-VMEM blocking conclusion is
+what sizes the BCSR tiles.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import bench, emit
+
+
+def fig2_scheduling(quick=True):
+    n_iters = 64
+    x = jnp.zeros((n_iters, 128), jnp.float32)
+
+    @jax.jit
+    def static_grid(x):
+        return x + 1.0    # one dispatch covering all "iterations"
+
+    @jax.jit
+    def one(chunk):
+        return chunk + 1.0
+
+    def dynamic(x):
+        return [one(x[i]) for i in range(n_iters)]   # dispatch per iteration
+
+    t_static = bench(static_grid, x)
+    emit("fig2,static", t_static, f"iters={n_iters}")
+    t_dyn = bench(lambda: dynamic(x), iters=2)
+    emit("fig2,dynamic", t_dyn,
+         f"overhead={t_dyn / max(t_static, 1e-9):.1f}x")
+
+
+def fig4_alloc(quick=True):
+    n = 1 << 22   # 16 MiB f32
+
+    @jax.jit
+    def update(buf):
+        return buf * 1.0001
+
+    buf = jnp.zeros((n,), jnp.float32)
+    donated = jax.jit(update, donate_argnums=(0,))
+
+    def reuse_path():
+        nonlocal buf
+        buf = donated(buf)
+        return buf
+
+    t_reuse = bench(reuse_path, iters=3)
+    emit("fig4,reuse_donated", t_reuse, f"bytes={4 * n}")
+
+    def fresh_path():
+        fresh = jnp.asarray(np.zeros((n,), np.float32))  # alloc+copy per call
+        return update(fresh)
+
+    t_fresh = bench(fresh_path, iters=3)
+    emit("fig4,fresh_alloc", t_fresh,
+         f"overhead={t_fresh / max(t_reuse, 1e-9):.1f}x")
+
+
+def fig5_stanza(quick=True):
+    """Gather the same total bytes with varying contiguous stanza length."""
+    total = 1 << 22                      # elements
+    src = jnp.arange(total, dtype=jnp.float32)
+    rng = np.random.default_rng(0)
+    for stanza in (1, 8, 64, 512):
+        n_st = total // stanza // 4      # read a quarter of the array
+        starts = jnp.asarray(
+            rng.integers(0, total - stanza, n_st).astype(np.int32))
+
+        @jax.jit
+        def gather(src, starts):
+            idx = starts[:, None] + jnp.arange(stanza)[None, :]
+            return src[idx].sum()
+
+        t = bench(gather, src, starts)
+        gbps = n_st * stanza * 4 / t / 1e9
+        emit(f"fig5,stanza{stanza}", t, f"{gbps:.2f}GB/s")

@@ -1,0 +1,37 @@
+"""MoE dispatch = SpGEMM: the paper's C8 (skip the sort) inside the LM.
+
+Measures stable vs unstable dispatch sort (tokens within an expert need no
+order -- exactly the unsorted-CSR argument) and the dispatch/combine
+round-trip throughput.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, reduced
+from repro.models import moe
+from .common import bench, emit
+
+
+def run(quick=True):
+    cfg = reduced(ARCHS["qwen3-moe-30b-a3b"], d_model=256)
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, n_experts=32, top_k=4))
+    key = jax.random.PRNGKey(0)
+    params = moe.init(key, cfg)
+    T = 4096 if quick else 16384
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, T, cfg.d_model),
+                          jnp.bfloat16)
+    for stable in (False, True):
+        cfg_s = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe,
+                                         stable_dispatch_sort=stable))
+        fn = jax.jit(lambda p, x, c=cfg_s: moe.apply_dense(p, x, c)[0])
+        t = bench(fn, params, x)
+        tag = "stable_sort" if stable else "unsorted"
+        emit(f"moe_dispatch,{tag}", t,
+             f"tokens={T};topk={cfg.moe.top_k};"
+             f"{T / t / 1e6:.2f}Mtok/s")

@@ -1,0 +1,39 @@
+"""Shared benchmark utilities: timing + CSV emission.
+
+CPU-container caveat (documented in EXPERIMENTS.md): the Pallas kernels run
+in *interpret mode* here, so their absolute timings are not TPU-predictive;
+what these benchmarks preserve from the paper is the **relative algorithm
+behaviour** (density/size/CR trends, sorted-vs-unsorted gap, balanced-vs-
+naive scheduling) plus exact throughput numbers for the XLA-compiled paths
+(ESC, heap, SpMM).  TPU-projected numbers live in the roofline analysis.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+ROWS = []
+
+
+def bench(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median seconds per call (after jit warmup)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def emit(name: str, seconds: float, derived: str = ""):
+    us = seconds * 1e6
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def flops_rate(flop: float, seconds: float) -> str:
+    return f"{2.0 * flop / seconds / 1e6:.1f}MFLOPS"

@@ -1,0 +1,59 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  ``--full`` runs the larger sizes;
+the default quick mode fits the single-core container (see
+benchmarks/common.py for the interpret-mode caveat).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from . import common
+from . import bench_spgemm_figs as figs
+from . import bench_micro as micro
+from . import bench_moe_dispatch as moe_bench
+
+
+SUITES = [
+    ("fig2_scheduling", lambda q: micro.fig2_scheduling(q)),
+    ("fig4_alloc", lambda q: micro.fig4_alloc(q)),
+    ("fig5_stanza", lambda q: micro.fig5_stanza(q)),
+    ("fig9_balanced_vs_naive", lambda q: figs.fig9_balanced_vs_naive()),
+    ("fig11_density", lambda q: figs.fig11_density(q)),
+    ("fig12_size", lambda q: figs.fig12_size(q)),
+    ("fig13_scaling", lambda q: figs.fig13_scaling(q)),
+    ("fig14_compression", lambda q: figs.fig14_compression(q)),
+    ("fig15_profiles", lambda q: figs.fig15_profiles(q)),
+    ("fig16_tall_skinny", lambda q: figs.fig16_tall_skinny(q)),
+    ("fig17_triangle", lambda q: figs.fig17_triangle(q)),
+    ("table4_recipe", lambda q: figs.table4_recipe(q)),
+    ("moe_dispatch", lambda q: moe_bench.run(q)),
+]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", type=str, default=None,
+                    help="comma-separated suite names")
+    args = ap.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else None
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in SUITES:
+        if only and name not in only:
+            continue
+        try:
+            fn(not args.full)
+        except Exception:  # noqa: BLE001 - report and continue
+            failures += 1
+            print(f"{name},ERROR,", flush=True)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

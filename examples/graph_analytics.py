@@ -1,0 +1,61 @@
+"""Graph analytics on the SpGEMM engine: the paper's two application
+scenarios (sections 5.5-5.6) end-to-end.
+
+  * triangle counting: reorder by degree, split A = L + U, count via L @ U
+  * multi-source BFS: square x tall-skinny SpMM over frontier stacks
+
+    PYTHONPATH=src python examples/graph_analytics.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import CSR, spgemm_esc, spmm
+from repro.data.rmat import rmat_csr, triangular_split
+
+
+def triangle_count(a: CSR) -> int:
+    """Triangles via wedges: tri = sum(L@U .* A_perm) / 2 (section 5.6)."""
+    L, U = triangular_split(a)
+    wedges_cap = 1 << 18
+    c = spgemm_esc(L, U, cap_c=wedges_cap)
+    perm_adj = (L.to_dense() + U.to_dense()) > 0
+    tri = float(jnp.sum(c.to_dense() * perm_adj) / 2)
+    return int(round(tri))
+
+
+def multi_source_bfs(a: CSR, sources, n_hops: int):
+    """Hop distances from each source (betweenness-style frontier stack)."""
+    n = a.n_rows
+    k = len(sources)
+    frontier = jnp.zeros((n, k), jnp.float32).at[
+        jnp.asarray(sources), jnp.arange(k)].set(1.0)
+    dist = jnp.where(frontier > 0, 0, -1).astype(jnp.int32)
+    for hop in range(1, n_hops + 1):
+        frontier = (spmm(a, frontier) > 0).astype(jnp.float32)
+        newly = (frontier > 0) & (dist < 0)
+        dist = jnp.where(newly, hop, dist)
+    return dist
+
+
+def main():
+    # undirected graph from an R-MAT pattern
+    g = rmat_csr(8, 8, "G500", seed=1)
+    ad = np.asarray(g.to_dense())
+    ad = ((ad + ad.T) > 0).astype(np.float32)
+    np.fill_diagonal(ad, 0)
+    a = CSR.from_dense(jnp.asarray(ad))
+    print(f"graph: {a.n_rows} vertices, {int(a.nnz)} edges (directed nnz)")
+
+    tri = triangle_count(a)
+    brute = int(np.trace(np.linalg.matrix_power(ad.astype(np.int64), 3)) // 6)
+    print(f"triangles: L@U -> {tri}, brute force -> {brute}")
+    assert tri == brute
+
+    sources = [0, 17, 42, 100]
+    dist = multi_source_bfs(a, sources, n_hops=6)
+    reached = np.asarray((dist >= 0).sum(axis=0))
+    print(f"multi-source BFS from {sources}: reached per source {reached}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""End-to-end training driver: train a qwen3-family LM on the synthetic
+Markov stream for a few hundred steps, with checkpointing.
+
+Default is a ~10M-param reduced config sized for this CPU container; pass
+``--params 100m`` for the ~100M-class run (same code path, longer wall
+time), or use ``python -m repro.launch.train`` directly for full configs.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+import argparse
+import dataclasses
+
+from repro.configs import ARCHS, reduced
+from repro.parallel.sharding import single_device_ctx
+from repro.train import loop as loop_lib
+from repro.train import optimizer as opt
+
+
+def build_cfg(size: str):
+    base = ARCHS["qwen3-0.6b"]
+    if size == "10m":
+        cfg = reduced(base, d_model=128, vocab=512)
+        cfg = dataclasses.replace(cfg, n_layers=4, d_ff=512, name="qwen3-10m")
+    elif size == "100m":
+        cfg = reduced(base, d_model=512, vocab=8192)
+        cfg = dataclasses.replace(cfg, n_layers=12, d_ff=2048, n_heads=8,
+                                  n_kv_heads=4, head_dim=64,
+                                  name="qwen3-100m")
+    else:
+        raise SystemExit(f"unknown --params {size}")
+    return cfg
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--params", choices=["10m", "100m"], default="10m")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = build_cfg(args.params)
+    n = cfg.param_count()
+    print(f"training {cfg.name}: {n/1e6:.1f}M params, "
+          f"{args.steps} steps, batch {args.batch} x seq {args.seq}")
+    pctx = single_device_ctx(remat=False, attn_impl="chunked")
+    ocfg = opt.AdamWConfig(lr=3e-3, warmup_steps=args.steps // 10,
+                           total_steps=args.steps)
+    lcfg = loop_lib.LoopConfig(
+        total_steps=args.steps, ckpt_every=max(args.steps // 4, 1),
+        log_every=max(args.steps // 20, 1), ckpt_dir=args.ckpt_dir,
+        global_batch=args.batch, seq_len=args.seq)
+
+    def log(m):
+        print(f"  step {m['step']:5d} loss {m['loss']:.4f} "
+              f"({m['sec_per_step']:.2f}s/step)", flush=True)
+
+    _, hist = loop_lib.run(cfg, pctx, ocfg, lcfg, on_metrics=log)
+    first, last = hist[0]["loss"], hist[-1]["loss"]
+    print(f"loss {first:.3f} -> {last:.3f} "
+          f"({'OK: learning' if last < first else 'NOT LEARNING?'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""repro: JAX/Pallas reproduction of Nagasaka et al. 2018 SpGEMM +
+a multi-pod LM training/serving framework built around it.
+
+Public API surface:
+    repro.core      -- sparse formats + SpGEMM engine (the paper's contribution)
+    repro.kernels   -- Pallas TPU kernels (hash SpGEMM, BCSR SpGEMM, SpMM, flash attn)
+    repro.models    -- LM model zoo (dense / MoE / SSM / hybrid / VLM / audio)
+    repro.configs   -- assigned architecture configs + input shapes
+    repro.parallel  -- sharding rules, collectives, pipeline
+    repro.train     -- optimizer, train step, loop
+    repro.serve     -- prefill/decode engine
+    repro.launch    -- mesh, dry-run, drivers
+"""
+
+__version__ = "1.0.0"

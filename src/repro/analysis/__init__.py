@@ -1,0 +1,1 @@
+"""Dry-run artifact analysis: HLO collective audit + roofline model."""

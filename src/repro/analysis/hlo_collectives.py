@@ -1,0 +1,61 @@
+"""Collective-bytes audit from optimized HLO text.
+
+``cost_analysis`` has no collective term, so the roofline's third term is
+derived here: every ``all-gather`` / ``all-reduce`` / ``reduce-scatter`` /
+``all-to-all`` / ``collective-permute`` op's result shape bytes are summed,
+grouped by kind.
+
+Loop caveat: ops inside ``while`` bodies (lax.scan over layer periods)
+appear ONCE in the module text but execute once per trip.  The same is true
+of ``cost_analysis`` flops.  The dry-run therefore runs a 1-period and a
+2-period *calibration compile* per cell and linearly extrapolates:
+``total = full_reported + (n_periods - 1) * (c2 - c1)`` -- see
+``launch/dryrun.py::run_cell(calibrate=True)``.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|([\w\[\],{}]+))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum collective result bytes by kind over the optimized module text.
+
+    Counts each op once (see module docstring for the loop-trip handling).
+    """
+    per_kind: dict[str, int] = defaultdict(int)
+    count: dict[str, int] = defaultdict(int)
+    for cm in _COLL_RE.finditer(hlo_text):
+        shape_str = cm.group(1) or cm.group(2)
+        kind = cm.group(3)
+        per_kind[kind] += _shape_bytes(shape_str)
+        count[kind] += 1
+    return {"bytes_by_kind": dict(per_kind),
+            "count_by_kind": dict(count),
+            "total_bytes": int(sum(per_kind.values()))}

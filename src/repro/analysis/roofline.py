@@ -1,0 +1,148 @@
+"""Roofline analysis from dry-run artifacts (TPU v5e targets).
+
+Three terms per (arch x shape x mesh) cell, all **per chip** (the dry-run's
+``cost_analysis``/HLO describe the per-device SPMD program, so the
+assignment's ``/ chips`` division is already applied):
+
+    compute_s    = HLO_FLOPs      / PEAK_FLOPS        (197 TF/s bf16)
+    memory_s     = HLO_bytes      / HBM_BW            (819 GB/s)
+    collective_s = collective_B   / LINK_BW           (50 GB/s/link ICI)
+
+Loop correction: scan bodies are counted once by XLA; totals are
+reconstructed from the dry-run's unrolled 1p/2p calibration compiles:
+``total = c1 + (n_full-1 + n_tail/period) * (c2 - c1)``.
+
+Also reported: MODEL_FLOPS = 6*N_active*D (train) or 2*N_active*D
+(prefill/decode) per chip, and the usefulness ratio
+MODEL_FLOPS / HLO_FLOPs -- remat recompute, attention, and any redundant
+compute push it below 1.
+
+Usage:  python -m repro.analysis.roofline results/dryrun_1pod.jsonl [...]
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+PEAK_FLOPS = 197e12     # bf16 FLOP/s per v5e-class chip
+HBM_BW = 819e9          # B/s per chip
+LINK_BW = 50e9          # B/s per ICI link
+
+_SHAPE_TOKENS = {
+    "train_4k": 4096 * 256,
+    "prefill_32k": 32768 * 32,
+    "decode_32k": 128,
+    "long_500k": 1,
+}
+_KIND = {"train_4k": "train", "prefill_32k": "prefill",
+         "decode_32k": "decode", "long_500k": "decode"}
+
+
+def corrected_totals(rec: dict) -> dict:
+    """Apply the calibration extrapolation; falls back to reported."""
+    flops = rec.get("hlo_flops", 0.0)
+    mbytes = rec.get("hlo_bytes", 0.0)
+    coll = float(rec.get("collectives", {}).get("total_bytes", 0))
+    calib = rec.get("calib")
+    if calib and "c1" in calib and "c2" in calib:
+        c1, c2 = calib["c1"], calib["c2"]
+        mult = (calib["n_full_periods"] - 1) + \
+            calib["n_tail"] / max(calib["period"], 1)
+        d_fl = max(0.0, c2["hlo_flops"] - c1["hlo_flops"])
+        d_by = max(0.0, c2["hlo_bytes"] - c1["hlo_bytes"])
+        d_co = max(0.0, c2["collectives"]["total_bytes"] -
+                   c1["collectives"]["total_bytes"])
+        flops = c1["hlo_flops"] + mult * d_fl
+        mbytes = c1["hlo_bytes"] + mult * d_by
+        coll = c1["collectives"]["total_bytes"] + mult * d_co
+    return {"flops": flops, "bytes": mbytes, "coll_bytes": coll}
+
+
+def model_flops_per_chip(rec: dict) -> float:
+    n = rec.get("active_params", rec.get("params", 0))
+    d = _SHAPE_TOKENS.get(rec["shape"], 1)
+    mult = 6 if _KIND.get(rec["shape"]) == "train" else 2
+    return mult * n * d / max(rec.get("chips", 1), 1)
+
+
+def analyze(rec: dict) -> dict:
+    tot = corrected_totals(rec)
+    compute_s = tot["flops"] / PEAK_FLOPS
+    memory_s = tot["bytes"] / HBM_BW
+    coll_s = tot["coll_bytes"] / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    bottleneck = max(terms, key=terms.get)
+    step_s = max(terms.values()) if terms else 0.0
+    mf = model_flops_per_chip(rec)
+    out = dict(rec)
+    out.update(
+        compute_s=compute_s, memory_s=memory_s, collective_s=coll_s,
+        bottleneck=bottleneck,
+        roofline_fraction=(compute_s / step_s) if step_s else 0.0,
+        model_flops_per_chip=mf,
+        useful_ratio=(mf / tot["flops"]) if tot["flops"] else 0.0,
+        corrected=tot)
+    return out
+
+
+_ADVICE = {
+    "compute": "reduce recompute (remat policy) / shed non-model FLOPs; "
+               "compute term is the roofline -- this cell is healthy if "
+               "useful_ratio is near 1",
+    "memory": "increase arithmetic intensity: larger per-chip batch, fuse "
+              "elementwise chains, bf16 activations, avoid resharding "
+              "copies",
+    "collective": "re-balance sharding: move collectives off the critical "
+                  "path (overlap), shrink FSDP gather volume (bigger TP "
+                  "share), or compress cross-pod traffic",
+}
+
+
+def render_markdown(records: list[dict]) -> str:
+    rows = ["| arch | shape | mesh | compute s | memory s | collective s | "
+            "bottleneck | roofline frac | useful ratio |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in records:
+        if "error" in r:
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"ERROR: {r['error'][:60]} | | | | | |")
+            continue
+        a = analyze(r)
+        rows.append(
+            f"| {a['arch']} | {a['shape']} | {a['mesh']} "
+            f"| {a['compute_s']:.3e} | {a['memory_s']:.3e} "
+            f"| {a['collective_s']:.3e} | {a['bottleneck']} "
+            f"| {a['roofline_fraction']:.2f} | {a['useful_ratio']:.2f} |")
+    return "\n".join(rows)
+
+
+def load_jsonl(path: str) -> list[dict]:
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(json.loads(line))
+    return out
+
+
+def main(argv=None):
+    argv = argv if argv is not None else sys.argv[1:]
+    records = []
+    for p in argv:
+        records.extend(load_jsonl(p))
+    print(render_markdown(records))
+    # bottleneck advice summary
+    seen = {}
+    for r in records:
+        if "error" not in r:
+            seen.setdefault(analyze(r)["bottleneck"], 0)
+            seen[analyze(r)["bottleneck"]] += 1
+    print()
+    for k, n in sorted(seen.items(), key=lambda kv: -kv[1]):
+        print(f"* {n} cells {k}-bound -- {_ADVICE[k]}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,151 @@
+"""Distributed SpGEMM/SpMM over a device mesh (beyond-paper scale-out).
+
+The paper is single-node; these routines lift its row-wise formulation onto a
+TPU mesh.  The load-balance contribution (C1) is reused at mesh scale: rows
+are assigned to chips by the same equal-flop prefix-sum partition, except the
+partition must be computed *host-side* (mesh layout is static), so we balance
+on nnz(A) rows as the flop proxy and let the per-chip Pallas grid rebalance
+exactly (two-level balancing, mirroring the paper's thread/core split).
+
+Algorithms:
+  * ``spgemm_1d``: A row-partitioned over the flattened mesh axis, B
+    replicated/all-gathered in K panels -> C row-partitioned.  This is the
+    communication pattern of distributed Gustavson (A stays put, B streams).
+  * ``spmm_1d``: CSR x dense tall-skinny (BFS/betweenness use case) -- B is
+    all-gathered once (it is skinny: k << n).
+  * ``spgemm_summa``: 2D SUMMA-style over ("data", "model"): A block-rows x
+    B block-cols, with B panels broadcast along "data" and partial C
+    reduced along "model".  Used by the dry-run to prove the collective
+    schedule at 256/512 chips.
+
+Local per-shard products use the ESC engine (static caps per shard); on real
+TPUs the Pallas BCSR kernel slots in via the same local_spgemm hook.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from .formats import CSR
+from .spgemm import spgemm_esc, spmm
+
+
+def shard_csr_rows(a: CSR, n_shards: int) -> CSR:
+    """Re-lay a CSR as n_shards equal-row local CSRs, stacked on axis 0.
+
+    Returns a CSR whose arrays have a leading shard dim:
+      indptr (S, m/S + 1), indices (S, cap/S), data (S, cap/S), nnz (S,)
+    Capacity is distributed evenly; rows are contiguous blocks (static
+    partition -- the dynamic equal-flop split happens *inside* each shard's
+    local schedule, see module docstring).
+    """
+    m = a.n_rows
+    assert m % n_shards == 0, (m, n_shards)
+    rows_per = m // n_shards
+    dense = a.to_dense()             # host/test-scale path
+    # Static per-shard capacity must cover the *max* shard (skewed inputs
+    # like G500 concentrate nnz in few rows -- the very imbalance C1 exists
+    # for); pad to a lane multiple.
+    import numpy as _np
+    counts = [int((_np.asarray(dense[i * rows_per:(i + 1) * rows_per]) != 0)
+                  .sum()) for i in range(n_shards)]
+    cap_per = -(-max(max(counts), 1) // 8) * 8
+    parts = [CSR.from_dense(dense[i * rows_per:(i + 1) * rows_per, :], cap_per)
+             for i in range(n_shards)]
+    stack = lambda *xs: jnp.stack(xs)
+    return jax.tree.map(stack, *parts)
+
+
+@partial(jax.jit, static_argnames=("mesh", "axis", "cap_c", "flop_cap"))
+def spgemm_1d(mesh: Mesh, a_sharded: CSR, b: CSR, cap_c: int,
+              flop_cap: int, axis: str = "data") -> CSR:
+    """Row-partitioned SpGEMM: local rows of A x replicated B.
+
+    ``a_sharded`` comes from :func:`shard_csr_rows` (leading shard dim
+    sharded over ``axis``); B is replicated (or broadcast by GSPMD).  Output
+    is a stacked CSR, row-partitioned the same way.
+    """
+    def local(a_loc: CSR, b_rep: CSR) -> CSR:
+        a_loc = jax.tree.map(lambda x: x[0], a_loc)   # drop unit shard dim
+        c = spgemm_esc(a_loc, b_rep, cap_c=cap_c, flop_cap=flop_cap)
+        return jax.tree.map(lambda x: x[None], c)
+
+    spec_a = jax.tree.map(lambda _: P(axis), a_sharded,
+                          is_leaf=lambda x: isinstance(x, jax.Array))
+    spec_b = jax.tree.map(lambda _: P(), b,
+                          is_leaf=lambda x: isinstance(x, jax.Array))
+    fn = shard_map(local, mesh=mesh, in_specs=(spec_a, spec_b),
+                   out_specs=spec_a, check_rep=False)
+    return fn(a_sharded, b)
+
+
+@partial(jax.jit, static_argnames=("mesh", "axis"))
+def spmm_1d(mesh: Mesh, a_sharded: CSR, x: jax.Array,
+            axis: str = "data") -> jax.Array:
+    """Row-partitioned SpMM (square x tall-skinny): y = A @ X.
+
+    X (n, k) is replicated (skinny); output (m, k) row-partitioned.
+    """
+    def local(a_loc: CSR, x_rep: jax.Array) -> jax.Array:
+        a_loc = jax.tree.map(lambda v: v[0], a_loc)
+        return spmm(a_loc, x_rep)[None]
+
+    spec_a = jax.tree.map(lambda _: P(axis), a_sharded,
+                          is_leaf=lambda v: isinstance(v, jax.Array))
+    fn = shard_map(local, mesh=mesh, in_specs=(spec_a, P()),
+                   out_specs=P(axis), check_rep=False)
+    return fn(a_sharded, x)
+
+
+def spgemm_summa(mesh: Mesh, a_dense: jax.Array, b_dense: jax.Array,
+                 row_axis: str = "data", col_axis: str = "model",
+                 k_panels: int | None = None) -> jax.Array:
+    """2D SUMMA product with sparse-aware panels, dense I/O (dry-run proof).
+
+    A is (m, n) sharded (row_axis, col_axis); B is (n, k) sharded
+    (row_axis=cols of A!, col_axis); C is (m, k) sharded (row_axis,
+    col_axis).  Every step broadcasts one K-panel of A along col_axis and
+    one of B along row_axis, accumulating local partial products -- the
+    classic SUMMA schedule the roofline's collective term measures.
+
+    GSPMD formulation: we express the product as a sharded einsum with
+    explicit sharding constraints; XLA emits the all-gather/reduce-scatter
+    schedule which `analysis.hlo_collectives` then audits.
+    """
+    del k_panels
+    a_dense = jax.lax.with_sharding_constraint(
+        a_dense, jax.sharding.NamedSharding(mesh, P(row_axis, col_axis)))
+    b_dense = jax.lax.with_sharding_constraint(
+        b_dense, jax.sharding.NamedSharding(mesh, P(col_axis, None)))
+    c = a_dense @ b_dense
+    return jax.lax.with_sharding_constraint(
+        c, jax.sharding.NamedSharding(mesh, P(row_axis, col_axis)))
+
+
+def multi_source_bfs(mesh: Mesh, a_sharded: CSR, sources: jax.Array,
+                     n: int, n_iters: int, axis: str = "data") -> jax.Array:
+    """Multi-source BFS via repeated SpMM (paper section 5.5 use case).
+
+    ``sources`` (k,) vertex ids; returns (n, k) hop-distance matrix (-1 =
+    unreached).  Frontier is the dense tall-skinny matrix; one SpMM per hop.
+    """
+    k = sources.shape[0]
+    frontier = jnp.zeros((n, k), jnp.float32).at[sources,
+                                                 jnp.arange(k)].set(1.0)
+    dist = jnp.where(frontier > 0, 0, -1).astype(jnp.int32)
+
+    def body(i, state):
+        frontier, dist = state
+        nxt = spmm_1d(mesh, a_sharded, frontier, axis=axis)
+        nxt = jnp.reshape(nxt, (n, k))
+        new = (nxt > 0) & (dist < 0)
+        dist = jnp.where(new, i + 1, dist)
+        return new.astype(jnp.float32), dist
+
+    _, dist = jax.lax.fori_loop(0, n_iters, body, (frontier, dist))
+    return dist

@@ -1,0 +1,281 @@
+"""Static-capacity sparse formats for XLA/TPU.
+
+The paper (Nagasaka et al. 2018) stores matrices in CSR with exact-size
+allocations obtained from a *symbolic* phase.  Under XLA every shape must be
+static, so the symbolic phase here produces a static **capacity** (``cap``)
+and the dynamic ``nnz`` is carried as a traced scalar.  All padded tail slots
+hold ``indices == 0`` / ``data == 0`` and every consumer masks on
+``arange(cap) < nnz``.
+
+Formats:
+  * :class:`CSR`  -- scalar compressed sparse rows (paper's native format).
+  * :class:`BCSR` -- block compressed sparse rows; the TPU-native currency
+    (dense ``(bm, bn)`` tiles feed the MXU).  Scalar CSR rows cannot feed a
+    128x128 systolic array; see DESIGN.md section 2.
+
+Both are registered pytrees so they flow through ``jit``/``grad``/``vmap``
+and can be sharded with ``NamedSharding`` like any other array bundle.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _register(cls, data_fields, meta_fields):
+    jax.tree_util.register_dataclass(cls, data_fields=list(data_fields),
+                                     meta_fields=list(meta_fields))
+    return cls
+
+
+@dataclass(frozen=True)
+class CSR:
+    """Compressed sparse rows with static capacity.
+
+    Attributes:
+      indptr:  ``(n_rows + 1,) int32`` row pointer array.
+      indices: ``(cap,) int32`` column ids, row-major; padded with 0.
+      data:    ``(cap,) dtype`` values; padded with 0.
+      nnz:     scalar int32, the live prefix length of indices/data.
+      shape:   static ``(n_rows, n_cols)``.
+      sorted_cols: static bool -- are column ids sorted within each row?
+        The paper's headline C8 finding (unsorted is 1.6x faster) makes this
+        flag part of the type, exactly like Table 1's "Sortedness" column.
+    """
+    indptr: jax.Array
+    indices: jax.Array
+    data: jax.Array
+    nnz: jax.Array
+    shape: Tuple[int, int] = dataclasses.field(metadata=dict(static=True))
+    sorted_cols: bool = dataclasses.field(default=True, metadata=dict(static=True))
+
+    # ---- static helpers -------------------------------------------------
+    @property
+    def cap(self) -> int:
+        return self.indices.shape[0]
+
+    @property
+    def n_rows(self) -> int:
+        return self.shape[0]
+
+    @property
+    def n_cols(self) -> int:
+        return self.shape[1]
+
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+    # ---- construction ----------------------------------------------------
+    @staticmethod
+    def from_dense(x: jax.Array, cap: int | None = None) -> "CSR":
+        """Build CSR from a dense matrix (jit-compatible given static cap)."""
+        m, n = x.shape
+        if cap is None:
+            cap = m * n
+        mask = (x != 0).ravel()
+        nnz = mask.sum().astype(jnp.int32)
+        # Stable argsort of ~mask puts nonzero slots first, preserving
+        # row-major order -> rows ascending, cols ascending within row.
+        order = jnp.argsort(~mask, stable=True)[:cap]
+        valid = jnp.arange(cap, dtype=jnp.int32) < nnz
+        cols = jnp.where(valid, (order % n).astype(jnp.int32), 0)
+        vals = jnp.where(valid, x.ravel()[order], 0).astype(x.dtype)
+        counts = jnp.sum((x != 0), axis=1, dtype=jnp.int32)
+        indptr = jnp.concatenate(
+            [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts, dtype=jnp.int32)])
+        return CSR(indptr, cols, vals, nnz, (m, n), sorted_cols=True)
+
+    @staticmethod
+    def from_numpy_coo(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
+                       shape: Tuple[int, int], cap: int | None = None,
+                       sum_duplicates: bool = True) -> "CSR":
+        """Host-side builder (numpy; not jittable). Sorts row-major."""
+        m, n = shape
+        rows = np.asarray(rows, np.int64)
+        cols = np.asarray(cols, np.int64)
+        vals = np.asarray(vals)
+        if sum_duplicates and rows.size:
+            key = rows * n + cols
+            uniq, inv = np.unique(key, return_inverse=True)
+            acc = np.zeros(uniq.shape[0], dtype=np.float64)
+            np.add.at(acc, inv, vals.astype(np.float64))
+            rows, cols = uniq // n, uniq % n
+            vals = acc.astype(vals.dtype)
+        else:
+            order = np.lexsort((cols, rows))
+            rows, cols, vals = rows[order], cols[order], vals[order]
+        nnz = int(rows.size)
+        if cap is None:
+            cap = max(nnz, 1)
+        assert nnz <= cap, f"nnz {nnz} exceeds capacity {cap}"
+        indices = np.zeros(cap, np.int32)
+        data = np.zeros(cap, vals.dtype if vals.size else np.float32)
+        indices[:nnz] = cols
+        data[:nnz] = vals
+        counts = np.bincount(rows, minlength=m)
+        indptr = np.zeros(m + 1, np.int32)
+        np.cumsum(counts, out=indptr[1:])
+        return CSR(jnp.asarray(indptr), jnp.asarray(indices), jnp.asarray(data),
+                   jnp.asarray(nnz, jnp.int32), (m, n), sorted_cols=True)
+
+    # ---- views ------------------------------------------------------------
+    def valid_mask(self) -> jax.Array:
+        return jnp.arange(self.cap, dtype=jnp.int32) < self.nnz
+
+    def row_ids(self) -> jax.Array:
+        """Row id of every slot (cap,), padded slots get n_rows - 1 clamped."""
+        e = jnp.arange(self.cap, dtype=jnp.int32)
+        r = jnp.searchsorted(self.indptr, e, side="right") - 1
+        return jnp.clip(r, 0, self.n_rows - 1).astype(jnp.int32)
+
+    def row_nnz(self) -> jax.Array:
+        return self.indptr[1:] - self.indptr[:-1]
+
+    def to_dense(self) -> jax.Array:
+        out = jnp.zeros(self.shape, self.data.dtype)
+        v = jnp.where(self.valid_mask(), self.data, 0)
+        return out.at[self.row_ids(), self.indices].add(v)
+
+    def sort_rows(self) -> "CSR":
+        """Sort column ids within each row (the paper's optional epilogue).
+
+        Cost model: this is exactly the ``sum nnz(c_i*) log nnz(c_i*)`` term
+        of Eq. (2); `bench_compression.py` measures what skipping it saves.
+        """
+        # lexicographic (row, col) sort of the live prefix; padded slots sort
+        # to the end via a sentinel row id.
+        rows = jnp.where(self.valid_mask(), self.row_ids(),
+                         jnp.int32(self.n_rows))
+        order = jnp.lexsort((self.indices, rows))
+        return CSR(self.indptr, self.indices[order], self.data[order],
+                   self.nnz, self.shape, sorted_cols=True)
+
+    def with_unsorted_flag(self) -> "CSR":
+        return dataclasses.replace(self, sorted_cols=False)
+
+
+_register(CSR, ("indptr", "indices", "data", "nnz"), ("shape", "sorted_cols"))
+
+
+@dataclass(frozen=True)
+class BCSR:
+    """Block CSR: dense (bm, bn) tiles in a CSR layout over the block grid.
+
+    This is the TPU adaptation of the paper's CSR: the unit of sparsity is a
+    hardware tile, so a "row" of Gustavson's algorithm becomes a *block row*
+    and the accumulator hashes block-column ids while the MXU does the
+    (bm x bk) @ (bk x bn) tile product.
+    """
+    indptr: jax.Array          # (n_brows + 1,) int32
+    indices: jax.Array         # (bcap,) int32 block-column ids
+    blocks: jax.Array          # (bcap, bm, bn)
+    nnzb: jax.Array            # scalar int32
+    shape: Tuple[int, int] = dataclasses.field(metadata=dict(static=True))
+    block: Tuple[int, int] = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def bcap(self) -> int:
+        return self.indices.shape[0]
+
+    @property
+    def grid(self) -> Tuple[int, int]:
+        return (self.shape[0] // self.block[0], self.shape[1] // self.block[1])
+
+    @property
+    def dtype(self):
+        return self.blocks.dtype
+
+    @staticmethod
+    def from_dense(x: jax.Array, block: Tuple[int, int],
+                   bcap: int | None = None) -> "BCSR":
+        m, n = x.shape
+        bm, bn = block
+        assert m % bm == 0 and n % bn == 0, (x.shape, block)
+        gm, gn = m // bm, n // bn
+        tiles = x.reshape(gm, bm, gn, bn).transpose(0, 2, 1, 3)   # (gm, gn, bm, bn)
+        occ = jnp.any(tiles != 0, axis=(2, 3)).ravel()            # (gm*gn,)
+        nnzb = occ.sum().astype(jnp.int32)
+        if bcap is None:
+            bcap = gm * gn
+        order = jnp.argsort(~occ, stable=True)[:bcap]
+        valid = jnp.arange(bcap, dtype=jnp.int32) < nnzb
+        bcols = jnp.where(valid, (order % gn).astype(jnp.int32), 0)
+        blocks = tiles.reshape(gm * gn, bm, bn)[order]
+        blocks = jnp.where(valid[:, None, None], blocks, 0)
+        counts = jnp.sum(occ.reshape(gm, gn), axis=1, dtype=jnp.int32)
+        indptr = jnp.concatenate(
+            [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts, dtype=jnp.int32)])
+        return BCSR(indptr, bcols, blocks, nnzb, (m, n), block)
+
+    def valid_mask(self) -> jax.Array:
+        return jnp.arange(self.bcap, dtype=jnp.int32) < self.nnzb
+
+    def brow_ids(self) -> jax.Array:
+        e = jnp.arange(self.bcap, dtype=jnp.int32)
+        r = jnp.searchsorted(self.indptr, e, side="right") - 1
+        return jnp.clip(r, 0, self.grid[0] - 1).astype(jnp.int32)
+
+    def to_dense(self) -> jax.Array:
+        gm, gn = self.grid
+        bm, bn = self.block
+        dense = jnp.zeros((gm, gn, bm, bn), self.blocks.dtype)
+        v = jnp.where(self.valid_mask()[:, None, None], self.blocks, 0)
+        dense = dense.at[self.brow_ids(), self.indices].add(v)
+        return dense.transpose(0, 2, 1, 3).reshape(self.shape)
+
+
+_register(BCSR, ("indptr", "indices", "blocks", "nnzb"), ("shape", "block"))
+
+
+@dataclass(frozen=True)
+class ELL:
+    """ELLPACK: fixed nonzeros-per-row padding. Used for regular rows
+    (e.g. the tall-skinny BFS frontier stacks) where Gustavson degenerates
+    to a uniform gather -- the paper's "uniform" regime."""
+    indices: jax.Array   # (n_rows, width) int32, padded with 0
+    data: jax.Array      # (n_rows, width)
+    row_nnz: jax.Array   # (n_rows,) int32
+    shape: Tuple[int, int] = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def width(self) -> int:
+        return self.indices.shape[1]
+
+    @staticmethod
+    def from_csr(a: CSR, width: int) -> "ELL":
+        m, n = a.shape
+        r = jnp.arange(m, dtype=jnp.int32)[:, None]
+        k = jnp.arange(width, dtype=jnp.int32)[None, :]
+        src = a.indptr[:-1][:, None] + k
+        ok = k < (a.indptr[1:] - a.indptr[:-1])[:, None]
+        src = jnp.clip(src, 0, a.cap - 1)
+        idx = jnp.where(ok, a.indices[src], 0)
+        dat = jnp.where(ok, a.data[src], 0)
+        del r
+        return ELL(idx, dat, (a.indptr[1:] - a.indptr[:-1]).astype(jnp.int32),
+                   (m, n))
+
+    def to_dense(self) -> jax.Array:
+        m, n = self.shape
+        out = jnp.zeros((m, n), self.data.dtype)
+        rows = jnp.broadcast_to(jnp.arange(m, dtype=jnp.int32)[:, None],
+                                self.indices.shape)
+        return out.at[rows, self.indices].add(self.data)
+
+
+_register(ELL, ("indices", "data", "row_nnz"), ("shape",))
+
+
+def csr_to_bcsr(a: CSR, block: Tuple[int, int], bcap: int | None = None) -> BCSR:
+    return BCSR.from_dense(a.to_dense(), block, bcap)
+
+
+def bcsr_to_csr(a: BCSR, cap: int | None = None) -> CSR:
+    return CSR.from_dense(a.to_dense(), cap)

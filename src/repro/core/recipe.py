@@ -1,0 +1,168 @@
+"""The paper's recipe (sections 4.2.4 + 5.7, Table 4): pick the best SpGEMM
+algorithm from matrix statistics + sortedness requirement.
+
+Cost models (paper Eq. 1 / Eq. 2), extended with a block-density term for the
+TPU BCSR path (DESIGN.md section 2: a tile product only pays off when blocks
+are dense enough to feed the MXU):
+
+  T_heap = sum_i flop(c_i*) * log2 nnz(a_i*)
+  T_hash = flop * c + [sorted] sum_i nnz(c_i*) * log2 nnz(c_i*)
+  T_esc  = flop * log2(flop)                      (sort-based, always sorted)
+  T_bcsr = flop_tile / (tile_density * mxu_eff)   (block path; wins when the
+                                                   nonzeros cluster in tiles)
+
+The empirical decision table (Table 4) is reproduced in
+:func:`choose_algorithm_from_stats` and validated against measured rankings
+in ``benchmarks/bench_recipe.py``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .formats import CSR
+from . import schedule as sched
+
+#: Average probe count under linear probing at the paper's <=50% load factor
+#: (table is the lowest 2^n >= flop(row)); c in Eq. 2.
+HASH_COLLISION_FACTOR = 1.5
+
+
+@dataclass(frozen=True)
+class SpGEMMStats:
+    """Inputs to the recipe -- everything Table 4 keys on."""
+    n_rows: int
+    n_cols: int
+    nnz_a: float
+    flop: float                # 2*flop in FLOPs terms; 'flop' as in the paper
+    nnz_c_est: float           # exact from symbolic, or estimate
+    max_row_flop: float
+    mean_row_nnz_a: float
+    row_skew: float            # max_row_flop / mean_row_flop (G500 vs ER)
+    compression_ratio: float   # flop / nnz(C)  (paper section 5.4.4)
+    density_ef: float          # nnz_a / n_rows == edge factor
+    #: TPU extension (DESIGN.md section 2): mean occupancy of occupied
+    #: (bm, bn) tiles.  Dense tiles amortize the MXU's 128x128 systolic
+    #: pass; >~ MXU_MIN_TILE_DENSITY makes the BCSR kernel the right tool.
+    block_density: float = 0.0
+
+
+#: minimum mean tile occupancy for the MXU block path to beat scalar hash
+MXU_MIN_TILE_DENSITY = 0.25
+_PROBE_TILE = (8, 8)
+
+
+def block_density_of(a: CSR, tile=_PROBE_TILE) -> float:
+    """Mean occupancy of occupied tiles (structure probe, host-side)."""
+    import numpy as np
+    m, n = a.shape
+    bm, bn = tile
+    if m % bm or n % bn:
+        return 0.0
+    dense = np.asarray(a.to_dense()) != 0
+    tiles = dense.reshape(m // bm, bm, n // bn, bn).transpose(0, 2, 1, 3)
+    occ = tiles.any(axis=(2, 3))
+    n_occ = int(occ.sum())
+    if not n_occ:
+        return 0.0
+    return float(tiles.sum()) / (n_occ * bm * bn)
+
+
+def measure_stats(a: CSR, b: CSR, row_nnz_c=None,
+                  probe_blocks: bool = False) -> SpGEMMStats:
+    """Host-side stat collection (concrete values; jittable pieces inside)."""
+    flop = sched.flops_per_row(a, b)
+    total_flop = float(flop.sum())
+    nnz_a = float(a.nnz)
+    if row_nnz_c is None:
+        # cheap upper-bound estimate; exact comes from core.spgemm.symbolic
+        nnz_c = float(jnp.minimum(flop, b.n_cols).sum())
+    else:
+        nnz_c = float(jnp.asarray(row_nnz_c).sum())
+    mean_flop = total_flop / max(a.n_rows, 1)
+    return SpGEMMStats(
+        n_rows=a.n_rows, n_cols=b.n_cols, nnz_a=nnz_a, flop=total_flop,
+        nnz_c_est=max(nnz_c, 1.0),
+        max_row_flop=float(flop.max()),
+        mean_row_nnz_a=nnz_a / max(a.n_rows, 1),
+        row_skew=float(flop.max()) / max(mean_flop, 1e-9),
+        compression_ratio=total_flop / max(nnz_c, 1.0),
+        density_ef=nnz_a / max(a.n_rows, 1),
+        block_density=(block_density_of(a) if probe_blocks else 0.0))
+
+
+# ---------------------------------------------------------------------------
+# Theoretical cost model (Eq. 1 / Eq. 2)
+# ---------------------------------------------------------------------------
+
+def cost_heap(stats: SpGEMMStats) -> float:
+    log_k = max(1.0, float(jnp.log2(jnp.maximum(stats.mean_row_nnz_a, 2.0))))
+    return stats.flop * log_k
+
+
+def cost_hash(stats: SpGEMMStats, sorted_output: bool) -> float:
+    t = stats.flop * HASH_COLLISION_FACTOR
+    if sorted_output:
+        mean_row_c = stats.nnz_c_est / max(stats.n_rows, 1)
+        t += stats.nnz_c_est * max(1.0, float(jnp.log2(jnp.maximum(mean_row_c, 2.0))))
+    return t
+
+
+def cost_esc(stats: SpGEMMStats) -> float:
+    return stats.flop * max(1.0, float(jnp.log2(jnp.maximum(stats.flop, 2.0))))
+
+
+def model_costs(stats: SpGEMMStats, sorted_output: bool) -> dict:
+    return {"heap": cost_heap(stats),
+            "hash": cost_hash(stats, sorted_output),
+            "esc": cost_esc(stats)}
+
+
+# ---------------------------------------------------------------------------
+# Empirical decision table (Table 4), with the Eq.1/Eq.2 crossovers behind it
+# ---------------------------------------------------------------------------
+
+def choose_algorithm_from_stats(stats: SpGEMMStats, sorted_output: bool,
+                                use_case: str = "AxA") -> str:
+    """Reproduction of Table 4 (+ section 4.2.4 reasoning).
+
+    use_case: "AxA" | "LxU" | "tall_skinny".
+    """
+    high_cr = stats.compression_ratio > 2.0
+    dense_ef = stats.density_ef > 8.0
+    skewed = stats.row_skew > 8.0
+
+    # TPU extension: clustered nonzeros -> MXU block kernel regardless of
+    # the scalar-regime columns (the tile product amortizes everything).
+    if stats.block_density >= MXU_MIN_TILE_DENSITY:
+        return "bcsr"
+
+    if use_case == "LxU":
+        # Fig 17: Heap best at low CR (sparser outputs), Hash otherwise.
+        return "hash" if high_cr else "heap"
+    if use_case == "tall_skinny":
+        # Fig 16 / Table 4b: hash family dominates; vectorized probing pays
+        # off only in the dense regime where collisions are common.
+        return "hash_vector" if (dense_ef and sorted_output) else "hash"
+    # AxA, Table 4a/4b.
+    if not dense_ef and not skewed:
+        # sparse uniform: flop(c_i*) is small -> Eq.1's log factor is tiny
+        # and heap's O(nnz(a_i*)) memory wins (latency-bound regime).
+        return "heap" if sorted_output else "hash_vector"
+    if dense_ef and skewed:
+        return "hash"
+    if high_cr and not sorted_output:
+        # Table 4a unsorted/high-CR row is MKL-inspector; our equivalent
+        # single-phase dense-regime code path is the vectorized hash.
+        return "hash_vector"
+    return "hash"
+
+
+def choose_algorithm(a: CSR, b: CSR, sorted_output: bool = False,
+                     use_case: str = "AxA",
+                     probe_blocks: bool = False) -> str:
+    return choose_algorithm_from_stats(
+        measure_stats(a, b, probe_blocks=probe_blocks), sorted_output,
+        use_case)

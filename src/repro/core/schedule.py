@@ -1,0 +1,112 @@
+"""Light-weight load-balanced scheduling (paper section 4.1, Fig. 6).
+
+``RowsToThreads``: count flop per output row, prefix-sum, then find each
+worker's start row with a binary search (``LOWBND``).  On KNL the workers
+were OpenMP threads under *static* scheduling; here the same partition is
+used three ways:
+
+  1. Pallas grid programs: bin b processes rows ``offset[b]:offset[b+1]``
+     (fed through scalar prefetch);
+  2. mesh chips in distributed SpGEMM (equal-flop row partitions per chip);
+  3. the serving engine's batch scheduler (equal-token request bins).
+
+The paper's argument -- static scheduling is cheap but needs up-front
+balancing -- is *structural* on TPU: a Pallas grid is static by construction,
+so this module is what makes static assignment viable, exactly as on KNL.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .formats import CSR
+
+
+def flops_per_row(a: CSR, b: CSR) -> jax.Array:
+    """flop[i] = sum_{k in a_i*} nnz(b_k*)  -- Fig. 6 step 1.
+
+    This is both the load-balance weight and the hash-table sizing bound
+    (Fig. 7 lines 5-12): row i of C touches at most flop[i] distinct columns.
+    """
+    rnz = (b.indptr[a.indices + 1] - b.indptr[a.indices]).astype(jnp.int32)
+    rnz = jnp.where(a.valid_mask(), rnz, 0)
+    return jax.ops.segment_sum(rnz, a.row_ids(), num_segments=a.n_rows)
+
+
+def prefix_sum(x: jax.Array) -> jax.Array:
+    """Exclusive-then-inclusive prefix sum, (n+1,): ps[0]=0, ps[-1]=total."""
+    return jnp.concatenate([jnp.zeros((1,), x.dtype),
+                            jnp.cumsum(x, dtype=x.dtype)])
+
+
+def lowbnd(vec: jax.Array, value: jax.Array) -> jax.Array:
+    """Minimum id such that vec[id] >= value (Fig. 6 line 14)."""
+    return jnp.searchsorted(vec, value, side="left").astype(jnp.int32)
+
+
+def rows_to_bins(flop: jax.Array, n_bins: int) -> jax.Array:
+    """Fig. 6 steps 2: equal-flop partition; returns offsets (n_bins+1,).
+
+    Invariants (property-tested):
+      * offsets[0] == 0, offsets[-1] == n_rows, monotone non-decreasing;
+      * every bin's flop <= ceil(total/n_bins) + max_row_flop.
+    """
+    m = flop.shape[0]
+    # float64-free exact arithmetic: totals stay < 2^31 for the workloads
+    # here (the proxy suite is downscaled); see DESIGN.md section 9.
+    ps = prefix_sum(flop.astype(jnp.int32))
+    total = ps[-1]
+    targets = (total * jnp.arange(1, n_bins, dtype=jnp.int32)) // n_bins
+    # ps is over row *boundaries*; bin b starts at the first row whose
+    # cumulative flop reaches target b.
+    cuts = lowbnd(ps[1:], targets + 1)
+    offsets = jnp.concatenate([
+        jnp.zeros((1,), jnp.int32), cuts.astype(jnp.int32),
+        jnp.full((1,), m, jnp.int32)])
+    return jnp.minimum(offsets, m)
+
+
+def bin_row_assignment(offsets: jax.Array, n_rows: int) -> jax.Array:
+    """Inverse view: bin id of every row, (n_rows,)."""
+    r = jnp.arange(n_rows, dtype=jnp.int32)
+    return (jnp.searchsorted(offsets, r, side="right") - 1).astype(jnp.int32)
+
+
+def bin_flop(flop: jax.Array, offsets: jax.Array) -> jax.Array:
+    """Total flop per bin (n_bins,) -- the balance metric."""
+    ps = prefix_sum(flop.astype(jnp.int32))
+    return ps[offsets[1:]] - ps[offsets[:-1]]
+
+
+def max_flop_per_bin_row(flop: jax.Array, offsets: jax.Array) -> jax.Array:
+    """Per-bin max row flop (n_bins,) -- Fig. 7 lines 5-12: each worker sizes
+    its private hash table once, to the max flop of any row in its bin, and
+    reuses it for every row (the paper's thread-private allocation, C5)."""
+    n_bins = offsets.shape[0] - 1
+    bins = bin_row_assignment(offsets, flop.shape[0])
+    return jax.ops.segment_max(flop, bins, num_segments=n_bins)
+
+
+@partial(jax.jit, static_argnames=("n_bins",))
+def make_schedule(a: CSR, b: CSR, n_bins: int):
+    """Full Fig. 6 pipeline. Returns (flop, offsets, bin_table_size).
+
+    ``bin_table_size`` is the per-bin hash-table bound of Fig. 7 line 10:
+    ``min(N_col, max-row-flop-in-bin)`` (power-of-two rounding happens at
+    kernel instantiation where the static size is needed).
+    """
+    flop = flops_per_row(a, b)
+    offsets = rows_to_bins(flop, n_bins)
+    tsize = jnp.minimum(max_flop_per_bin_row(flop, offsets),
+                        jnp.int32(b.n_cols))
+    return flop, offsets, tsize
+
+
+def lowest_p2(x: int) -> int:
+    """Static helper: minimum 2^n >= x (Fig. 7 line 12)."""
+    p = 1
+    while p < x:
+        p *= 2
+    return p

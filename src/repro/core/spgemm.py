@@ -1,0 +1,272 @@
+"""SpGEMM: C = A @ B on sparse A, B (paper sections 2 & 4).
+
+Four executable algorithms, mirroring Table 1 of the paper:
+
+  algorithm      phases  accumulator                 sortedness (in/out)
+  -----------    ------  --------------------------  -------------------
+  ``dense``      1       dense (oracle only)         any / sorted
+  ``esc``        2       sort + segmented reduce     any / sorted
+  ``heap``       1       k-way tournament merge      sorted / sorted
+  ``hash``       2       VMEM hash table (Pallas)    any / select
+  ``hash_vector``2       VMEM vectorized probing     any / select
+
+``dense`` is the test oracle.  ``esc`` (expand-sort-compress) is the
+XLA-native baseline -- it is the sort-based family the paper cites from the
+GPU literature [18, 21] and doubles as the TPU-idiomatic "sorted merge"
+equivalent of the heap path.  ``heap`` is the faithful one-phase merge of
+section 4.2.3 (an argmin tournament replaces the pointer heap: on a VPU the
+k-wide argmin is one vector op, while a binary heap is a latency-bound
+pointer chase -- see DESIGN.md section 2).  ``hash``/``hash_vector`` live in
+``repro.kernels.spgemm_hash`` (Pallas) with a jnp fallback here.
+
+Shapes are static everywhere: capacities come from the symbolic phase
+(:func:`symbolic`), the dynamic ``nnz`` rides along as a scalar -- the
+paper's two-phase method is load-bearing under XLA.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from .formats import CSR
+from . import schedule as sched
+
+Algorithm = Literal["auto", "dense", "esc", "heap", "hash", "hash_vector"]
+
+
+# ----------------------------------------------------------------------------
+# Symbolic phase (paper Fig. 7 "Symbolic"): flop bound + exact nnz(C).
+# ----------------------------------------------------------------------------
+
+def symbolic_flops(a: CSR, b: CSR) -> jax.Array:
+    """Upper bound per-row nnz(C) = flop per row. O(nnz(A)) like the paper."""
+    return sched.flops_per_row(a, b)
+
+
+@jax.jit
+def symbolic(a: CSR, b: CSR):
+    """Exact per-row nnz(C) and total flop.
+
+    Returns (row_nnz_c, indptr_c, flop_per_row, total_flop).  Uses the
+    dense-free ESC expansion with a *count-distinct* reduction; this is the
+    two-phase method's phase one, giving the numeric phase its exact static
+    capacity requirement (the "select cap" the launcher uses).
+    """
+    flop = symbolic_flops(a, b)
+    rows, cols, _, valid = _expand(a, b, flop_cap=_default_flop_cap(a, b))
+    order = jnp.lexsort((cols, jnp.where(valid, rows, a.n_rows)))
+    rows_s, cols_s, valid_s = rows[order], cols[order], valid[order]
+    newseg = _boundary_flags(rows_s, cols_s, valid_s)
+    row_nnz = jax.ops.segment_sum(newseg.astype(jnp.int32),
+                                  jnp.where(valid_s, rows_s, a.n_rows),
+                                  num_segments=a.n_rows + 1)[:-1]
+    indptr_c = sched.prefix_sum(row_nnz).astype(jnp.int32)
+    return row_nnz, indptr_c, flop, flop.sum()
+
+
+# ----------------------------------------------------------------------------
+# Oracle
+# ----------------------------------------------------------------------------
+
+def spgemm_dense(a: CSR, b: CSR, cap_c: int) -> CSR:
+    """Reference oracle via dense product. O(m*n*k) -- tests only."""
+    c = a.to_dense() @ b.to_dense()
+    return CSR.from_dense(c, cap=cap_c)
+
+
+# ----------------------------------------------------------------------------
+# ESC: expand - sort - compress
+# ----------------------------------------------------------------------------
+
+def _default_flop_cap(a: CSR, b: CSR) -> int:
+    # static heuristic: every A slot cannot touch more than min(b.cap, n_cols)
+    # B entries; callers with tight bounds should pass flop_cap explicitly.
+    return a.cap * max(1, min(b.cap, b.n_cols))
+
+
+def _expand(a: CSR, b: CSR, flop_cap: int):
+    """Materialize all intermediate products (paper's `value` in Fig. 1).
+
+    Returns (rows, cols, vals, valid) each of shape (flop_cap,).
+    """
+    pnz = (b.indptr[a.indices + 1] - b.indptr[a.indices]).astype(jnp.int32)
+    pnz = jnp.where(a.valid_mask(), pnz, 0)
+    off = sched.prefix_sum(pnz)                      # (cap_a + 1,)
+    total = off[-1]
+    p = jnp.arange(flop_cap, dtype=jnp.int32)
+    j = jnp.clip(jnp.searchsorted(off, p, side="right") - 1, 0, a.cap - 1)
+    t = p - off[j]
+    b_slot = jnp.clip(b.indptr[a.indices[j]] + t, 0, b.cap - 1)
+    valid = p < total
+    rows = a.row_ids()[j]
+    cols = jnp.where(valid, b.indices[b_slot], 0)
+    vals = jnp.where(valid, a.data[j] * b.data[b_slot], 0)
+    return rows, cols, vals, valid
+
+
+def _boundary_flags(rows_s, cols_s, valid_s):
+    prev_r = jnp.concatenate([jnp.full((1,), -1, rows_s.dtype), rows_s[:-1]])
+    prev_c = jnp.concatenate([jnp.full((1,), -1, cols_s.dtype), cols_s[:-1]])
+    return valid_s & ((rows_s != prev_r) | (cols_s != prev_c))
+
+
+@partial(jax.jit, static_argnames=("cap_c", "flop_cap"))
+def spgemm_esc(a: CSR, b: CSR, cap_c: int, flop_cap: int | None = None) -> CSR:
+    """Expand-sort-compress SpGEMM. Output is sorted (it is a sort)."""
+    if flop_cap is None:
+        flop_cap = _default_flop_cap(a, b)
+    m, n = a.n_rows, b.n_cols
+    rows, cols, vals, valid = _expand(a, b, flop_cap)
+    sort_rows = jnp.where(valid, rows, m)  # invalid to the end
+    order = jnp.lexsort((cols, sort_rows))
+    rows_s, cols_s, vals_s, valid_s = (rows[order], cols[order], vals[order],
+                                       valid[order])
+    flags = _boundary_flags(rows_s, cols_s, valid_s)
+    uid = jnp.cumsum(flags.astype(jnp.int32)) - 1          # id of output slot
+    nnz_c = flags.sum().astype(jnp.int32)
+    seg = jnp.where(valid_s, jnp.minimum(uid, cap_c - 1), cap_c)
+    data_c = jax.ops.segment_sum(vals_s, seg, num_segments=cap_c + 1)[:cap_c]
+    put = jnp.where(flags & (uid < cap_c), uid, cap_c)
+    cols_c = jnp.zeros((cap_c,), jnp.int32).at[put].set(cols_s, mode="drop")
+    row_nnz = jax.ops.segment_sum(flags.astype(jnp.int32),
+                                  jnp.where(valid_s, rows_s, m),
+                                  num_segments=m + 1)[:-1]
+    indptr_c = sched.prefix_sum(row_nnz).astype(jnp.int32)
+    nnz_c = jnp.minimum(nnz_c, cap_c)
+    valid_c = jnp.arange(cap_c, dtype=jnp.int32) < nnz_c
+    data_c = jnp.where(valid_c, data_c, 0).astype(a.dtype)
+    return CSR(indptr_c, cols_c, data_c, nnz_c, (m, n), sorted_cols=True)
+
+
+# ----------------------------------------------------------------------------
+# Heap SpGEMM (paper section 4.2.3): one-phase k-way merge, sorted in/out.
+# ----------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("row_cap", "k_width"))
+def spgemm_heap(a: CSR, b: CSR, row_cap: int, k_width: int) -> CSR:
+    """Faithful one-phase merge accumulator.
+
+    Per output row i: ``nnz(a_i*)`` cursors walk the (sorted) rows of B; each
+    step extracts the minimum head column (argmin tournament == heap
+    extract-min), accumulates into the current output slot, and advances that
+    cursor -- exactly Fig. 1 with the section 4.2.3 accumulator.  Memory per
+    row is O(nnz(a_i*)) cursors + O(row_cap) output, matching the paper's
+    space argument.
+
+    Static bounds: ``k_width`` >= max nnz(a_i*); ``row_cap`` >= max nnz(c_i*).
+    Requires sorted inputs, emits sorted output (Table 1).
+    """
+    assert a.sorted_cols and b.sorted_cols, "heap path requires sorted inputs"
+    m, n = a.n_rows, b.n_cols
+    INF = jnp.int32(n + 1)
+
+    k = jnp.arange(k_width, dtype=jnp.int32)[None, :]
+    a_start = a.indptr[:-1][:, None] + k                      # (m, k_width)
+    a_live = k < (a.indptr[1:] - a.indptr[:-1])[:, None]
+    a_slot = jnp.clip(a_start, 0, a.cap - 1)
+    a_vals = jnp.where(a_live, a.data[a_slot], 0)             # (m, k_width)
+    b_row = jnp.where(a_live, a.indices[a_slot], 0)
+    cur = jnp.where(a_live, b.indptr[b_row], 0)               # cursor per lane
+    end = jnp.where(a_live, b.indptr[b_row + 1], 0)
+
+    def one_row(cur, end, avals):
+        out_cols = jnp.full((row_cap,), -1, jnp.int32)
+        out_vals = jnp.zeros((row_cap,), a.dtype)
+
+        def cond(state):
+            cur, _, _, _ = state
+            return jnp.any(cur < end)
+
+        def body(state):
+            cur, out_cols, out_vals, out_n = state
+            heads = jnp.where(cur < end, b.indices[jnp.clip(cur, 0, b.cap - 1)],
+                              INF)
+            j = jnp.argmin(heads)                              # extract-min
+            c = heads[j]
+            v = avals[j] * b.data[jnp.clip(cur[j], 0, b.cap - 1)]
+            prev = out_cols[jnp.maximum(out_n - 1, 0)]
+            same = (out_n > 0) & (prev == c)
+            slot = jnp.where(same, out_n - 1, jnp.minimum(out_n, row_cap - 1))
+            out_cols = out_cols.at[slot].set(c)
+            out_vals = out_vals.at[slot].set(
+                jnp.where(same, out_vals[slot] + v, v))
+            out_n = jnp.where(same, out_n, jnp.minimum(out_n + 1, row_cap))
+            cur = cur.at[j].add(1)
+            return cur, out_cols, out_vals, out_n
+
+        _, out_cols, out_vals, out_n = jax.lax.while_loop(
+            cond, body, (cur, out_cols, out_vals, jnp.int32(0)))
+        return out_cols, out_vals, out_n
+
+    out_cols, out_vals, out_n = jax.vmap(one_row)(cur, end, a_vals)  # (m, cap)
+    # compact (m, row_cap) panels into CSR
+    indptr_c = sched.prefix_sum(out_n).astype(jnp.int32)
+    nnz_c = indptr_c[-1]
+    cap_c = m * row_cap
+    lane = jnp.arange(row_cap, dtype=jnp.int32)[None, :]
+    live = lane < out_n[:, None]
+    dest = jnp.where(live, indptr_c[:-1][:, None] + lane, cap_c)
+    cols_c = jnp.zeros((cap_c,), jnp.int32).at[dest.ravel()].set(
+        jnp.maximum(out_cols, 0).ravel(), mode="drop")
+    data_c = jnp.zeros((cap_c,), a.dtype).at[dest.ravel()].set(
+        out_vals.ravel(), mode="drop")
+    return CSR(indptr_c, cols_c, data_c, nnz_c, (m, n), sorted_cols=True)
+
+
+# ----------------------------------------------------------------------------
+# SpMM: CSR x dense (square x tall-skinny use case, section 5.5)
+# ----------------------------------------------------------------------------
+
+@jax.jit
+def spmm(a: CSR, x: jax.Array) -> jax.Array:
+    """C = A @ X with dense X of shape (n, k). Gather + segment-sum."""
+    vals = jnp.where(a.valid_mask(), a.data, 0)
+    gathered = vals[:, None] * x[a.indices]          # (cap, k)
+    return jax.ops.segment_sum(gathered, a.row_ids(), num_segments=a.n_rows)
+
+
+# ----------------------------------------------------------------------------
+# Public dispatcher
+# ----------------------------------------------------------------------------
+
+def spgemm(a: CSR, b: CSR, cap_c: int, algorithm: Algorithm = "auto",
+           sorted_output: bool | None = None, **kw) -> CSR:
+    """Front door. ``auto`` consults the recipe (core.recipe)."""
+    if algorithm == "auto":
+        from .recipe import choose_algorithm
+        algorithm = choose_algorithm(a, b, sorted_output=bool(sorted_output))
+    if algorithm == "dense":
+        out = spgemm_dense(a, b, cap_c)
+    elif algorithm == "esc":
+        out = spgemm_esc(a, b, cap_c, **kw)
+    elif algorithm == "heap":
+        row_cap = kw.pop("row_cap", min(cap_c, b.n_cols))
+        k_width = kw.pop("k_width", a.cap)
+        out = spgemm_heap(a, b, row_cap=row_cap, k_width=k_width)
+    elif algorithm in ("hash", "hash_vector"):
+        from repro.kernels.spgemm_hash import ops as hash_ops
+        out = hash_ops.spgemm_hash(a, b, cap_c,
+                                   vector=(algorithm == "hash_vector"), **kw)
+    elif algorithm == "bcsr":
+        # TPU block path (DESIGN.md section 2): dense (bm, bn) tiles on the
+        # MXU with a block-column hash accumulator.  CSR in / CSR out.
+        from repro.core.formats import csr_to_bcsr, bcsr_to_csr
+        from repro.kernels.spgemm_bcsr import ops as bcsr_ops
+        block = kw.pop("block", (8, 8))
+        assert a.n_rows % block[0] == 0 and a.n_cols % block[1] == 0 and \
+            b.n_cols % block[1] == 0, \
+            f"bcsr path needs tile-aligned shapes, got {a.shape}x{b.shape}"
+        bcap_c = kw.pop("bcap_c",
+                        (a.n_rows // block[0]) * (b.n_cols // block[1]))
+        ab = csr_to_bcsr(a, (block[0], block[1]))
+        bb = csr_to_bcsr(b, (block[1], block[1]))
+        cb = bcsr_ops.spgemm_bcsr(ab, bb, bcap_c=bcap_c, **kw)
+        out = bcsr_to_csr(cb, cap=cap_c)
+    else:
+        raise ValueError(f"unknown algorithm {algorithm!r}")
+    if sorted_output and not out.sorted_cols:
+        out = out.sort_rows()
+    return out

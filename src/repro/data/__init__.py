@@ -1,0 +1,2 @@
+"""Data substrate: graph/matrix generators + the LM token pipeline."""
+from . import rmat, matrices

@@ -1,0 +1,95 @@
+"""R-MAT recursive matrix generator (Chakrabarti et al. [9]; paper section 5.1).
+
+Two presets, exactly as the paper:
+  * ER   -- a=b=c=d=0.25 (Erdos-Renyi uniform)
+  * G500 -- a=0.57, b=c=0.19, d=0.05 (Graph500 power-law / skewed)
+
+"A scale n matrix represents 2^n-by-2^n"; ``edge_factor`` = nnz / n.
+Host-side numpy implementation (generation is data-pipeline work, not a
+jit-hot path), returning a :class:`repro.core.CSR`.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.formats import CSR
+
+PRESETS = {
+    "ER":   (0.25, 0.25, 0.25, 0.25),
+    "G500": (0.57, 0.19, 0.19, 0.05),
+}
+
+
+def rmat_edges(scale: int, edge_factor: int, preset: str = "G500",
+               seed: int = 0) -> tuple[np.ndarray, np.ndarray]:
+    """Generate ~n*edge_factor directed edges over 2^scale vertices."""
+    a, b, c, d = PRESETS[preset]
+    n = 1 << scale
+    n_edges = n * edge_factor
+    rng = np.random.default_rng(seed)
+    rows = np.zeros(n_edges, np.int64)
+    cols = np.zeros(n_edges, np.int64)
+    # vectorized bit-by-bit recursive descent
+    p_row1 = c + d                      # P(row bit = 1)
+    for bit in range(scale):
+        r = rng.random(n_edges)
+        row_bit = (r >= a + b).astype(np.int64)
+        # conditional col-bit probability given row bit
+        p_col1 = np.where(row_bit == 0, b / (a + b), d / (c + d))
+        col_bit = (rng.random(n_edges) < p_col1).astype(np.int64)
+        rows = (rows << 1) | row_bit
+        cols = (cols << 1) | col_bit
+    del p_row1
+    return rows, cols
+
+
+def rmat_csr(scale: int, edge_factor: int, preset: str = "G500",
+             seed: int = 0, cap: int | None = None,
+             dtype=np.float32) -> CSR:
+    """Paper-style input: R-MAT pattern, unit-ish values, duplicates summed."""
+    rows, cols = rmat_edges(scale, edge_factor, preset, seed)
+    n = 1 << scale
+    rng = np.random.default_rng(seed + 1)
+    vals = rng.uniform(0.5, 1.5, size=rows.shape[0]).astype(dtype)
+    return CSR.from_numpy_coo(rows, cols, vals, (n, n), cap=cap)
+
+
+def er_csr(scale: int, edge_factor: int, seed: int = 0,
+           cap: int | None = None) -> CSR:
+    return rmat_csr(scale, edge_factor, "ER", seed, cap)
+
+
+def g500_csr(scale: int, edge_factor: int, seed: int = 0,
+             cap: int | None = None) -> CSR:
+    return rmat_csr(scale, edge_factor, "G500", seed, cap)
+
+
+def tall_skinny_from(a_rows: np.ndarray, a_cols: np.ndarray, n: int,
+                     k_scale: int, seed: int = 0,
+                     cap: int | None = None) -> CSR:
+    """Paper section 5.5: the tall-skinny B is built by randomly selecting
+    2^k_scale columns of the graph itself (multi-source BFS frontiers)."""
+    rng = np.random.default_rng(seed)
+    k = 1 << k_scale
+    chosen = rng.choice(n, size=k, replace=False)
+    col_map = np.full(n, -1, np.int64)
+    col_map[chosen] = np.arange(k)
+    keep = col_map[a_cols] >= 0
+    rows, cols = a_rows[keep], col_map[a_cols[keep]]
+    vals = np.ones(rows.shape[0], np.float32)
+    return CSR.from_numpy_coo(rows, cols, vals, (n, k), cap=cap)
+
+
+def triangular_split(a: CSR):
+    """Paper section 5.6 preprocessing: reorder rows by increasing degree,
+    split A = L + U; returns (L, U) ready for the L @ U wedge count."""
+    import jax.numpy as jnp
+    dense = np.asarray(a.to_dense())
+    deg = (dense != 0).sum(axis=1)
+    order = np.argsort(deg, kind="stable")
+    p = dense[order][:, order]
+    l = np.tril(p, k=-1)
+    u = np.triu(p, k=1)
+    del jnp
+    return (CSR.from_dense(np.asarray(l), cap=a.cap),
+            CSR.from_dense(np.asarray(u), cap=a.cap))

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU; see DESIGN.md).
+
+  spgemm_hash     -- paper C2/C3: hash + vectorized-probe SpGEMM (CSR)
+  spgemm_bcsr     -- TPU adaptation: block-row Gustavson on the MXU
+  spmm            -- CSR x dense (square x tall-skinny use case)
+  flash_attention -- online-softmax attention for the LM prefill path
+"""

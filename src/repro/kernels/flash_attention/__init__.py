@@ -1,0 +1,1 @@
+from .ops import flash_attention, chunked_attention

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle: exact softmax attention with GQA + causal mask."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, scale: float | None = None
+                  ) -> jax.Array:
+    """q: (B, H, Sq, D); k, v: (B, Hkv, Skv, D). Returns (B, H, Sq, D)."""
+    b, h, sq, d = q.shape
+    hkv = k.shape[1]
+    group = h // hkv
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    kq = jnp.repeat(k, group, axis=1)
+    vq = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kq.astype(jnp.float32)) * scale
+    if causal:
+        skv = k.shape[2]
+        mask = jnp.arange(sq)[:, None] + (skv - sq) >= jnp.arange(skv)[None, :]
+        s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      vq.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,1 @@
+from .ops import spgemm_bcsr

@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: block-row Gustavson SpGEMM over BCSR (TPU adaptation).
+
+This is the paper's hash algorithm lifted to the tile granularity the MXU
+needs (DESIGN.md section 2): the unit of sparsity is a dense ``(bm, bk)``
+tile, the hash keys are **block**-column ids, and the accumulator is a bank
+of ``(bm, bn)`` VMEM tiles addressed by the hash table -- i.e. Fig. 7 where
+`insert` allocates an MXU accumulator tile instead of a scalar.
+
+Per grid program (one equal-flop bin of block rows, C1):
+  for block-row i in bin:                      # Gustavson outer loop
+    reinit table                               # C5: reuse, don't realloc
+    for j in A.block_row(i):                   # A tiles
+      for t in B.block_row(A.bcol[j]):         # B tiles
+        slot = hash_probe(B.bcol[t])           # C2: linear probing
+        acc[slot] += A.block[j] @ B.block[t]   # MXU (preferred f32 accum)
+    flush occupied slots -> C blocks           # unsorted block order (C8)
+
+The scalar-CSR hash kernel (`spgemm_hash`) handles the sparse regime where
+blocks would be mostly empty; `core.recipe` arbitrates (block density term).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.spgemm_hash.kernel import _probe_scalar, _probe_vector, EMPTY
+
+
+def _numeric_kernel(offsets_ref, indptr_a_ref, indptr_b_ref, indptr_c_ref,
+                    a_bcol_ref, a_blk_ref, b_bcol_ref, b_blk_ref,
+                    out_bcol_ref, out_blk_ref, tkey_ref, tacc_ref, *,
+                    table_size, vector):
+    bin_id = pl.program_id(0)
+    probe = _probe_vector if vector else _probe_scalar
+
+    @pl.when(bin_id == 0)
+    def _init():
+        out_bcol_ref[...] = jnp.zeros_like(out_bcol_ref)
+        out_blk_ref[...] = jnp.zeros_like(out_blk_ref)
+
+    def do_block_row(i, _):
+        tkey_ref[...] = jnp.full_like(tkey_ref, EMPTY)
+        tacc_ref[...] = jnp.zeros_like(tacc_ref)
+
+        def do_a(j, _):
+            k = a_bcol_ref[j]
+            a_blk = a_blk_ref[j]                      # (bm, bk) VMEM tile
+
+            def do_b(t, _):
+                c = b_bcol_ref[t]
+                slot = probe(tkey_ref, c, table_size)
+                tkey_ref[slot] = c
+                # MXU tile product with f32 accumulation.
+                tacc_ref[slot] = tacc_ref[slot] + jnp.dot(
+                    a_blk, b_blk_ref[t], preferred_element_type=jnp.float32)
+                return 0
+
+            return jax.lax.fori_loop(indptr_b_ref[k], indptr_b_ref[k + 1],
+                                     do_b, 0)
+
+        jax.lax.fori_loop(indptr_a_ref[i], indptr_a_ref[i + 1], do_a, 0)
+
+        base = indptr_c_ref[i]
+
+        def flush(s, cnt):
+            key = tkey_ref[s]
+            occupied = key != EMPTY
+            pos = base + cnt
+
+            @pl.when(occupied)
+            def _():
+                out_bcol_ref[pos] = key
+                out_blk_ref[pos] = tacc_ref[s]
+
+            return cnt + occupied.astype(jnp.int32)
+
+        jax.lax.fori_loop(0, table_size, flush, jnp.int32(0))
+        return 0
+
+    jax.lax.fori_loop(offsets_ref[bin_id], offsets_ref[bin_id + 1],
+                      do_block_row, 0)
+
+
+@functools.lru_cache(maxsize=128)
+def numeric_call(n_bins: int, gm: int, bcap_a: int, bcap_b: int, bcap_c: int,
+                 block_a, block_b, table_size: int, vector: bool,
+                 interpret: bool):
+    bm, bk = block_a
+    bk2, bn = block_b
+    assert bk == bk2, (block_a, block_b)
+    kernel = functools.partial(_numeric_kernel, table_size=table_size,
+                               vector=vector)
+    full1 = lambda n: pl.BlockSpec((n,), lambda b, *p: (0,))
+    full3 = lambda n, r, c: pl.BlockSpec((n, r, c), lambda b, *p: (0, 0, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,   # offsets, indptr_a(blocks), indptr_b, indptr_c
+        grid=(n_bins,),
+        in_specs=[full1(bcap_a), full3(bcap_a, bm, bk),
+                  full1(bcap_b), full3(bcap_b, bk, bn)],
+        out_specs=[full1(bcap_c), full3(bcap_c, bm, bn)],
+        scratch_shapes=[pltpu.VMEM((table_size,), jnp.int32),
+                        pltpu.VMEM((table_size, bm, bn), jnp.float32)],
+    )
+    return jax.jit(pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((bcap_c,), jnp.int32),
+                   jax.ShapeDtypeStruct((bcap_c, bm, bn), jnp.float32)],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+    ))

@@ -1,0 +1,59 @@
+"""Jit'd wrapper for BCSR SpGEMM: symbolic at block granularity (reusing the
+scalar hash symbolic kernel on the block *pattern*), then the MXU numeric
+kernel.  The paper's two-phase structure is unchanged; only the currency is
+tiles instead of scalars."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import CSR, BCSR
+import repro.core.schedule as sched
+from repro.kernels.spgemm_hash import kernel as HK
+from . import kernel as K
+
+
+def _pattern_csr(a: BCSR) -> CSR:
+    """Block-occupancy pattern of a BCSR as a scalar CSR over the block grid."""
+    gm, gn = a.grid
+    ones = jnp.where(a.valid_mask(), 1.0, 0.0).astype(jnp.float32)
+    return CSR(a.indptr, a.indices, ones, a.nnzb, (gm, gn), sorted_cols=True)
+
+
+def spgemm_bcsr(a: BCSR, b: BCSR, bcap_c: int, *, n_bins: int = 8,
+                vector: bool = False, table_size: int | None = None,
+                interpret: bool | None = None) -> BCSR:
+    """C = A @ B on BCSR operands. Block rows of C are unsorted (C8)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    bm, bk = a.block
+    bk2, bn = b.block
+    assert bk == bk2 and a.shape[1] == b.shape[0], (a.block, b.block)
+    pa, pb = _pattern_csr(a), _pattern_csr(b)
+    gm = pa.n_rows
+
+    flop, offsets, _ = sched.make_schedule(pa, pb, n_bins)
+    if table_size is None:
+        table_size = sched.lowest_p2(
+            int(min(int(jnp.max(flop)), pb.n_cols)) + 1)
+    table_size = max(table_size, HK.CHUNK)
+
+    # Phase 1 (symbolic): exact block-nnz per block row of C.
+    sym = HK.symbolic_call(n_bins, gm, pa.cap, pb.cap, table_size, vector,
+                           interpret)
+    row_nnzb = sym(offsets, pa.indptr, pb.indptr,
+                   pa.indices, pa.data, pb.indices, pb.data)
+    indptr_cb = sched.prefix_sum(row_nnzb).astype(jnp.int32)
+
+    # Phase 2 (numeric): MXU tile products into the hash-addressed VMEM bank.
+    num = K.numeric_call(n_bins, gm, a.bcap, b.bcap, bcap_c, a.block, b.block,
+                         table_size, vector, interpret)
+    bcols_c, blocks_c = num(offsets, a.indptr, b.indptr, indptr_cb,
+                            a.indices, a.blocks.astype(jnp.float32),
+                            b.indices, b.blocks.astype(jnp.float32))
+    nnzb_c = indptr_cb[-1]
+    valid = jnp.arange(bcap_c, dtype=jnp.int32) < nnzb_c
+    bcols_c = jnp.where(valid, bcols_c, 0)
+    blocks_c = jnp.where(valid[:, None, None], blocks_c, 0).astype(a.dtype)
+    return BCSR(indptr_cb, bcols_c, blocks_c, nnzb_c,
+                (a.shape[0], b.shape[1]), (bm, bn))

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the BCSR SpGEMM kernel: dense product, re-blocked.
+
+Structural note: C's block pattern from the kernel is the *product pattern*
+(a block is present iff some A-block x B-block pair touches it), which can
+include numerically-zero blocks under value cancellation; `to_dense`
+comparison is therefore the canonical check.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.formats import BCSR
+
+
+def numeric_ref(a: BCSR, b: BCSR) -> jax.Array:
+    return a.to_dense() @ b.to_dense()

@@ -1,0 +1,1 @@
+from .ops import spgemm_hash, spgemm_hash_symbolic

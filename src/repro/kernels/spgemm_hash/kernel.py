@@ -1,0 +1,231 @@
+"""Pallas TPU kernel: hash-accumulator SpGEMM (paper Figs. 7 & 8).
+
+Faithful structure, TPU-resident state:
+
+  * grid = equal-flop row bins from ``core.schedule`` (C1; Fig. 6) -- the
+    Pallas grid replaces the OpenMP static thread pool;
+  * per-program hash table in **VMEM scratch** (C5: thread-private memory,
+    sized once per worker to the max per-row flop -- Fig. 7 lines 5-14 --
+    and *reinitialized per row*, not reallocated);
+  * power-of-two table, multiply hash, linear probing (Fig. 8a);
+  * optional **vectorized probing** (C3 / Fig. 8b): the table is scanned in
+    ``CHUNK``-wide vector compares -- the VPU analogue of the AVX-512
+    chunked probe of Ross [28]; first-hit / first-empty are extracted with
+    an iota-masked min instead of x86 ``ctz``;
+  * two phases: ``symbolic`` counts nnz per row, ``numeric`` fills values
+    (section 2: the two-phase method gives exact output capacity);
+  * output rows are emitted **unsorted** (C8) in table-scan order; sorting
+    is an explicit epilogue owned by the caller (Table 1 "Any/Select").
+
+Memory plumbing: CSR arrays ride in VMEM whole (test scale); on a real chip
+the row bins stream through double-buffered DMA windows, which changes the
+BlockSpecs but not the kernel body.  Scalar row pointers (A, B, C) and the
+bin offsets ride in SMEM via ``PrefetchScalarGridSpec`` so the control loops
+never touch VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+#: Knuth multiplicative constant (wraps mod 2^32; int32 two's complement).
+HASH_CONST = -1640531527   # == 2654435761 mod 2^32 (Python int -> inlined literal)
+
+#: Vector probe width (lanes compared per step in hash_vector mode).
+CHUNK = 8
+
+EMPTY = -1
+
+
+def _hash(key: jax.Array, mask: jax.Array) -> jax.Array:
+    return (key * HASH_CONST) & mask
+
+
+def _probe_scalar(tkey_ref, key, table_size):
+    """Linear probing (Fig. 8a): return slot holding `key` or first empty."""
+    mask = jnp.int32(table_size - 1)
+
+    def cond(idx):
+        k = tkey_ref[idx]
+        return (k != key) & (k != EMPTY)
+
+    def body(idx):
+        return (idx + 1) & mask
+
+    return jax.lax.while_loop(cond, body, _hash(key, mask))
+
+
+def _probe_vector(tkey_ref, key, table_size):
+    """Chunked probing (Fig. 8b): compare CHUNK table entries per step.
+
+    The hash addresses a *chunk*; within a chunk, hit/empty lanes are found
+    with a masked iota-min (TPU stand-in for ``__builtin_ctz``).  Falls
+    through to the next chunk on a full miss (linear probing over chunks).
+    """
+    n_chunks = table_size // CHUNK
+    cmask = jnp.int32(n_chunks - 1)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (CHUNK,), 0)
+    BIG = CHUNK + 1
+
+    def load(chunk_id):
+        return pl.load(tkey_ref, (pl.ds(chunk_id * CHUNK, CHUNK),))
+
+    def cond(chunk_id):
+        ks = load(chunk_id)
+        return ~jnp.any((ks == key) | (ks == EMPTY))
+
+    def body(chunk_id):
+        return (chunk_id + 1) & cmask
+
+    chunk_id = jax.lax.while_loop(cond, body, _hash(key, cmask))
+    ks = load(chunk_id)
+    hit_lane = jnp.min(jnp.where(ks == key, lane, BIG))
+    empty_lane = jnp.min(jnp.where(ks == EMPTY, lane, BIG))
+    lane_id = jnp.where(hit_lane < BIG, hit_lane, empty_lane)
+    return chunk_id * CHUNK + lane_id
+
+
+def _row_loop(i, *, indptr_a_ref, indptr_b_ref, a_idx_ref, a_val_ref,
+              b_idx_ref, b_val_ref, tkey_ref, tval_ref, table_size, vector,
+              numeric):
+    """Fig. 1 inner loops for one output row, hash accumulation."""
+    probe = _probe_vector if vector else _probe_scalar
+    # Fig. 7: "reuses that hash table ... by reinitializing for each row".
+    tkey_ref[...] = jnp.full_like(tkey_ref, EMPTY)
+    if numeric:
+        tval_ref[...] = jnp.zeros_like(tval_ref)
+
+    def do_a(j, inserted):
+        k = a_idx_ref[j]
+        av = a_val_ref[j] if numeric else jnp.float32(0)
+
+        def do_b(t, inserted):
+            c = b_idx_ref[t]
+            slot = probe(tkey_ref, c, table_size)
+            is_new = tkey_ref[slot] == EMPTY
+            tkey_ref[slot] = c
+            if numeric:
+                tval_ref[slot] = tval_ref[slot] + av * b_val_ref[t]
+            return inserted + is_new.astype(jnp.int32)
+
+        return jax.lax.fori_loop(indptr_b_ref[k], indptr_b_ref[k + 1], do_b,
+                                 inserted)
+
+    return jax.lax.fori_loop(indptr_a_ref[i], indptr_a_ref[i + 1], do_a,
+                             jnp.int32(0))
+
+
+def _symbolic_kernel(offsets_ref, indptr_a_ref, indptr_b_ref,
+                     a_idx_ref, a_val_ref, b_idx_ref, b_val_ref,
+                     row_nnz_ref, tkey_ref, *, table_size, vector):
+    b = pl.program_id(0)
+
+    def do_row(i, _):
+        cnt = _row_loop(
+            i, indptr_a_ref=indptr_a_ref, indptr_b_ref=indptr_b_ref,
+            a_idx_ref=a_idx_ref, a_val_ref=a_val_ref, b_idx_ref=b_idx_ref,
+            b_val_ref=b_val_ref, tkey_ref=tkey_ref, tval_ref=None,
+            table_size=table_size, vector=vector, numeric=False)
+        row_nnz_ref[i] = cnt
+        return 0
+
+    jax.lax.fori_loop(offsets_ref[b], offsets_ref[b + 1], do_row, 0)
+
+
+def _numeric_kernel(offsets_ref, indptr_a_ref, indptr_b_ref, indptr_c_ref,
+                    a_idx_ref, a_val_ref, b_idx_ref, b_val_ref,
+                    out_idx_ref, out_val_ref, tkey_ref, tval_ref, *,
+                    table_size, vector):
+    b = pl.program_id(0)
+
+    @pl.when(b == 0)
+    def _init():
+        out_idx_ref[...] = jnp.zeros_like(out_idx_ref)
+        out_val_ref[...] = jnp.zeros_like(out_val_ref)
+
+    def do_row(i, _):
+        _row_loop(
+            i, indptr_a_ref=indptr_a_ref, indptr_b_ref=indptr_b_ref,
+            a_idx_ref=a_idx_ref, a_val_ref=a_val_ref, b_idx_ref=b_idx_ref,
+            b_val_ref=b_val_ref, tkey_ref=tkey_ref, tval_ref=tval_ref,
+            table_size=table_size, vector=vector, numeric=True)
+        # Flush occupied slots in table order -> **unsorted** columns (C8).
+        base = indptr_c_ref[i]
+
+        def flush(s, cnt):
+            key = tkey_ref[s]
+            occupied = key != EMPTY
+            pos = base + cnt
+            # masked single-element store: padded lane writes are dropped by
+            # writing to the (guaranteed-live) same slot when unoccupied.
+            @pl.when(occupied)
+            def _():
+                out_idx_ref[pos] = key
+                out_val_ref[pos] = tval_ref[s]
+            return cnt + occupied.astype(jnp.int32)
+
+        jax.lax.fori_loop(0, table_size, flush, jnp.int32(0))
+        return 0
+
+    jax.lax.fori_loop(offsets_ref[b], offsets_ref[b + 1], do_row, 0)
+
+
+# ---------------------------------------------------------------------------
+# pallas_call builders
+# ---------------------------------------------------------------------------
+
+def _full(spec_len):
+    # index_map receives (grid idx, *scalar_prefetch_refs) under
+    # PrefetchScalarGridSpec; the whole array is one block for all programs.
+    return pl.BlockSpec((spec_len,), lambda b, *prefetch: (0,))
+
+
+@functools.lru_cache(maxsize=256)
+def symbolic_call(n_bins: int, m: int, cap_a: int, cap_b: int,
+                  table_size: int, vector: bool, interpret: bool):
+    """Cached builder: a stable callable per static config, jit-wrapped so
+    repeat invocations hit the dispatch cache instead of retracing (the
+    paper's C5 allocate-once discipline applied to compilation)."""
+    kernel = functools.partial(_symbolic_kernel, table_size=table_size,
+                               vector=vector)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,           # offsets, indptr_a, indptr_b
+        grid=(n_bins,),
+        in_specs=[_full(cap_a), _full(cap_a), _full(cap_b), _full(cap_b)],
+        out_specs=_full(m),
+        scratch_shapes=[pltpu.VMEM((table_size,), jnp.int32)],
+    )
+    return jax.jit(pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.int32),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+    ))
+
+
+@functools.lru_cache(maxsize=256)
+def numeric_call(n_bins: int, m: int, cap_a: int, cap_b: int, cap_c: int,
+                 table_size: int, vector: bool, interpret: bool):
+    kernel = functools.partial(_numeric_kernel, table_size=table_size,
+                               vector=vector)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,           # offsets, indptr_a, indptr_b, indptr_c
+        grid=(n_bins,),
+        in_specs=[_full(cap_a), _full(cap_a), _full(cap_b), _full(cap_b)],
+        out_specs=[_full(cap_c), _full(cap_c)],
+        scratch_shapes=[pltpu.VMEM((table_size,), jnp.int32),
+                        pltpu.VMEM((table_size,), jnp.float32)],
+    )
+    return jax.jit(pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((cap_c,), jnp.int32),
+                   jax.ShapeDtypeStruct((cap_c,), jnp.float32)],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+    ))

@@ -1,0 +1,80 @@
+"""Jit'd wrapper around the hash SpGEMM Pallas kernel.
+
+Assembles the full two-phase pipeline of paper Fig. 7:
+
+  1. ``RowsToThreads`` (core.schedule): flop per row -> equal-flop bins;
+  2. static table sizing: ``lowest_p2(min(N_col, max_row_flop) + 1)``
+     (Fig. 7 lines 9-12; the +1 keeps the load factor < 1 so probes
+     terminate);
+  3. symbolic kernel -> exact row nnz -> indptr_C (prefix sum);
+  4. numeric kernel -> (indices, values), unsorted within rows (C8).
+
+Static-shape note: the scratch table size must be a Python int, so when the
+inputs are concrete (the normal eager call) it is derived from the measured
+max row flop exactly as the paper sizes per-thread tables; under an outer
+``jit``/dry-run trace the caller must pin ``table_size``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import CSR
+import repro.core.schedule as sched
+from . import kernel as K
+
+
+def _is_concrete(x) -> bool:
+    return not isinstance(x, jax.core.Tracer)
+
+
+def spgemm_hash(a: CSR, b: CSR, cap_c: int, *, n_bins: int = 8,
+                vector: bool = False, table_size: int | None = None,
+                interpret: bool | None = None) -> CSR:
+    """C = A @ B via the hash kernel. Returns CSR with sorted_cols=False."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    m, n = a.n_rows, b.n_cols
+    flop, offsets, _tsize = sched.make_schedule(a, b, n_bins)
+    if table_size is None:
+        if not _is_concrete(flop):
+            raise ValueError("under trace, pass a static table_size")
+        table_size = sched.lowest_p2(
+            int(min(int(jnp.max(flop)), n)) + 1)
+    table_size = max(table_size, K.CHUNK)
+
+    sym = K.symbolic_call(n_bins, m, a.cap, b.cap, table_size, vector,
+                          interpret)
+    row_nnz = sym(offsets, a.indptr, b.indptr,
+                  a.indices, a.data.astype(jnp.float32),
+                  b.indices, b.data.astype(jnp.float32))
+    indptr_c = sched.prefix_sum(row_nnz).astype(jnp.int32)
+
+    num = K.numeric_call(n_bins, m, a.cap, b.cap, cap_c, table_size, vector,
+                         interpret)
+    cols_c, vals_c = num(offsets, a.indptr, b.indptr, indptr_c,
+                         a.indices, a.data.astype(jnp.float32),
+                         b.indices, b.data.astype(jnp.float32))
+    nnz_c = indptr_c[-1]
+    valid = jnp.arange(cap_c, dtype=jnp.int32) < nnz_c
+    cols_c = jnp.where(valid, cols_c, 0)
+    vals_c = jnp.where(valid, vals_c, 0).astype(a.dtype)
+    return CSR(indptr_c, cols_c, vals_c, nnz_c, (m, n), sorted_cols=False)
+
+
+def spgemm_hash_symbolic(a: CSR, b: CSR, *, n_bins: int = 8,
+                         vector: bool = False, table_size: int | None = None,
+                         interpret: bool | None = None) -> jax.Array:
+    """Symbolic phase only: exact nnz(C) per row."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    m, n = a.n_rows, b.n_cols
+    flop, offsets, _ = sched.make_schedule(a, b, n_bins)
+    if table_size is None:
+        table_size = sched.lowest_p2(int(min(int(jnp.max(flop)), n)) + 1)
+    table_size = max(table_size, K.CHUNK)
+    sym = K.symbolic_call(n_bins, m, a.cap, b.cap, table_size, vector,
+                          interpret)
+    return sym(offsets, a.indptr, b.indptr,
+               a.indices, a.data.astype(jnp.float32),
+               b.indices, b.data.astype(jnp.float32))

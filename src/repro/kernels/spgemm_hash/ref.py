@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the hash SpGEMM kernel.
+
+The semantic contract of the kernel (per phase):
+  * symbolic: exact nnz per output row;
+  * numeric:  CSR triple (indptr from symbolic, indices, values) where each
+    row holds the correct {col: sum of products} set in *some* order
+    (unsorted output, C8).
+
+The oracle is the dense product; comparisons therefore canonicalize via
+``CSR.to_dense()`` which is order-insensitive, plus an explicit per-row
+set/sum check in the tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import CSR
+
+
+def symbolic_ref(a: CSR, b: CSR) -> jax.Array:
+    c = a.to_dense().astype(jnp.float32) @ b.to_dense().astype(jnp.float32)
+    # structural nnz: products of the sparsity patterns, not value cancels
+    pattern = (a.to_dense() != 0).astype(jnp.float32) @ \
+              (b.to_dense() != 0).astype(jnp.float32)
+    del c
+    return jnp.sum(pattern > 0, axis=1).astype(jnp.int32)
+
+
+def numeric_ref(a: CSR, b: CSR) -> jax.Array:
+    """Dense C = A @ B (the canonical value oracle)."""
+    return a.to_dense() @ b.to_dense()

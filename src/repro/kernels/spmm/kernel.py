@@ -1,0 +1,59 @@
+"""Pallas TPU kernel: SpMM  y = A @ X  (CSR x dense tall-skinny).
+
+The square x tall-skinny use case of paper section 5.5 (multi-source BFS /
+betweenness frontiers).  Grid = equal-flop row bins (C1); each program walks
+its rows, gathering rows of X -- the *stanza* access pattern of section 3.3:
+each gather reads a contiguous (1, k) panel, which is exactly the access
+shape the MCDRAM/HBM study says is bandwidth-friendly once k is lane-wide.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _spmm_kernel(offsets_ref, indptr_a_ref, a_idx_ref, a_val_ref, x_ref,
+                 y_ref, acc_ref):
+    b = pl.program_id(0)
+
+    def do_row(i, _):
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        def do_nz(j, _):
+            col = a_idx_ref[j]
+            av = a_val_ref[j]
+            acc_ref[...] = acc_ref[...] + av * pl.load(
+                x_ref, (pl.ds(col, 1), slice(None))).astype(jnp.float32)
+            return 0
+
+        jax.lax.fori_loop(indptr_a_ref[i], indptr_a_ref[i + 1], do_nz, 0)
+        pl.store(y_ref, (pl.ds(i, 1), slice(None)),
+                 acc_ref[...].astype(y_ref.dtype))
+        return 0
+
+    jax.lax.fori_loop(offsets_ref[b], offsets_ref[b + 1], do_row, 0)
+
+
+@functools.lru_cache(maxsize=128)
+def spmm_call(n_bins: int, m: int, n: int, k: int, cap_a: int, dtype,
+              interpret: bool):
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,    # offsets, indptr_a
+        grid=(n_bins,),
+        in_specs=[pl.BlockSpec((cap_a,), lambda b, *p: (0,)),
+                  pl.BlockSpec((cap_a,), lambda b, *p: (0,)),
+                  pl.BlockSpec((n, k), lambda b, *p: (0, 0))],
+        out_specs=pl.BlockSpec((m, k), lambda b, *p: (0, 0)),
+        scratch_shapes=[pltpu.VMEM((1, k), jnp.float32)],
+    )
+    return jax.jit(pl.pallas_call(
+        _spmm_kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, k), dtype),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+    ))

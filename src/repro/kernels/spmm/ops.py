@@ -1,0 +1,25 @@
+"""Jit'd wrapper for the SpMM kernel (CSR x dense)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import CSR
+import repro.core.schedule as sched
+from . import kernel as K
+
+
+def spmm_pallas(a: CSR, x: jax.Array, *, n_bins: int = 8,
+                interpret: bool | None = None) -> jax.Array:
+    """y = A @ X; X dense (n, k), returns (m, k)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    m, n = a.shape
+    k = x.shape[1]
+    flop, offsets, _ = sched.make_schedule(a, a, n_bins)  # balance on nnz(A)
+    # for SpMM the work per row is nnz(a_i*) * k; nnz-based bins suffice
+    row_nnz = a.row_nnz()
+    offsets = sched.rows_to_bins(row_nnz, n_bins)
+    del flop
+    call = K.spmm_call(n_bins, m, n, k, a.cap, x.dtype, interpret)
+    return call(offsets, a.indptr, a.indices, a.data.astype(jnp.float32), x)

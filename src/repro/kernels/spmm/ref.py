@@ -1,0 +1,6 @@
+"""Pure-jnp oracle for SpMM."""
+from repro.core.formats import CSR
+
+
+def spmm_ref(a: CSR, x):
+    return a.to_dense() @ x

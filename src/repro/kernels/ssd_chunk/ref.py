@@ -1,0 +1,6 @@
+"""Oracle: the pure-jnp chunked SSD from the model stack."""
+from repro.models.ssm import ssd_chunked
+
+
+def ssd_ref(xd, log_a, Bm, Cm, chunk):
+    return ssd_chunked(xd, log_a, Bm, Cm, chunk)

@@ -1,0 +1,3 @@
+"""Launchers: mesh construction, dry-run, train/serve drivers.
+NOTE: do not import dryrun here -- it sets XLA device-count flags on import."""
+from . import mesh

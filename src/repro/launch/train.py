@@ -1,0 +1,75 @@
+"""Training driver.
+
+Smoke (CPU, reduced config):
+  python -m repro.launch.train --arch qwen3-0.6b --smoke --steps 30
+
+Production shape (the dry-run proves this lowers at 256/512 chips; on a
+real fleet each host runs this same entry point under jax.distributed):
+  python -m repro.launch.train --arch qwen3-moe-235b-a22b \
+      --steps 1000 --global-batch 256 --seq 4096 --ckpt-dir /ckpts/run1
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import ARCHS, get, reduced
+from repro.parallel.sharding import ParallelCtx, single_device_ctx
+from repro.train import loop as loop_lib
+from repro.train import optimizer as opt
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list(ARCHS))
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config on local devices")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", type=str, default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--grad-compression", default="none",
+                    choices=["none", "bf16", "int8_ef"])
+    ap.add_argument("--mesh", type=str, default=None,
+                    help='e.g. "4x2" to build a data x model mesh over '
+                         'local devices')
+    args = ap.parse_args(argv)
+
+    cfg = get(args.arch)
+    if args.smoke:
+        cfg = reduced(cfg)
+    if args.mesh:
+        shape = tuple(int(x) for x in args.mesh.split("x"))
+        mesh = jax.make_mesh(shape, ("data", "model")[:len(shape)])
+        pctx = ParallelCtx(mesh=mesh, batch_axes=("data",),
+                           fsdp_axes=("data",), attn_impl="chunked")
+    else:
+        pctx = single_device_ctx(
+            remat=not args.smoke,
+            attn_impl="full" if args.smoke else "chunked")
+
+    ocfg = opt.AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                           total_steps=args.steps)
+    lcfg = loop_lib.LoopConfig(
+        total_steps=args.steps, ckpt_every=args.ckpt_every,
+        log_every=max(args.steps // 20, 1), ckpt_dir=args.ckpt_dir,
+        global_batch=args.global_batch, seq_len=args.seq,
+        n_microbatches=args.microbatches,
+        grad_compression=args.grad_compression)
+
+    def log(m):
+        print(f"step {m['step']:6d}  loss {m['loss']:.4f}  "
+              f"gnorm {m['grad_norm']:.3f}  lr {m['lr']:.2e}  "
+              f"{m['sec_per_step']:.3f}s/step", flush=True)
+
+    _, hist = loop_lib.run(cfg, pctx, ocfg, lcfg, on_metrics=log)
+    print(f"final loss {hist[-1]['loss']:.4f}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

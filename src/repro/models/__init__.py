@@ -1,0 +1,2 @@
+"""LM model zoo: unified transformer over per-arch layer plans."""
+from . import layers, attention, moe, ssm, rglru, transformer

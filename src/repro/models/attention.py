@@ -1,0 +1,162 @@
+"""GQA attention: train/prefill (flash-chunked) + decode (cache) paths.
+
+Features per the assigned archs: GQA (any kv ratio incl. MQA), qk-norm
+(qwen3/chameleon), QKV bias (qwen1.5), RoPE, sliding-window local attention
+(recurrentgemma).  Sharding: heads over TP, batch over DP, sequence over SP
+between blocks; decode KV caches shard (batch -> data, kv-heads -> model)
+with automatic fallback to sequence sharding for small batches
+(`safe_pspec`), giving the distributed flash-decoding LSE combine for the
+long_500k cells (the partial max/sum reductions over the sharded kv axis
+are inserted by SPMD).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.ops import chunked_attention, flash_attention
+from repro.parallel.sharding import ParallelCtx, constrain
+from . import layers as L
+
+
+class KVCache(NamedTuple):
+    k: jax.Array           # (B, Hkv, S_max, hd)
+    v: jax.Array
+
+
+def init(key, cfg):
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {"wq": L.dense_init(ks[0], d, H * hd),
+         "wk": L.dense_init(ks[1], d, KV * hd),
+         "wv": L.dense_init(ks[2], d, KV * hd),
+         "wo": L.dense_init(ks[3], H * hd, d)}
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((KV * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((KV * hd,), jnp.float32)
+    if cfg.qk_norm:
+        p["q_scale"] = jnp.ones((hd,), jnp.float32)
+        p["k_scale"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def _project_qkv(params, x, cfg, positions):
+    """x: (B, S, d) -> q (B, H, S, hd), k/v (B, KV, S, hd), roped."""
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = x.dtype
+    q = x @ params["wq"].astype(dt)
+    k = x @ params["wk"].astype(dt)
+    v = x @ params["wv"].astype(dt)
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(dt)
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    q = q.reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(B, S, KV, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(B, S, KV, hd).transpose(0, 2, 1, 3)
+    if cfg.qk_norm:
+        q = _headnorm(q, params["q_scale"], cfg.norm_eps)
+        k = _headnorm(k, params["k_scale"], cfg.norm_eps)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _headnorm(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+def apply_full(params, x, cfg, pctx: ParallelCtx, *, local: bool = False):
+    """Training/prefill attention over the whole sequence.  Returns
+    (out, KVCache) -- the cache is consumed by prefill, ignored by train."""
+    B, S, _ = x.shape
+    positions = jnp.arange(S)
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    # Sequence-parallel-q layout (Perf iteration 6): q, the softmax stats,
+    # and the attention output stay sharded over (batch->DP, seq->TP) --
+    # the residual stream's own layout, so the block needs NO activation
+    # gathers on the q side.  Only K/V are (un-repeated, bf16) gathered to
+    # full sequence, which for GQA is the smallest tensor in the block.
+    # The head dim stays unsharded here; head-sharding would instead force
+    # full-seq q/out gathers (the baseline's 268 MB/layer f32 copies).
+    spec_q = (pctx.batch_axes, None, pctx.tp_axis if pctx.sp else None, None)
+    spec_kv = (pctx.batch_axes, None, None, None)
+    q = constrain(q, pctx, spec_q)
+
+    def shard(t):
+        # q-side: rank-4 (B, H, Sq, D) / rank-3 (B, H, Sq)
+        return constrain(t, pctx, spec_q[:2] + spec_q[2:2 + t.ndim - 2])
+
+    def shard_kv(t):
+        return constrain(t, pctx, spec_kv[:t.ndim])
+
+    window = cfg.attn_window if (local and cfg.attn_window and
+                                 cfg.attn_window < S) else None
+    if window is None and pctx.attn_impl == "flash" and \
+            jax.default_backend() == "tpu":
+        o = flash_attention(q, k, v, causal=True)
+    elif window is None and pctx.attn_impl == "full":
+        from repro.kernels.flash_attention.ref import attention_ref
+        o = attention_ref(q, k, v, causal=True)
+    else:
+        o = chunked_attention(q, k, v, shard, shard_kv, causal=True,
+                              window=window, bkv=min(512, S))
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, cfg.n_heads * cfg.hd)
+    out = o @ params["wo"].astype(x.dtype)
+    return out, KVCache(k, v)
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype) -> KVCache:
+    shape = (batch, cfg.n_kv_heads, max_len, cfg.hd)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def cache_spec(cfg, pctx: ParallelCtx):
+    """Sharding template for KV caches: batch->data, kv-heads->model; the
+    sequence dim picks up whatever axes remain unused (long-context cells
+    with batch < |data| shard the cache over sequence instead -- the
+    distributed flash-decoding layout)."""
+    return (pctx.batch_axes, pctx.tp_axis, pctx.batch_axes + pctx.tp, None)
+
+
+def apply_decode(params, x_t, cache: KVCache, pos, cfg, pctx: ParallelCtx,
+                 *, local: bool = False):
+    """One decode step. x_t: (B, 1, d); pos: scalar or (B,) positions
+    (per-slot positions support the continuous-batching engine).
+
+    Returns (out (B, 1, d), updated cache)."""
+    B = x_t.shape[0]
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    positions = pos_b[:, None, None]                 # (B,1,1) for rope bcast
+    q, k_new, v_new = _project_qkv(params, x_t, cfg, positions)
+
+    def upd(c, new, p):
+        return jax.lax.dynamic_update_slice(c, new.astype(c.dtype),
+                                            (0, p, 0))
+    k = jax.vmap(upd)(cache.k, k_new, pos_b)
+    v = jax.vmap(upd)(cache.v, v_new, pos_b)
+    k = constrain(k, pctx, cache_spec(cfg, pctx))
+    v = constrain(v, pctx, cache_spec(cfg, pctx))
+    S = k.shape[2]
+    hkv, hd = cfg.n_kv_heads, cfg.hd
+    group = cfg.n_heads // hkv
+    scale = 1.0 / (hd ** 0.5)
+    qg = (q.astype(jnp.float32) * scale).reshape(B, hkv, group, hd)
+    s = jnp.einsum("bngd,bnkd->bngk", qg, k.astype(jnp.float32))
+    k_pos = jnp.arange(S)
+    valid = k_pos[None, :] <= pos_b[:, None]
+    if local and cfg.attn_window:
+        valid &= k_pos[None, :] > pos_b[:, None] - cfg.attn_window
+    valid = valid[:, None, None, :]
+    s = jnp.where(valid, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bngk,bnkd->bngd", p, v.astype(jnp.float32))
+    o = o.reshape(B, 1, cfg.n_heads * hd).astype(x_t.dtype)
+    out = o @ params["wo"].astype(x_t.dtype)
+    return out, KVCache(k, v)

@@ -1,0 +1,237 @@
+"""Shared model primitives: norms, RoPE, initializers, dense MLPs.
+
+Plain-pytree parameters (no framework dependency): every module is an
+``init(key, cfg) -> params`` + ``apply(params, x, ...) -> y`` pair.
+Compute dtype is bf16 (cfg.dtype) with f32 params and f32 norm/softmax
+accumulation -- the standard mixed-precision recipe.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def cdtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, scale: float | None = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale)
+
+
+def rmsnorm_init(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(params, x, eps: float):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(hd: int, theta: float):
+    return theta ** (-jnp.arange(0, hd, 2, dtype=jnp.float32) / hd)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float):
+    """x: (..., S, hd); positions: (S,) or broadcastable to x[..., :, 0]."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs   # (..., S, hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLPs (SwiGLU / GeGLU-style)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d: int, f: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"w_gate": dense_init(k1, d, f),
+            "w_in": dense_init(k2, d, f),
+            "w_out": dense_init(k3, f, d)}
+
+
+def mlp_apply(params, x, *, act: str = "silu"):
+    dt = x.dtype
+    gate = x @ params["w_gate"].astype(dt)
+    up = x @ params["w_in"].astype(dt)
+    actv = jax.nn.silu if act == "silu" else jax.nn.gelu
+    h = actv(gate.astype(jnp.float32)).astype(dt) * up
+    return h @ params["w_out"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / heads
+# ---------------------------------------------------------------------------
+
+def embed_init(key, vocab: int, d: int, n_codebooks: int = 0):
+    if n_codebooks:
+        return {"tok": jax.random.normal(key, (n_codebooks, vocab, d),
+                                         jnp.float32)}
+    return {"tok": jax.random.normal(key, (vocab, d), jnp.float32)}
+
+
+def embed_apply(params, tokens, cfg):
+    dt = cdtype(cfg)
+    # cast the table BEFORE the take: with a vocab-sharded table the lookup
+    # lowers to masked-take + psum over the vocab axis, and casting first
+    # halves that collective (bf16 vs f32) -- Perf iteration 6.
+    if cfg.n_codebooks:
+        # tokens: (B, S, ncb); sum codebook embeddings (musicgen frontend)
+        embs = []
+        for c in range(cfg.n_codebooks):
+            embs.append(jnp.take(params["tok"][c].astype(dt),
+                                 tokens[..., c], axis=0))
+        return sum(embs)
+    return jnp.take(params["tok"].astype(dt), tokens, axis=0)
+
+
+def head_init(key, cfg):
+    if cfg.tie_embeddings:
+        return {}
+    d, v = cfg.d_model, cfg.vocab_size
+    if cfg.n_codebooks:
+        return {"lm_head": jax.random.normal(key, (cfg.n_codebooks, d, v),
+                                             jnp.float32) * d ** -0.5}
+    return {"lm_head": jax.random.normal(key, (d, v), jnp.float32)
+            * d ** -0.5}
+
+
+def head_apply(head_params, embed_params, x, cfg):
+    """x: (B, S, d) -> logits (B, S, V) or (B, S, ncb, V)."""
+    dt = x.dtype
+    if cfg.n_codebooks:
+        if cfg.tie_embeddings:
+            w = jnp.swapaxes(embed_params["tok"], 1, 2)   # (ncb, d, V)
+        else:
+            w = head_params["lm_head"]
+        logits = jnp.einsum("bsd,cdv->bscv", x, w.astype(dt))
+    else:
+        w = (embed_params["tok"].T if cfg.tie_embeddings
+             else head_params["lm_head"])
+        logits = x @ w.astype(dt)
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = jnp.tanh(logits.astype(jnp.float32) / c) * c
+    return logits
+
+
+def cross_entropy(logits, labels):
+    """Mean CE; logits (..., V) f32-accumulated; labels int (...)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - ll)
+
+
+# ---------------------------------------------------------------------------
+# Fused chunked softmax-cross-entropy head (custom VJP).
+#
+# Materializing (B, S, V) logits + their f32 CE intermediates dominates
+# training memory for large vocabularies (the 152k-vocab cells: ~8 GB/chip
+# in the baseline dry-run -- EXPERIMENTS.md Perf iteration 3).  This head
+# scans sequence chunks, computing loss statistics forward and recomputing
+# the chunk's softmax in the backward -- peak live logits are (B, chunk, V)
+# and the only stored residuals are (x, w, labels).
+# ---------------------------------------------------------------------------
+
+def _ce_chunks(T: int, chunk: int) -> int:
+    c = min(chunk, T)
+    while T % c:
+        c -= 1
+    return max(c, 1)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def fused_softmax_xent(x2, w, labels, chunk: int = 512):
+    """Mean CE of labels under softmax(x2 @ w).
+
+    x2: (T, d); w: (d, V); labels: (T,) int. Returns scalar mean loss."""
+    loss, _ = _fused_xent_fwd_impl(x2, w, labels, chunk)
+    return loss
+
+
+def _fused_xent_fwd_impl(x2, w, labels, chunk):
+    T, d = x2.shape
+    c = _ce_chunks(T, chunk)
+    xs = x2.reshape(T // c, c, d)
+    ls = labels.reshape(T // c, c)
+
+    def step(acc, xs_):
+        xc, lc = xs_
+        # f32 accumulation even for bf16 working params (iteration 8)
+        logits = jnp.matmul(xc, w, preferred_element_type=jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, lc[:, None], axis=-1)[:, 0]
+        return acc + jnp.sum(lse - ll), None
+
+    total, _ = jax.lax.scan(step, jnp.float32(0), (xs, ls))
+    return total / T, (x2, w, labels)
+
+
+def _fused_xent_vjp_fwd(x2, w, labels, chunk):
+    loss, res = _fused_xent_fwd_impl(x2, w, labels, chunk)
+    return loss, res
+
+
+def _fused_xent_vjp_bwd(chunk, res, g):
+    x2, w, labels = res
+    T, d = x2.shape
+    c = _ce_chunks(T, chunk)
+    xs = x2.reshape(T // c, c, d)
+    ls = labels.reshape(T // c, c)
+    scale = g / T
+
+    def step(dw, xs_):
+        xc, lc = xs_
+        logits = jnp.matmul(xc, w, preferred_element_type=jnp.float32)
+        p = jax.nn.softmax(logits, axis=-1)          # recomputed
+        p = p.at[jnp.arange(c), lc].add(-1.0)
+        p = p * scale
+        dx_c = (p @ w.astype(jnp.float32).T).astype(x2.dtype)
+        dw = dw + xc.astype(jnp.float32).T @ p
+        return dw, dx_c
+
+    dw0 = jnp.zeros((d, w.shape[1]), jnp.float32)
+    dw, dxs = jax.lax.scan(step, dw0, (xs, ls))
+    dx = dxs.reshape(T, d)
+    return dx, dw.astype(w.dtype), None
+
+
+fused_softmax_xent.defvjp(_fused_xent_vjp_fwd, _fused_xent_vjp_bwd)
+
+
+def fused_head_loss(head_params, embed_params, x, labels, cfg,
+                    chunk: int = 512):
+    """Chunked CE over the LM head; handles tying and codebook stacks.
+
+    x: (B, S, d); labels: (B, S) or (B, S, ncb)."""
+    B, S, d = x.shape
+    x2 = x.reshape(B * S, d)
+    if cfg.n_codebooks:
+        losses = []
+        for cb in range(cfg.n_codebooks):
+            w = (jnp.swapaxes(embed_params["tok"], 1, 2)[cb]
+                 if cfg.tie_embeddings else head_params["lm_head"][cb])
+            losses.append(fused_softmax_xent(
+                x2, w.astype(x.dtype), labels[..., cb].reshape(B * S),
+                chunk))
+        return sum(losses) / cfg.n_codebooks
+    w = (embed_params["tok"].T if cfg.tie_embeddings
+         else head_params["lm_head"])
+    return fused_softmax_xent(x2, w.astype(x.dtype),
+                              labels.reshape(B * S), chunk)

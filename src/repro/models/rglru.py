@@ -1,0 +1,119 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma [arXiv:2402.19427]).
+
+Block: y = W_out( GeLU(W_gate x) * RG-LRU( conv4( W_rnn x ) ) )
+
+RG-LRU cell (block-diagonal input/recurrence gates, n_blocks=NB):
+  r_t = sigmoid(blockdiag(gate_a) . x_t)
+  i_t = sigmoid(blockdiag(gate_x) . x_t)
+  log a_t = -c * softplus(a_param) * r_t          (c = 8)
+  h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training uses ``jax.lax.associative_scan`` over time (O(log S) depth);
+decode is the single-step recurrence with (conv window, h) cache.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+
+C_FACTOR = 8.0
+NB = 8               # gate block-diagonal blocks
+D_CONV = 4
+
+
+class RGLRUCache(NamedTuple):
+    conv: jax.Array    # (B, D_CONV-1, w) trailing conv inputs
+    h: jax.Array       # (B, w) recurrent state (f32)
+
+
+def init(key, cfg):
+    d = cfg.d_model
+    w = cfg.rnn_width or d
+    ks = jax.random.split(key, 6)
+    return {
+        "w_gate_in": L.dense_init(ks[0], d, w),
+        "w_rnn_in": L.dense_init(ks[1], d, w),
+        "conv_w": jax.random.normal(ks[2], (D_CONV, w), jnp.float32)
+                  * D_CONV ** -0.5,
+        "conv_b": jnp.zeros((w,), jnp.float32),
+        "gate_a": jax.random.normal(ks[3], (NB, w // NB, w // NB),
+                                    jnp.float32) * (w // NB) ** -0.5,
+        "gate_x": jax.random.normal(ks[4], (NB, w // NB, w // NB),
+                                    jnp.float32) * (w // NB) ** -0.5,
+        "a_param": jnp.log(jnp.expm1(
+            jnp.linspace(0.1, 0.5, w).astype(jnp.float32))),  # softplus^-1
+        "w_rnn_out": L.dense_init(ks[5], w, d),
+    }
+
+
+def _block_gate(g, x):
+    """x: (..., w) -> sigmoid(blockdiag(g) x); g: (NB, w/NB, w/NB)."""
+    shape = x.shape
+    xb = x.reshape(shape[:-1] + (NB, shape[-1] // NB))
+    y = jnp.einsum("...bi,bij->...bj", xb.astype(jnp.float32), g)
+    return jax.nn.sigmoid(y).reshape(shape)
+
+
+def _gates(params, xr):
+    r = _block_gate(params["gate_a"], xr)
+    i = _block_gate(params["gate_x"], xr)
+    log_a = -C_FACTOR * jax.nn.softplus(params["a_param"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * \
+        (i * xr.astype(jnp.float32))
+    return a, b
+
+
+def apply_full(params, x, cfg):
+    """x: (B, S, d) -> (y, RGLRUCache)."""
+    dt_ = x.dtype
+    B, S, _ = x.shape
+    gate = jax.nn.gelu((x @ params["w_gate_in"].astype(dt_))
+                       .astype(jnp.float32))
+    xr = x @ params["w_rnn_in"].astype(dt_)
+    # causal depthwise conv4
+    pad = jnp.pad(xr, ((0, 0), (D_CONV - 1, 0), (0, 0)))
+    xc = sum(pad[:, i:i + S, :] * params["conv_w"][i].astype(dt_)
+             for i in range(D_CONV)) + params["conv_b"].astype(dt_)
+    a, b = _gates(params, xc)                       # (B, S, w) f32
+    # h_t = a_t h_{t-1} + b_t  via associative scan on (a, b)
+
+    def combine(p, q):
+        a1, b1 = p
+        a2, b2 = q
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (gate * h).astype(dt_)
+    out = y @ params["w_rnn_out"].astype(dt_)
+    conv_tail = xr[:, -(D_CONV - 1):, :]
+    if S < D_CONV - 1:
+        conv_tail = jnp.pad(xr, ((0, 0), (D_CONV - 1 - S, 0), (0, 0)))
+    return out, RGLRUCache(conv_tail, h[:, -1, :])
+
+
+def init_cache(cfg, batch: int, dtype) -> RGLRUCache:
+    w = cfg.rnn_width or cfg.d_model
+    return RGLRUCache(conv=jnp.zeros((batch, D_CONV - 1, w), dtype),
+                      h=jnp.zeros((batch, w), jnp.float32))
+
+
+def apply_decode(params, x_t, cache: RGLRUCache, cfg):
+    """One step. x_t: (B, 1, d)."""
+    dt_ = x_t.dtype
+    B = x_t.shape[0]
+    gate = jax.nn.gelu((x_t @ params["w_gate_in"].astype(dt_))
+                       .astype(jnp.float32))[:, 0]
+    xr = (x_t @ params["w_rnn_in"].astype(dt_))[:, 0]        # (B, w)
+    win = jnp.concatenate([cache.conv, xr[:, None, :]], axis=1)
+    xc = jnp.einsum("bkw,kw->bw", win, params["conv_w"].astype(dt_)) + \
+        params["conv_b"].astype(dt_)
+    a, b = _gates(params, xc)
+    h = a * cache.h + b
+    y = (gate * h).astype(dt_)
+    out = (y @ params["w_rnn_out"].astype(dt_))[:, None, :]
+    return out, RGLRUCache(win[:, 1:, :], h)

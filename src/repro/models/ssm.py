@@ -1,0 +1,215 @@
+"""Mamba-2 SSD (state-space duality) mixer [arXiv:2405.21060].
+
+Chunked training path: within-chunk terms are dense (Q x Q) matmuls (MXU
+work -- this is the "duality"), across-chunk state is a short scan.  Decode
+path is the O(1)-state recurrence.  TPU notes: chunk length is cfg.ssm.chunk
+(default 256 = two MXU tiles); with sequence parallelism the per-chip
+sequence is a handful of chunks, keeping the (nc, nh, Q, Q) decay tensor in
+the tens of MB.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array      # (B, d_conv-1, conv_channels) trailing inputs
+    h: jax.Array         # (B, nh, head_dim, d_state)
+
+
+def dims(cfg):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nh = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.n_groups * s.d_state
+    return d_in, nh, conv_ch
+
+
+def init(key, cfg):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in, nh, conv_ch = dims(cfg)
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": L.dense_init(ks[0], d, 2 * d_in + 2 * s.n_groups * s.d_state + nh),
+        "conv_w": jax.random.normal(ks[1], (s.d_conv, conv_ch), jnp.float32)
+                  * (s.d_conv ** -0.5),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh).astype(jnp.float32)),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm_scale": jnp.ones((d_in,), jnp.float32),
+        "out_proj": L.dense_init(ks[4], d_in, d),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv1d. x: (B, S, C); w: (K, C)."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    return out + b
+
+
+def _gated_norm(y, z, scale, eps):
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + eps) * scale).astype(y.dtype)
+
+
+def ssd_chunked(xd, log_a, Bm, Cm, chunk: int):
+    """SSD: y_t = C_t^T H_t,  H_t = a_t H_{t-1} + B_t xd_t^T.
+
+    xd: (b, s, nh, hp)  (inputs already scaled by dt)
+    log_a: (b, s, nh)   (per-step log decay, <= 0)
+    Bm, Cm: (b, s, g, n); heads map to groups by nh//g blocks.
+    Returns (b, s, nh, hp) and final state (b, nh, hp, n).
+    """
+    b, s, nh, hp = xd.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    rep = nh // g
+    assert s % chunk == 0, (s, chunk)
+    nc, Q = s // chunk, chunk
+    f32 = jnp.float32
+
+    xd_ = xd.reshape(b, nc, Q, nh, hp).astype(f32)
+    la = log_a.reshape(b, nc, Q, nh).astype(f32)
+    B_ = jnp.repeat(Bm.reshape(b, nc, Q, g, n), rep, axis=3).astype(f32)
+    C_ = jnp.repeat(Cm.reshape(b, nc, Q, g, n), rep, axis=3).astype(f32)
+
+    cum = jnp.cumsum(la, axis=2)                          # (b, nc, Q, nh)
+    # intra-chunk: Y[i] += sum_{j<=i} (C_i.B_j) exp(cum_i - cum_j) xd_j
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (b,nc,Qi,Qj,nh)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    # mask BEFORE exp: the upper triangle holds positive exponents whose
+    # exp overflows; exp(inf)*0 in the cotangent is NaN (classic where-trap)
+    seg = jnp.where(tri[None, None, :, :, None], seg, -1e30)
+    Ld = jnp.exp(seg)
+    CB = jnp.einsum("bcihn,bcjhn->bcijh", C_, B_)          # (b,nc,Qi,Qj,nh)
+    y_intra = jnp.einsum("bcijh,bcijh,bcjhp->bcihp", CB, Ld, xd_)
+
+    # chunk-end states: S_c = sum_j exp(cum_end - cum_j) B_j xd_j^T
+    dec_end = jnp.exp(cum[:, :, -1:, :] - cum)             # (b, nc, Q, nh)
+    S_c = jnp.einsum("bcjh,bcjhn,bcjhp->bchpn", dec_end, B_, xd_)
+
+    # cross-chunk recurrence: H_c = exp(sum la_c) H_{c-1} + S_c (scan)
+    a_chunk = jnp.exp(cum[:, :, -1, :])                    # (b, nc, nh)
+
+    def step(h, inp):
+        a_c, s_c = inp
+        h_new = h * a_c[..., None, None] + s_c
+        return h_new, h                                    # emit H_{c-1}
+    h0 = jnp.zeros((b, nh, hp, n), f32)
+    hT, h_prev = jax.lax.scan(
+        step, h0, (jnp.moveaxis(a_chunk, 1, 0), jnp.moveaxis(S_c, 1, 0)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                    # (b, nc, nh, hp, n)
+
+    # inter-chunk: Y[i] += exp(cum_i) C_i . H_{c-1}
+    y_inter = jnp.einsum("bcih,bcihn,bchpn->bcihp",
+                         jnp.exp(cum), C_, h_prev)
+    y = (y_intra + y_inter).reshape(b, s, nh, hp)
+    return y.astype(xd.dtype), hT
+
+
+def _pick_chunk(s: int, chunk: int) -> int:
+    """Largest divisor of s that is <= the configured chunk."""
+    c = min(chunk, s)
+    while s % c:
+        c -= 1
+    return max(c, 1)
+
+
+def _split_proj(cfg, zxbcdt):
+    s = cfg.ssm
+    d_in, nh, _ = dims(cfg)
+    gn = s.n_groups * s.d_state
+    z, xbc, dt = jnp.split(zxbcdt, [d_in, 2 * d_in + 2 * gn], axis=-1)
+    return z, xbc, dt
+
+
+def apply_full(params, x, cfg):
+    """Training/prefill. x: (B, S, d) -> (y, SSMCache)."""
+    s = cfg.ssm
+    d_in, nh, conv_ch = dims(cfg)
+    gn = s.n_groups * s.d_state
+    dt_ = x.dtype
+    B_, S_, _ = x.shape
+    zxbcdt = x @ params["in_proj"].astype(dt_)
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    xbc = _causal_conv(xbc, params["conv_w"].astype(dt_),
+                       params["conv_b"].astype(dt_))
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(dt_)
+    xs, Bm, Cm = jnp.split(xbc, [d_in, d_in + gn], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])                          # (nh,)
+    xh = xs.reshape(B_, S_, nh, s.head_dim)
+    xd = xh * dt[..., None].astype(dt_)
+    log_a = dt * A                                          # (B, S, nh)
+    Bm = Bm.reshape(B_, S_, s.n_groups, s.d_state)
+    Cm = Cm.reshape(B_, S_, s.n_groups, s.d_state)
+    y, hT = ssd_chunked(xd, log_a, Bm, Cm, _pick_chunk(S_, s.chunk))
+    y = y + params["D"].astype(dt_)[None, None, :, None] * xh
+    y = y.reshape(B_, S_, d_in)
+    y = _gated_norm(y, z, params["norm_scale"], cfg.norm_eps)
+    out = y @ params["out_proj"].astype(dt_)
+    return out, SSMCache(_tail_conv_inputs(cfg, x, params), hT)
+
+
+def _tail_conv_inputs(cfg, x, params):
+    """Last (d_conv-1) pre-activation conv inputs, for decode continuation."""
+    s = cfg.ssm
+    dt_ = x.dtype
+    zxbcdt = x[:, -(s.d_conv - 1):, :] @ params["in_proj"].astype(dt_)
+    _, xbc, _ = _split_proj(cfg, zxbcdt)
+    B_ = x.shape[0]
+    pad = s.d_conv - 1 - xbc.shape[1]
+    if pad > 0:
+        xbc = jnp.pad(xbc, ((0, 0), (pad, 0), (0, 0)))
+    return xbc
+
+
+def init_cache(cfg, batch: int, dtype) -> SSMCache:
+    s = cfg.ssm
+    d_in, nh, conv_ch = dims(cfg)
+    return SSMCache(
+        conv=jnp.zeros((batch, s.d_conv - 1, conv_ch), dtype),
+        h=jnp.zeros((batch, nh, s.head_dim, s.d_state), jnp.float32))
+
+
+def apply_decode(params, x_t, cache: SSMCache, cfg):
+    """One step. x_t: (B, 1, d)."""
+    s = cfg.ssm
+    d_in, nh, conv_ch = dims(cfg)
+    gn = s.n_groups * s.d_state
+    dt_ = x_t.dtype
+    B_ = x_t.shape[0]
+    zxbcdt = x_t @ params["in_proj"].astype(dt_)
+    z, xbc_new, dt = _split_proj(cfg, zxbcdt)
+    # conv over the window [cache.conv, xbc_new]
+    win = jnp.concatenate([cache.conv, xbc_new], axis=1)    # (B, K, C)
+    w = params["conv_w"].astype(dt_)
+    xbc = jnp.einsum("bkc,kc->bc", win, w)[:, None, :] + \
+        params["conv_b"].astype(dt_)
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(dt_)
+    xs, Bm, Cm = jnp.split(xbc, [d_in, d_in + gn], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,1,nh)
+    A = -jnp.exp(params["A_log"])
+    a = jnp.exp(dt * A)[:, 0]                               # (B, nh)
+    xh = xs.reshape(B_, nh, s.head_dim)
+    rep = nh // s.n_groups
+    Bv = jnp.repeat(Bm.reshape(B_, s.n_groups, s.d_state), rep, axis=1)
+    Cv = jnp.repeat(Cm.reshape(B_, s.n_groups, s.d_state), rep, axis=1)
+    xd = (xh * dt[:, 0, :, None].astype(dt_)).astype(jnp.float32)
+    h = cache.h * a[..., None, None] + \
+        jnp.einsum("bhp,bhn->bhpn", xd, Bv.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bhn->bhp", h, Cv.astype(jnp.float32))
+    y = y.astype(dt_) + params["D"].astype(dt_)[None, :, None] * xh
+    y = y.reshape(B_, 1, d_in)
+    y = _gated_norm(y, z, params["norm_scale"], cfg.norm_eps)
+    out = y @ params["out_proj"].astype(dt_)
+    return out, SSMCache(win[:, 1:, :], h)

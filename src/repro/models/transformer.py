@@ -1,0 +1,299 @@
+"""Unified LM: assembles any assigned architecture from its layer plan.
+
+Layer stack = ``lax.scan`` over full plan *periods* (stacked params), with
+remainder layers unrolled -- compile time is O(period), not O(n_layers),
+which is what keeps the 94-layer MoE dry-run cells tractable.  Each period
+is rematerialized (``jax.checkpoint``) during training.
+
+Entry points (all pure; pctx carries mesh/sharding context):
+  init_params(key, cfg)                 -> params pytree
+  train_loss(params, batch, cfg, pctx)  -> (loss, metrics)
+  prefill(params, tokens, cfg, pctx)    -> (last_logits, caches)
+  decode_step(params, token, caches, pos, cfg, pctx) -> (logits, caches)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Tuple
+
+from jax.ad_checkpoint import checkpoint_name as _checkpoint_name
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import ParallelCtx, constrain
+from . import layers as L
+from . import attention, moe, ssm, rglru
+
+
+# ---------------------------------------------------------------------------
+# Sub-layer (mixer + mlp)
+# ---------------------------------------------------------------------------
+
+def _init_sublayer(key, cfg, mixer: str, mlp: str):
+    kmix, kmlp = jax.random.split(key)
+    p: dict[str, Any] = {"norm1": L.rmsnorm_init(cfg.d_model)}
+    if mixer in ("attn", "attn_local"):
+        p["mixer"] = attention.init(kmix, cfg)
+    elif mixer == "ssd":
+        p["mixer"] = ssm.init(kmix, cfg)
+    elif mixer == "rglru":
+        p["mixer"] = rglru.init(kmix, cfg)
+    else:
+        raise ValueError(mixer)
+    if mlp != "none":
+        p["norm2"] = L.rmsnorm_init(cfg.d_model)
+        if mlp in ("swiglu", "gated_mlp"):
+            p["mlp"] = L.mlp_init(kmlp, cfg.d_model, cfg.d_ff)
+        elif mlp == "moe":
+            p["mlp"] = moe.init(kmlp, cfg)
+        else:
+            raise ValueError(mlp)
+    return p
+
+
+def _act_spec(pctx):
+    return (pctx.batch_axes, pctx.tp_axis if pctx.sp else None, None)
+
+
+def _apply_sublayer_full(p, x, cfg, pctx, mixer: str, mlp: str):
+    """Returns (x, cache, aux)."""
+    h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if mixer in ("attn", "attn_local"):
+        y, cache = attention.apply_full(p["mixer"], h, cfg, pctx,
+                                        local=(mixer == "attn_local"))
+    elif mixer == "ssd":
+        y, cache = ssm.apply_full(p["mixer"], h, cfg)
+    elif mixer == "rglru":
+        y, cache = rglru.apply_full(p["mixer"], h, cfg)
+    x = x + y
+    x = constrain(x, pctx, _act_spec(pctx))
+    aux = jnp.float32(0)
+    if mlp != "none":
+        h = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        if mlp == "moe":
+            y, aux = moe.apply(p["mlp"], h, cfg, pctx)
+            # Named for selective-remat policies.  Measured (Perf iteration
+            # 9, REFUTED): saving only the output does NOT reduce the MoE
+            # recompute traffic -- the transposed layer still replays the
+            # dispatch to produce expert-weight grads; saving the dispatch
+            # internals instead costs ~336 MB/chip/layer, which does not
+            # fit.  Kept because downstream consumers (logit head) avoid
+            # one replay, and it documents the experiment.
+            y = _checkpoint_name(y, "moe_out")
+        else:
+            y = L.mlp_apply(p["mlp"], h,
+                            act=("gelu" if mlp == "gated_mlp" else "silu"))
+        x = x + y
+        x = constrain(x, pctx, _act_spec(pctx))
+    return x, cache, aux
+
+
+def _apply_sublayer_decode(p, x_t, cache, pos, cfg, pctx, mixer: str,
+                           mlp: str):
+    h = L.rmsnorm(p["norm1"], x_t, cfg.norm_eps)
+    if mixer in ("attn", "attn_local"):
+        y, cache = attention.apply_decode(p["mixer"], h, cache, pos, cfg,
+                                          pctx,
+                                          local=(mixer == "attn_local"))
+    elif mixer == "ssd":
+        y, cache = ssm.apply_decode(p["mixer"], h, cache, cfg)
+    elif mixer == "rglru":
+        y, cache = rglru.apply_decode(p["mixer"], h, cache, cfg)
+    x_t = x_t + y
+    if mlp != "none":
+        h = L.rmsnorm(p["norm2"], x_t, cfg.norm_eps)
+        if mlp == "moe":
+            y, _ = moe.apply(p["mlp"], h, cfg, pctx)
+        else:
+            y = L.mlp_apply(p["mlp"], h,
+                            act=("gelu" if mlp == "gated_mlp" else "silu"))
+        x_t = x_t + y
+    return x_t, cache
+
+
+def _init_cache_sublayer(cfg, mixer: str, batch: int, max_len: int, dtype):
+    if mixer in ("attn", "attn_local"):
+        return attention.init_cache(cfg, batch, max_len, dtype)
+    if mixer == "ssd":
+        return ssm.init_cache(cfg, batch, dtype)
+    if mixer == "rglru":
+        return rglru.init_cache(cfg, batch, dtype)
+    raise ValueError(mixer)
+
+
+# ---------------------------------------------------------------------------
+# Whole-model init
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg):
+    ks = jax.random.split(key, 4 + cfg.n_layers)
+    params = {
+        "embed": L.embed_init(ks[0], cfg.vocab_size, cfg.d_model,
+                              cfg.n_codebooks),
+        "head": L.head_init(ks[1], cfg),
+        "final_norm": L.rmsnorm_init(cfg.d_model),
+    }
+    n_full = cfg.n_full_periods
+    if n_full:
+        periods = []
+        for i in range(n_full):
+            layer_keys = jax.random.split(ks[3 + i], cfg.period)
+            periods.append(tuple(
+                _init_sublayer(layer_keys[j], cfg, *cfg.plan[j])
+                for j in range(cfg.period)))
+        params["periods"] = jax.tree.map(lambda *xs: jnp.stack(xs), *periods)
+    else:
+        params["periods"] = None
+    tail = []
+    for j, (mixer, mlp) in enumerate(cfg.tail_layers):
+        tail.append(_init_sublayer(ks[3 + n_full + j], cfg, mixer, mlp))
+    params["tail"] = tuple(tail)
+    return params
+
+
+def init_caches(cfg, batch: int, max_len: int, dtype):
+    """Caches mirroring the params layout: stacked periods + tail list."""
+    def one_period():
+        return tuple(_init_cache_sublayer(cfg, mixer, batch, max_len, dtype)
+                     for mixer, _ in cfg.plan)
+    n_full = cfg.n_full_periods
+    periods = None
+    if n_full:
+        ps = [one_period() for _ in range(n_full)]
+        periods = jax.tree.map(lambda *xs: jnp.stack(xs), *ps)
+    tail = tuple(_init_cache_sublayer(cfg, mixer, batch, max_len, dtype)
+                 for mixer, _ in cfg.tail_layers)
+    return {"periods": periods, "tail": tail}
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _backbone_full(params, x, cfg, pctx, *, want_caches: bool):
+    """Shared by train and prefill.  Returns (x, caches|None, aux_total)."""
+    aux_total = jnp.float32(0)
+    caches_periods = None
+
+    def period_fn(carry, period_params):
+        x, aux = carry
+        caches = []
+        for j, (mixer, mlp) in enumerate(cfg.plan):
+            x, cache, aux_j = _apply_sublayer_full(
+                period_params[j], x, cfg, pctx, mixer, mlp)
+            caches.append(cache)
+            aux = aux + aux_j
+        return (x, aux), tuple(caches)
+
+    if params["periods"] is not None:
+        body = period_fn
+        if pctx.remat:
+            policy = None
+            if any(mlp == "moe" for _, mlp in cfg.plan):
+                policy = jax.checkpoint_policies.save_only_these_names(
+                    "moe_out")
+            elif pctx.remat_policy == "dots":
+                policy = jax.checkpoint_policies.\
+                    dots_with_no_batch_dims_saveable
+            body = jax.checkpoint(period_fn, prevent_cse=False,
+                                  policy=policy)
+        if pctx.scan_unroll:
+            n_full = jax.tree.leaves(params["periods"])[0].shape[0]
+            ys = []
+            carry = (x, aux_total)
+            for i in range(n_full):
+                carry, y = body(carry, jax.tree.map(
+                    lambda v: v[i], params["periods"]))
+                ys.append(y)
+            (x, aux_total) = carry
+            caches_periods = jax.tree.map(lambda *vs: jnp.stack(vs), *ys) \
+                if want_caches else ys[-1]
+        else:
+            (x, aux_total), caches_periods = jax.lax.scan(
+                body, (x, aux_total), params["periods"])
+    caches_tail = []
+    for j, (mixer, mlp) in enumerate(cfg.tail_layers):
+        x, cache, aux_j = _apply_sublayer_full(params["tail"][j], x, cfg,
+                                               pctx, mixer, mlp)
+        caches_tail.append(cache)
+        aux_total = aux_total + aux_j
+    caches = None
+    if want_caches:
+        caches = {"periods": caches_periods, "tail": tuple(caches_tail)}
+    return x, caches, aux_total
+
+
+def train_loss(params, batch, cfg, pctx: ParallelCtx):
+    """batch: {"tokens": (B,S) or (B,S,ncb), "labels": same}."""
+    tokens, labels = batch["tokens"], batch["labels"]
+    x = L.embed_apply(params["embed"], tokens, cfg)
+    x = constrain(x, pctx, _act_spec(pctx))
+    x, _, aux = _backbone_full(params, x, cfg, pctx, want_caches=False)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if pctx.fused_ce and cfg.logit_softcap is None:
+        # chunked fused softmax-CE: never materializes (B, S, V) logits
+        loss = L.fused_head_loss(params["head"], params["embed"], x, labels,
+                                 cfg, chunk=pctx.ce_chunk)
+    else:
+        logits = L.head_apply(params["head"], params["embed"], x, cfg)
+        logits = constrain(logits, pctx,
+                           (pctx.batch_axes, None, pctx.tp_axis)
+                           if not cfg.n_codebooks else
+                           (pctx.batch_axes, None, None, pctx.tp_axis))
+        loss = L.cross_entropy(logits, labels)
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.router_aux_weight * aux
+    metrics = {"loss": loss, "aux": aux}
+    return loss, metrics
+
+
+def prefill(params, tokens, cfg, pctx: ParallelCtx):
+    """Returns (last-position logits, caches at len S)."""
+    x = L.embed_apply(params["embed"], tokens, cfg)
+    x = constrain(x, pctx, _act_spec(pctx))
+    x, caches, _ = _backbone_full(params, x, cfg, pctx, want_caches=True)
+    x_last = x[:, -1:, :]
+    x_last = L.rmsnorm(params["final_norm"], x_last, cfg.norm_eps)
+    logits = L.head_apply(params["head"], params["embed"], x_last, cfg)
+    return logits, caches
+
+
+def decode_step(params, token, caches, pos, cfg, pctx: ParallelCtx):
+    """token: (B, 1) or (B, 1, ncb); pos: scalar int (0-based write slot).
+
+    Returns (logits (B, 1, V...), updated caches)."""
+    x = L.embed_apply(params["embed"], token, cfg)
+
+    def period_fn(x, xs):
+        period_params, period_caches = xs
+        new_caches = []
+        for j, (mixer, mlp) in enumerate(cfg.plan):
+            x, cache = _apply_sublayer_decode(
+                period_params[j], x, period_caches[j], pos, cfg, pctx,
+                mixer, mlp)
+            new_caches.append(cache)
+        return x, tuple(new_caches)
+
+    new_period_caches = None
+    if params["periods"] is not None:
+        if pctx.scan_unroll:
+            n_full = jax.tree.leaves(params["periods"])[0].shape[0]
+            ys = []
+            for i in range(n_full):
+                x, y = period_fn(x, jax.tree.map(
+                    lambda v: v[i], (params["periods"], caches["periods"])))
+                ys.append(y)
+            new_period_caches = jax.tree.map(lambda *vs: jnp.stack(vs), *ys)
+        else:
+            x, new_period_caches = jax.lax.scan(
+                period_fn, x, (params["periods"], caches["periods"]))
+    new_tail = []
+    for j, (mixer, mlp) in enumerate(cfg.tail_layers):
+        x, cache = _apply_sublayer_decode(
+            params["tail"][j], x, caches["tail"][j], pos, cfg, pctx,
+            mixer, mlp)
+        new_tail.append(cache)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.head_apply(params["head"], params["embed"], x, cfg)
+    return logits, {"periods": new_period_caches, "tail": tuple(new_tail)}

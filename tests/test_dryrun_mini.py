@@ -1,0 +1,42 @@
+"""Dry-run smoke: one real cell per step-kind compiles at 512 forced
+devices in a subprocess (the full 40-cell x 2-mesh sweep is the
+`results/dryrun_*.jsonl` artifact; this guards the machinery in CI)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _dryrun(args, timeout=900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)   # dryrun sets its own
+    r = subprocess.run([sys.executable, "-m", "repro.launch.dryrun"] + args,
+                       env=env, capture_output=True, text=True,
+                       timeout=timeout)
+    assert r.returncode == 0, f"stdout:\n{r.stdout[-3000:]}\n" \
+                              f"stderr:\n{r.stderr[-3000:]}"
+    recs = [json.loads(l) for l in r.stdout.splitlines()
+            if l.startswith("{")]
+    assert recs and all("error" not in x for x in recs)
+    return recs
+
+
+def test_dryrun_decode_cell():
+    recs = _dryrun(["--arch", "qwen3-0.6b", "--shape", "decode_32k"])
+    r = recs[0]
+    assert r["chips"] == 256
+    assert r["hlo_flops"] > 0
+    assert r["collectives"]["total_bytes"] > 0
+
+
+def test_dryrun_multipod_train_cell():
+    recs = _dryrun(["--arch", "qwen3-0.6b", "--shape", "train_4k",
+                    "--multi-pod"])
+    r = recs[0]
+    assert r["chips"] == 512
+    assert r["mesh"] == "2x16x16"

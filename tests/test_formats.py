@@ -1,0 +1,94 @@
+"""Format round-trips + invariants (unit + hypothesis property tests)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.formats import CSR, BCSR, ELL, csr_to_bcsr
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def _rand_sparse(rng, m, n, density):
+    x = rng.normal(size=(m, n)).astype(np.float32)
+    mask = rng.random((m, n)) < density
+    return np.where(mask, x, 0.0)
+
+
+@given(m=st.integers(1, 24), n=st.integers(1, 24),
+       density=st.floats(0.0, 0.6), seed=st.integers(0, 10))
+def test_csr_dense_roundtrip(m, n, density, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand_sparse(rng, m, n, density)
+    c = CSR.from_dense(jnp.asarray(x))
+    assert np.allclose(np.asarray(c.to_dense()), x)
+    assert int(c.nnz) == int((x != 0).sum())
+    # indptr consistency
+    ip = np.asarray(c.indptr)
+    assert ip[0] == 0 and ip[-1] == int(c.nnz)
+    assert np.all(np.diff(ip) >= 0)
+
+
+@given(seed=st.integers(0, 20))
+def test_csr_sorted_within_rows(seed):
+    rng = np.random.default_rng(seed)
+    x = _rand_sparse(rng, 12, 17, 0.4)
+    c = CSR.from_dense(jnp.asarray(x))
+    cols = np.asarray(c.indices)
+    ip = np.asarray(c.indptr)
+    for i in range(12):
+        row = cols[ip[i]:ip[i + 1]]
+        assert np.all(np.diff(row) > 0), "row cols strictly increasing"
+
+
+def test_csr_from_numpy_coo_duplicates():
+    rows = np.array([0, 0, 1, 0])
+    cols = np.array([1, 1, 2, 3])
+    vals = np.array([1.0, 2.0, 3.0, 4.0], np.float32)
+    c = CSR.from_numpy_coo(rows, cols, vals, (2, 4))
+    d = np.asarray(c.to_dense())
+    assert d[0, 1] == 3.0 and d[1, 2] == 3.0 and d[0, 3] == 4.0
+    assert int(c.nnz) == 3
+
+
+def test_sort_rows_after_permutation():
+    rng = np.random.default_rng(3)
+    x = _rand_sparse(rng, 8, 8, 0.5)
+    c = CSR.from_dense(jnp.asarray(x))
+    # scramble within rows by reversing the live prefix per row
+    perm = np.arange(c.cap)
+    ip = np.asarray(c.indptr)
+    for i in range(8):
+        perm[ip[i]:ip[i + 1]] = perm[ip[i]:ip[i + 1]][::-1]
+    scr = CSR(c.indptr, c.indices[perm], c.data[perm], c.nnz, c.shape,
+              sorted_cols=False)
+    srt = scr.sort_rows()
+    assert np.allclose(np.asarray(srt.to_dense()), x)
+    assert np.array_equal(np.asarray(srt.indices), np.asarray(c.indices))
+
+
+@given(bm=st.sampled_from([2, 4, 8]), bn=st.sampled_from([2, 4, 8]),
+       seed=st.integers(0, 10))
+def test_bcsr_roundtrip(bm, bn, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand_sparse(rng, 16, 24, 0.2)
+    b = BCSR.from_dense(jnp.asarray(x), (bm, bn))
+    assert np.allclose(np.asarray(b.to_dense()), x)
+
+
+def test_ell_roundtrip():
+    rng = np.random.default_rng(0)
+    x = _rand_sparse(rng, 10, 12, 0.3)
+    c = CSR.from_dense(jnp.asarray(x))
+    width = int(np.max((x != 0).sum(axis=1)))
+    e = ELL.from_csr(c, max(width, 1))
+    assert np.allclose(np.asarray(e.to_dense()), x)
+
+
+def test_csr_to_bcsr():
+    rng = np.random.default_rng(1)
+    x = _rand_sparse(rng, 16, 16, 0.2)
+    c = CSR.from_dense(jnp.asarray(x))
+    b = csr_to_bcsr(c, (4, 4))
+    assert np.allclose(np.asarray(b.to_dense()), x)

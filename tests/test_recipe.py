@@ -1,0 +1,72 @@
+"""Recipe (paper section 4.2.4 + Table 4): cost model + selector."""
+import numpy as np
+import pytest
+
+from repro.core.recipe import (SpGEMMStats, choose_algorithm_from_stats,
+                               cost_hash, cost_heap, model_costs,
+                               measure_stats, choose_algorithm)
+from repro.data.rmat import rmat_csr
+
+
+def _stats(**kw):
+    base = dict(n_rows=1000, n_cols=1000, nnz_a=16_000, flop=256_000,
+                nnz_c_est=128_000, max_row_flop=64, mean_row_nnz_a=16,
+                row_skew=2.0, compression_ratio=2.0, density_ef=16.0)
+    base.update(kw)
+    return SpGEMMStats(**base)
+
+
+def test_eq1_eq2_crossover():
+    """Hash wins when flop(c)/nnz(c) (compression ratio) is large; heap is
+    competitive when rows are tiny -- paper section 4.2.4."""
+    dense_stats = _stats(compression_ratio=16.0, nnz_c_est=16_000)
+    sparse_stats = _stats(density_ef=2.0, mean_row_nnz_a=2, flop=4_000,
+                          nnz_c_est=3_900, compression_ratio=1.02)
+    assert cost_hash(dense_stats, False) < cost_heap(dense_stats)
+    # in the very sparse regime the ordering tightens (log factor ~1)
+    mc = model_costs(sparse_stats, sorted_output=True)
+    assert mc["heap"] <= mc["hash"] * 2.0
+
+
+def test_table4_lxu():
+    assert choose_algorithm_from_stats(_stats(compression_ratio=1.5), True,
+                                       "LxU") == "heap"
+    assert choose_algorithm_from_stats(_stats(compression_ratio=4.0), True,
+                                       "LxU") == "hash"
+
+
+def test_table4_axa_sparse_uniform():
+    s = _stats(density_ef=4.0, row_skew=2.0)
+    assert choose_algorithm_from_stats(s, True, "AxA") == "heap"
+    assert choose_algorithm_from_stats(s, False, "AxA") == "hash_vector"
+
+
+def test_table4_axa_dense_skewed():
+    s = _stats(density_ef=16.0, row_skew=32.0)
+    assert choose_algorithm_from_stats(s, True, "AxA") == "hash"
+    assert choose_algorithm_from_stats(s, False, "AxA") == "hash"
+
+
+def test_table4_tall_skinny():
+    s = _stats(density_ef=16.0)
+    assert choose_algorithm_from_stats(s, False, "tall_skinny") == "hash"
+    assert choose_algorithm_from_stats(s, True, "tall_skinny") == "hash_vector"
+
+
+def test_measure_stats_on_real_inputs():
+    a = rmat_csr(5, 3, "G500", seed=0)
+    b = rmat_csr(5, 3, "G500", seed=1)
+    s = measure_stats(a, b)
+    assert s.n_rows == 32 and s.flop > 0
+    assert s.row_skew >= 1.0
+    algo = choose_algorithm(a, b)
+    assert algo in ("hash", "hash_vector", "heap", "esc")
+
+
+def test_skewed_has_higher_skew_stat():
+    er = rmat_csr(7, 8, "ER", seed=0)
+    g5 = rmat_csr(7, 8, "G500", seed=0)
+    s_er = measure_stats(er, er)
+    s_g5 = measure_stats(g5, g5)
+    assert s_g5.row_skew > s_er.row_skew, \
+        "G500 (power law) must look more skewed than ER"

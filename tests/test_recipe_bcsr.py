@@ -1,0 +1,82 @@
+"""TPU block-density extension of the recipe + BCSR dispatch path."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CSR, spgemm
+from repro.core.recipe import (block_density_of, measure_stats,
+                               choose_algorithm, MXU_MIN_TILE_DENSITY)
+
+settings.register_profile("ci", max_examples=10, deadline=None)
+settings.load_profile("ci")
+
+
+def _block_clustered(rng, m, n, bm, bn, p_tile, fill):
+    occ = rng.random((m // bm, n // bn)) < p_tile
+    x = rng.uniform(0.5, 1.5, (m, n)).astype(np.float32)
+    tile_mask = np.kron(occ, np.ones((bm, bn))) > 0
+    elem_mask = rng.random((m, n)) < fill
+    return np.where(tile_mask & elem_mask, x, 0.0)
+
+
+def test_block_density_probe():
+    rng = np.random.default_rng(0)
+    dense_tiles = _block_clustered(rng, 64, 64, 8, 8, 0.3, 1.0)
+    a = CSR.from_dense(jnp.asarray(dense_tiles))
+    assert block_density_of(a) > 0.9
+    scattered = np.zeros((64, 64), np.float32)
+    idx = rng.choice(64 * 64, 100, replace=False)
+    scattered.ravel()[idx] = 1.0
+    b = CSR.from_dense(jnp.asarray(scattered))
+    assert block_density_of(b) < 0.25
+
+
+def test_recipe_prefers_bcsr_for_clustered():
+    rng = np.random.default_rng(1)
+    a = CSR.from_dense(jnp.asarray(_block_clustered(rng, 64, 64, 8, 8,
+                                                    0.3, 1.0)))
+    assert choose_algorithm(a, a, probe_blocks=True) == "bcsr"
+    # scattered input keeps the scalar-regime choice
+    scattered = np.zeros((64, 64), np.float32)
+    idx = rng.choice(64 * 64, 200, replace=False)
+    scattered.ravel()[idx] = 1.0
+    b = CSR.from_dense(jnp.asarray(scattered))
+    assert choose_algorithm(b, b, probe_blocks=True) != "bcsr"
+
+
+@given(seed=st.integers(0, 8))
+def test_bcsr_dispatch_matches_oracle(seed):
+    rng = np.random.default_rng(seed)
+    ad = _block_clustered(rng, 32, 32, 8, 8, 0.4, 1.0)
+    bd = _block_clustered(rng, 32, 32, 8, 8, 0.4, 1.0)
+    a = CSR.from_dense(jnp.asarray(ad))
+    b = CSR.from_dense(jnp.asarray(bd))
+    cd = ad @ bd
+    cap = max(int((cd != 0).sum()), 1) + 8
+    c = spgemm(a, b, cap_c=cap, algorithm="bcsr", n_bins=2)
+    assert np.allclose(np.asarray(c.to_dense()), cd, atol=1e-2)
+
+
+@given(m=st.sampled_from([8, 16]), n=st.sampled_from([8, 16, 24]),
+       k=st.sampled_from([8, 16]), density=st.floats(0.05, 0.6),
+       seed=st.integers(0, 6))
+def test_hash_equals_esc_on_arbitrary_patterns(m, n, k, density, seed):
+    """Hash kernel == ESC on arbitrary (non-graph) rectangular patterns,
+    including empty rows/columns."""
+    rng = np.random.default_rng(seed)
+    ad = np.where(rng.random((m, k)) < density,
+                  rng.normal(size=(m, k)), 0).astype(np.float32)
+    bd = np.where(rng.random((k, n)) < density,
+                  rng.normal(size=(k, n)), 0).astype(np.float32)
+    ad[m // 2] = 0          # force an empty row
+    bd[:, n // 2] = 0       # force an empty column
+    a = CSR.from_dense(jnp.asarray(ad))
+    b = CSR.from_dense(jnp.asarray(bd))
+    cd = ad @ bd
+    cap = max(int((cd != 0).sum()), 1) + 8
+    c_hash = spgemm(a, b, cap_c=cap, algorithm="hash", n_bins=2)
+    c_esc = spgemm(a, b, cap_c=cap, algorithm="esc",
+                   flop_cap=max(m * k * n, 1))
+    assert np.allclose(np.asarray(c_hash.to_dense()), cd, atol=1e-4)
+    assert np.allclose(np.asarray(c_esc.to_dense()), cd, atol=1e-4)

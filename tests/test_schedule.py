@@ -1,0 +1,66 @@
+"""Property tests for the load-balanced scheduler (paper C1, Fig. 6)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import schedule as sched
+from repro.core.formats import CSR
+from repro.data.rmat import rmat_csr
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@given(seed=st.integers(0, 50), n_bins=st.sampled_from([1, 2, 4, 8, 16]))
+def test_bins_invariants(seed, n_bins):
+    rng = np.random.default_rng(seed)
+    flop = jnp.asarray(rng.integers(0, 50, size=32).astype(np.int32))
+    off = np.asarray(sched.rows_to_bins(flop, n_bins))
+    assert off[0] == 0 and off[-1] == 32
+    assert np.all(np.diff(off) >= 0)
+    total = int(flop.sum())
+    bf = np.asarray(sched.bin_flop(flop, jnp.asarray(off)))
+    assert bf.sum() == total
+    # balance bound: every bin <= ceil(total/n_bins) + max_row_flop
+    bound = -(-total // n_bins) + int(flop.max()) if total else 0
+    assert bf.max() <= max(bound, 0) + 1
+
+
+@given(seed=st.integers(0, 20))
+def test_flops_per_row_matches_bruteforce(seed):
+    a = rmat_csr(5, 3, "G500", seed=seed)
+    b = rmat_csr(5, 3, "ER", seed=seed + 1)
+    flop = np.asarray(sched.flops_per_row(a, b))
+    ad = (np.asarray(a.to_dense()) != 0)
+    bd = (np.asarray(b.to_dense()) != 0)
+    expect = (ad.astype(np.int64) @ bd.sum(axis=1)).astype(np.int64)
+    assert np.array_equal(flop, expect)
+
+
+def test_lowbnd():
+    vec = jnp.asarray([1, 3, 3, 7, 10])
+    assert int(sched.lowbnd(vec, 3)) == 1
+    assert int(sched.lowbnd(vec, 4)) == 3
+    assert int(sched.lowbnd(vec, 0)) == 0
+    assert int(sched.lowbnd(vec, 11)) == 5
+
+
+def test_lowest_p2():
+    assert sched.lowest_p2(1) == 1
+    assert sched.lowest_p2(2) == 2
+    assert sched.lowest_p2(3) == 4
+    assert sched.lowest_p2(1000) == 1024
+
+
+@given(seed=st.integers(0, 10))
+def test_max_flop_per_bin_row_bounds_table(seed):
+    a = rmat_csr(5, 4, "G500", seed=seed)
+    b = rmat_csr(5, 4, "G500", seed=seed + 1)
+    flop, offsets, tsize = sched.make_schedule(a, b, 4)
+    flop, offsets, tsize = (np.asarray(flop), np.asarray(offsets),
+                            np.asarray(tsize))
+    for t in range(4):
+        rows = range(offsets[t], offsets[t + 1])
+        if len(list(rows)):
+            m = max(flop[r] for r in rows)
+            assert tsize[t] >= min(m, b.n_cols)

@@ -1,0 +1,104 @@
+"""Training substrate: optimizer, microbatching, compression, loop."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.parallel.sharding import single_device_ctx
+from repro.train import optimizer as opt
+from repro.train import step as step_lib
+from repro.train import loop as loop_lib
+from repro.data.lm_synthetic import DataPipeline
+
+CFG = reduced(ARCHS["qwen3-0.6b"], d_model=64, vocab=64)
+PCTX = single_device_ctx(remat=False, attn_impl="full")
+OCFG = opt.AdamWConfig(lr=1e-2, warmup_steps=2, total_steps=50)
+
+
+def test_int8_quantize_roundtrip():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(37, 5))
+                    .astype(np.float32))
+    q = opt._quantize(x)
+    y = opt._dequantize(q)
+    assert y.shape == x.shape
+    # per-block absmax int8: relative error bounded by ~1/127 of block max
+    err = np.abs(np.asarray(y - x))
+    assert err.max() <= float(jnp.abs(x).max()) / 127 + 1e-6
+
+
+@pytest.mark.parametrize("state_dtype", ["float32", "bfloat16", "int8"])
+def test_optimizer_state_dtypes(state_dtype):
+    ocfg = opt.AdamWConfig(lr=1e-2, warmup_steps=1, state_dtype=state_dtype)
+    params_f32 = {"w": jnp.ones((8, 8)), "b": jnp.zeros((8,))}
+    params, st = opt.init(params_f32, ocfg)
+    assert params["w"].dtype == jnp.bfloat16  # working params (iter 8)
+    grads = {"w": jnp.full((8, 8), 0.1), "b": jnp.full((8,), 0.1)}
+    p2, st2, m = opt.update(grads, st, params, ocfg)
+    assert int(st2.step) == 1
+    # the f32 master always moves; the bf16 working copy moves when the
+    # update exceeds a bf16 ulp (warmup_steps=1 makes it large enough)
+    assert float(jnp.abs(st2.master["w"] - 1.0).max()) > 0
+    assert float(jnp.abs(p2["w"] - params["w"]).max()) > 0
+    assert bool(jnp.isfinite(m["grad_norm"]))
+
+
+def test_microbatch_equivalence():
+    """2-microbatch accumulated grads == full-batch grads.  Uses the pure
+    f32 parameter path so the equality is exact (bf16 working params round
+    each microbatch's cotangents, which Adam's step-1 sign behaviour then
+    amplifies -- not an accumulation bug)."""
+    ocfg = opt.AdamWConfig(lr=1e-2, warmup_steps=2, total_steps=50,
+                           param_dtype="float32")
+    key = jax.random.PRNGKey(0)
+    data = DataPipeline(CFG, 4, 32)
+    batch = data.batch(0)
+    s1 = step_lib.init_state(key, CFG, ocfg)
+    s2 = step_lib.init_state(key, CFG, ocfg)
+    t1 = step_lib.make_train_step(CFG, PCTX, ocfg, n_microbatches=1)
+    t2 = step_lib.make_train_step(CFG, PCTX, ocfg, n_microbatches=2)
+    s1b, m1 = jax.jit(t1)(s1, batch)
+    s2b, m2 = jax.jit(t2)(s2, batch)
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-4
+    d = max(float(jnp.abs(a - b).max()) for a, b in
+            zip(jax.tree.leaves(s1b.params), jax.tree.leaves(s2b.params)))
+    assert d < 1e-4
+
+
+@pytest.mark.parametrize("compression", ["bf16", "int8_ef"])
+def test_compressed_training_converges(compression):
+    ocfg = opt.AdamWConfig(lr=1e-2, warmup_steps=2, total_steps=40)
+    lcfg = loop_lib.LoopConfig(total_steps=25, ckpt_every=1000, log_every=5,
+                               global_batch=4, seq_len=32,
+                               grad_compression=compression)
+    _, hist = loop_lib.run(CFG, PCTX, ocfg, lcfg)
+    assert hist[-1]["loss"] < hist[0]["loss"], compression
+
+
+def test_error_feedback_buffer_updates():
+    key = jax.random.PRNGKey(1)
+    st = step_lib.init_state(key, CFG, OCFG, grad_compression="int8_ef")
+    data = DataPipeline(CFG, 4, 32)
+    t = step_lib.make_train_step(CFG, PCTX, OCFG,
+                                 grad_compression="int8_ef")
+    st2, _ = jax.jit(t)(st, data.batch(0))
+    ef_norm = sum(float(jnp.abs(x.astype(jnp.float32)).sum())
+                  for x in jax.tree.leaves(st2.ef))
+    assert ef_norm > 0, "EF buffer should hold quantization residual"
+
+
+def test_lr_schedule():
+    ocfg = opt.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    assert float(opt.lr_schedule(ocfg, jnp.int32(5))) == pytest.approx(0.5)
+    assert float(opt.lr_schedule(ocfg, jnp.int32(10))) == pytest.approx(1.0)
+    assert float(opt.lr_schedule(ocfg, jnp.int32(100))) == pytest.approx(0.1)
+
+
+def test_data_pipeline_determinism():
+    d1 = DataPipeline(CFG, 4, 16, seed=3)
+    d2 = DataPipeline(CFG, 4, 16, seed=3)
+    b1, b2 = d1.batch(7), d2.batch(7)
+    assert np.array_equal(np.asarray(b1["tokens"]), np.asarray(b2["tokens"]))
+    b3 = d1.batch(8)
+    assert not np.array_equal(np.asarray(b1["tokens"]),
+                              np.asarray(b3["tokens"]))
