@@ -1,0 +1,117 @@
+"""Graph-workload benchmarks for the masked/semiring SpGEMM layer
+(paper sections 5.5-5.6; EXPERIMENTS.md section Graph workloads).
+
+Three trend claims made measurable:
+
+  * ``graph,masked_vs_unmasked``: the section 5.6 triangle count as one
+    masked product vs the unmasked wedge product + host-side filter.  The
+    masked path should win whenever the mask prunes a large share of the
+    wedge flop (derived column reports the prune fraction).
+  * ``graph,sorted_vs_unsorted``: the C8 sortedness finding under the
+    boolean semiring -- the same product emitted in hash (select) order vs
+    with the explicit sort epilogue.
+  * ``graph,bfs``: masked-frontier boolean SpGEMM hops vs the dense
+    tall-skinny SpMM frontier stack of section 5.5.
+
+All rows go through ``benchmarks.common.emit`` (name,us_per_call,derived).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (CSR, spgemm_esc, spgemm_heap, spgemm_hash_jnp, spmm,
+                        symbolic)
+from repro.core.spgemm import symbolic_flops
+from repro.data.rmat import rmat_csr, symmetrize, triangular_split
+from .common import bench, emit, flops_rate
+
+
+def _graph(scale: int, ef: int, preset: str, seed: int):
+    a = symmetrize(rmat_csr(scale, ef, preset, seed=seed))
+    L, U, adj = triangular_split(a, return_adjacency=True)
+    return a, L, U, adj
+
+
+def _heap_caps(L, U, mask=None, complement=False):
+    rn, _, _, _ = symbolic(L, U, mask=mask, complement_mask=complement)
+    rc = int(np.asarray(rn).max()) + 1
+    kw = int(np.asarray(L.row_nnz()).max()) + 1
+    return rc, kw
+
+
+def masked_vs_unmasked(quick=True):
+    """Triangle counting: masked product vs unmasked product + filter."""
+    scales = (6,) if quick else (6, 7)
+    for preset in ("ER", "G500"):
+        for sc in scales:
+            a, L, U, adj = _graph(sc, 8, preset, seed=sc)
+            flop = int(np.asarray(symbolic_flops(L, U)).sum())
+            rn_full, _, _, _ = symbolic(L, U)
+            rn_mask, _, _, _ = symbolic(L, U, mask=adj)
+            cap_full = int(np.asarray(rn_full).sum()) + 8
+            cap_mask = int(np.asarray(rn_mask).sum()) + 8
+            prune = 1.0 - cap_mask / max(cap_full, 1)
+            tag = f"graph,masked_vs_unmasked,{preset},scale{sc}"
+            for algo, run_m, run_u in (
+                ("esc",
+                 lambda: spgemm_esc(L, U, cap_c=cap_mask, mask=adj),
+                 lambda: spgemm_esc(L, U, cap_c=cap_full)),
+                ("hash",
+                 lambda: spgemm_hash_jnp(L, U, cap_c=cap_mask, mask=adj),
+                 lambda: spgemm_hash_jnp(L, U, cap_c=cap_full)),
+            ):
+                t_m = bench(run_m, iters=2)
+                t_u = bench(run_u, iters=2)
+                emit(f"{tag},{algo},masked", t_m,
+                     f"{flops_rate(flop, t_m)};prune={prune:.2f}")
+                emit(f"{tag},{algo},unmasked", t_u, flops_rate(flop, t_u))
+            # heap: masked row capacity shrinks with the mask
+            rc_m, kw = _heap_caps(L, U, mask=adj)
+            rc_u, _ = _heap_caps(L, U)
+            t_m = bench(lambda: spgemm_heap(L, U, row_cap=rc_m, k_width=kw,
+                                            mask=adj), iters=2)
+            t_u = bench(lambda: spgemm_heap(L, U, row_cap=rc_u, k_width=kw),
+                        iters=2)
+            emit(f"{tag},heap,masked", t_m,
+                 f"{flops_rate(flop, t_m)};row_cap={rc_m}")
+            emit(f"{tag},heap,unmasked", t_u,
+                 f"{flops_rate(flop, t_u)};row_cap={rc_u}")
+
+
+def sorted_vs_unsorted(quick=True):
+    """C8 under the boolean semiring: select-order output vs sort epilogue."""
+    scales = (6,) if quick else (6, 7)
+    for preset in ("ER", "G500"):
+        for sc in scales:
+            a = symmetrize(rmat_csr(sc, 8, preset, seed=sc))
+            flop = int(np.asarray(symbolic_flops(a, a)).sum())
+            rn, _, _, _ = symbolic(a, a)
+            cap = int(np.asarray(rn).sum()) + 8
+            tag = f"graph,sorted_vs_unsorted,{preset},scale{sc}"
+            t_u = bench(lambda: spgemm_hash_jnp(a, a, cap,
+                                                semiring="boolean"), iters=2)
+            t_s = bench(lambda: spgemm_hash_jnp(
+                a, a, cap, semiring="boolean").sort_rows(), iters=2)
+            emit(f"{tag},boolean,unsorted", t_u, flops_rate(flop, t_u))
+            emit(f"{tag},boolean,sorted", t_s, flops_rate(flop, t_s))
+
+
+def bfs(quick=True):
+    """Masked-frontier boolean SpGEMM vs the dense SpMM frontier stack."""
+    from examples.graph_analytics import (multi_source_bfs,
+                                          multi_source_bfs_masked)
+    sc = 6 if quick else 7
+    a = symmetrize(rmat_csr(sc, 8, "G500", seed=3))
+    sources = list(range(0, a.n_rows, max(1, a.n_rows // 4)))[:4]
+    hops = 4
+    t_d = bench(lambda: multi_source_bfs(a, sources, hops), iters=2)
+    t_m = bench(lambda: multi_source_bfs_masked(a, sources, hops), iters=2)
+    emit(f"graph,bfs,scale{sc},dense_spmm", t_d, f"k={len(sources)}")
+    emit(f"graph,bfs,scale{sc},masked_boolean", t_m, f"k={len(sources)}")
+
+
+def run(quick=True):
+    masked_vs_unmasked(quick)
+    sorted_vs_unsorted(quick)
+    bfs(quick)

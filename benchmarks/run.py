@@ -12,6 +12,7 @@ import traceback
 
 from . import common
 from . import bench_spgemm_figs as figs
+from . import bench_graph as graph
 from . import bench_micro as micro
 from . import bench_moe_dispatch as moe_bench
 
@@ -29,6 +30,7 @@ SUITES = [
     ("fig16_tall_skinny", lambda q: figs.fig16_tall_skinny(q)),
     ("fig17_triangle", lambda q: figs.fig17_triangle(q)),
     ("table4_recipe", lambda q: figs.table4_recipe(q)),
+    ("graph", lambda q: graph.run(q)),
     ("moe_dispatch", lambda q: moe_bench.run(q)),
 ]
 

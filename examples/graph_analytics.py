@@ -1,30 +1,41 @@
 """Graph analytics on the SpGEMM engine: the paper's two application
-scenarios (sections 5.5-5.6) end-to-end.
+scenarios (sections 5.5-5.6) end-to-end, on the masked/semiring layer
+(DESIGN.md section 7).
 
-  * triangle counting: reorder by degree, split A = L + U, count via L @ U
-  * multi-source BFS: square x tall-skinny SpMM over frontier stacks
+  * triangle counting: reorder by degree, split A = L + U, then one masked
+    product ``spgemm(L, U, mask=A_perm)`` -- the mask prunes non-closing
+    wedges *inside* the accumulator, so the wedge matrix is never
+    materialized (no dense product, no post-filter);
+  * multi-source BFS, two ways: the paper's dense tall-skinny SpMM frontier
+    stack, and a masked-frontier variant ``spgemm(A, F, semiring="boolean",
+    mask=visited, complement_mask=True)`` where the complemented visited
+    mask retires vertices inside the product.
 
     PYTHONPATH=src python examples/graph_analytics.py
 """
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import CSR, spgemm_esc, spmm
-from repro.data.rmat import rmat_csr, triangular_split
+from repro.core import CSR, lowest_p2, spgemm, spmm, symbolic
+from repro.data.rmat import rmat_csr, symmetrize, triangular_split
 
 
 def triangle_count(a: CSR) -> int:
-    """Triangles via wedges: tri = sum(L@U .* A_perm) / 2 (section 5.6)."""
-    L, U = triangular_split(a)
-    wedges_cap = 1 << 18
-    c = spgemm_esc(L, U, cap_c=wedges_cap)
-    perm_adj = (L.to_dense() + U.to_dense()) > 0
-    tri = float(jnp.sum(c.to_dense() * perm_adj) / 2)
+    """Triangles via masked wedges: tri = sum(L@U under mask A_perm) / 2.
+
+    The product path is fully sparse: capacity comes from the masked
+    symbolic phase and the count is read off the CSR values directly.
+    """
+    L, U, adj = triangular_split(a, return_adjacency=True)
+    row_nnz, _, _, _ = symbolic(L, U, mask=adj)
+    cap = int(np.asarray(row_nnz).sum()) + 8
+    c = spgemm(L, U, cap, algorithm="auto", mask=adj, semiring="plus_times")
+    tri = float(jnp.where(c.valid_mask(), c.data, 0).sum()) / 2
     return int(round(tri))
 
 
 def multi_source_bfs(a: CSR, sources, n_hops: int):
-    """Hop distances from each source (betweenness-style frontier stack)."""
+    """Hop distances from each source -- dense frontier stack (SpMM)."""
     n = a.n_rows
     k = len(sources)
     frontier = jnp.zeros((n, k), jnp.float32).at[
@@ -37,24 +48,71 @@ def multi_source_bfs(a: CSR, sources, n_hops: int):
     return dist
 
 
+def _frontier_csr(rows, cols, shape, cap):
+    vals = np.ones(len(rows), np.float32)
+    return CSR.from_numpy_coo(np.asarray(rows), np.asarray(cols), vals,
+                              shape, cap=cap)
+
+
+def _coo_of(c: CSR):
+    v = np.asarray(c.valid_mask())
+    return np.asarray(c.row_ids())[v], np.asarray(c.indices)[v]
+
+
+def multi_source_bfs_masked(a: CSR, sources, n_hops: int):
+    """Masked-frontier BFS: sparse frontiers, visited retired by the mask.
+
+    Each hop is one boolean-semiring SpGEMM with the *complemented* visited
+    mask: candidates landing on visited vertices are pruned inside the
+    product, so the frontier CSR only ever holds newly discovered vertices
+    -- the direction-agnostic analogue of the paper's section 5.5 workload
+    with the frontier kept sparse end to end.
+    """
+    n, k = a.n_rows, len(sources)
+    cap = n * k
+    rows, cols = np.asarray(sources), np.arange(k)
+    frontier = _frontier_csr(rows, cols, (n, k), cap)
+    visited = frontier
+    dist = np.full((n, k), -1, np.int32)
+    dist[rows, cols] = 0
+    for hop in range(1, n_hops + 1):
+        row_nnz, _, _, _ = symbolic(a, frontier, mask=visited,
+                                    complement_mask=True)
+        nnz_next = int(np.asarray(row_nnz).sum())
+        if nnz_next == 0:
+            break
+        # power-of-two capacity buckets: cap_c is a static jit argument, so
+        # an exact per-hop cap would recompile the product every hop.
+        nxt = spgemm(a, frontier, lowest_p2(nnz_next + 8), algorithm="hash",
+                     semiring="boolean", mask=visited, complement_mask=True)
+        nr, nc = _coo_of(nxt)
+        dist[nr, nc] = hop
+        vr, vc = _coo_of(visited)
+        visited = _frontier_csr(np.concatenate([vr, nr]),
+                                np.concatenate([vc, nc]), (n, k), cap)
+        frontier = _frontier_csr(nr, nc, (n, k), cap)
+    return jnp.asarray(dist)
+
+
 def main():
     # undirected graph from an R-MAT pattern
-    g = rmat_csr(8, 8, "G500", seed=1)
-    ad = np.asarray(g.to_dense())
-    ad = ((ad + ad.T) > 0).astype(np.float32)
-    np.fill_diagonal(ad, 0)
-    a = CSR.from_dense(jnp.asarray(ad))
+    a = symmetrize(rmat_csr(8, 8, "G500", seed=1))
+    ad = np.asarray(a.to_dense())
     print(f"graph: {a.n_rows} vertices, {int(a.nnz)} edges (directed nnz)")
 
     tri = triangle_count(a)
     brute = int(np.trace(np.linalg.matrix_power(ad.astype(np.int64), 3)) // 6)
-    print(f"triangles: L@U -> {tri}, brute force -> {brute}")
+    print(f"triangles: masked L@U -> {tri}, brute force -> {brute}")
     assert tri == brute
 
     sources = [0, 17, 42, 100]
     dist = multi_source_bfs(a, sources, n_hops=6)
+    dist_m = multi_source_bfs_masked(a, sources, n_hops=6)
+    assert np.array_equal(np.asarray(dist), np.asarray(dist_m)), \
+        "masked-frontier BFS must agree with the dense frontier stack"
     reached = np.asarray((dist >= 0).sum(axis=0))
-    print(f"multi-source BFS from {sources}: reached per source {reached}")
+    print(f"multi-source BFS from {sources}: reached per source {reached} "
+          f"(dense SpMM == masked boolean SpGEMM)")
 
 
 if __name__ == "__main__":

@@ -1,18 +1,23 @@
 """Core sparse engine: the paper's contribution as composable JAX modules."""
 from .formats import CSR, BCSR, ELL, csr_to_bcsr, bcsr_to_csr
-from .spgemm import (spgemm, spgemm_dense, spgemm_esc, spgemm_heap, spmm,
-                     symbolic, symbolic_flops)
+from .semiring import (Semiring, SEMIRINGS, resolve_semiring, PLUS_TIMES,
+                       BOOLEAN, MIN_PLUS, PLUS_FIRST)
+from .spgemm import (spgemm, spgemm_dense, spgemm_esc, spgemm_heap,
+                     spgemm_hash_jnp, spmm, symbolic, symbolic_flops)
 from .schedule import (flops_per_row, rows_to_bins, bin_flop, make_schedule,
-                       lowbnd, lowest_p2, max_flop_per_bin_row)
+                       lowbnd, lowest_p2, max_flop_per_bin_row,
+                       masked_row_bound)
 from .recipe import (SpGEMMStats, measure_stats, model_costs,
                      choose_algorithm, choose_algorithm_from_stats)
 
 __all__ = [
     "CSR", "BCSR", "ELL", "csr_to_bcsr", "bcsr_to_csr",
-    "spgemm", "spgemm_dense", "spgemm_esc", "spgemm_heap", "spmm",
-    "symbolic", "symbolic_flops",
+    "Semiring", "SEMIRINGS", "resolve_semiring", "PLUS_TIMES", "BOOLEAN",
+    "MIN_PLUS", "PLUS_FIRST",
+    "spgemm", "spgemm_dense", "spgemm_esc", "spgemm_heap", "spgemm_hash_jnp",
+    "spmm", "symbolic", "symbolic_flops",
     "flops_per_row", "rows_to_bins", "bin_flop", "make_schedule", "lowbnd",
-    "lowest_p2", "max_flop_per_bin_row",
+    "lowest_p2", "max_flop_per_bin_row", "masked_row_bound",
     "SpGEMMStats", "measure_stats", "model_costs", "choose_algorithm",
     "choose_algorithm_from_stats",
 ]

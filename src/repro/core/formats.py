@@ -138,6 +138,21 @@ class CSR:
     def row_nnz(self) -> jax.Array:
         return self.indptr[1:] - self.indptr[:-1]
 
+    def contains(self, rows: jax.Array, cols: jax.Array) -> jax.Array:
+        """Structural membership: is ``(rows[i], cols[i])`` a stored entry?
+
+        The mask probe of the masked-SpGEMM layer (DESIGN.md section 7).
+        Requires ``sorted_cols``: a row-major CSR has globally sorted
+        ``row * n_cols + col`` keys, so membership is one binary search per
+        query -- O(log nnz), jit/vmap-friendly, and usable *inside* the
+        expand/merge loops (no dense materialization).  Keys use int32; the
+        proxy scales here keep ``n_rows * n_cols < 2^31`` (DESIGN.md
+        section 9).
+        """
+        key = rows.astype(jnp.int32) * jnp.int32(self.n_cols) + \
+            cols.astype(jnp.int32)
+        return sorted_keys_contain(csr_sorted_keys(self), key)
+
     def to_dense(self) -> jax.Array:
         out = jnp.zeros(self.shape, self.data.dtype)
         v = jnp.where(self.valid_mask(), self.data, 0)
@@ -159,6 +174,24 @@ class CSR:
 
     def with_unsorted_flag(self) -> "CSR":
         return dataclasses.replace(self, sorted_cols=False)
+
+
+def csr_sorted_keys(a: CSR) -> jax.Array:
+    """Globally sorted ``row * n_cols + col`` int32 keys of a row-major CSR
+    (sentinel-padded tail).  The precomputed form of :meth:`CSR.contains`,
+    for loops that probe the same mask many times (the heap merge)."""
+    assert a.sorted_cols, \
+        "sorted keys need sorted_cols (call sort_rows first)"
+    sentinel = jnp.int32(2**31 - 1)
+    return jnp.where(a.valid_mask(),
+                     a.row_ids() * jnp.int32(a.n_cols) + a.indices, sentinel)
+
+
+def sorted_keys_contain(keys: jax.Array, key: jax.Array) -> jax.Array:
+    """Membership of ``key`` (any shape) in sorted sentinel-padded ``keys``."""
+    cap = keys.shape[0]
+    pos = jnp.searchsorted(keys, key, side="left")
+    return (keys[jnp.clip(pos, 0, cap - 1)] == key) & (pos < cap)
 
 
 _register(CSR, ("indptr", "indices", "data", "nnz"), ("shape", "sorted_cols"))

@@ -47,10 +47,24 @@ class SpGEMMStats:
     #: (bm, bn) tiles.  Dense tiles amortize the MXU's 128x128 systolic
     #: pass; >~ MXU_MIN_TILE_DENSITY makes the BCSR kernel the right tool.
     block_density: float = 0.0
+    #: Masked-SpGEMM extension (DESIGN.md section 7): nnz(mask) / (m * n)
+    #: for a structural mask (complement already applied), 1.0 when
+    #: unmasked.  A sparse mask caps nnz(C) directly, which collapses the
+    #: accumulator state and shifts the Eq.1/Eq.2 balance toward hash.
+    mask_density: float = 1.0
+    #: Whether a mask is present at all -- distinct from mask_density
+    #: because a fully dense mask legally reaches density 1.0 yet still
+    #: routes the product through the generalized (non-bcsr) paths.
+    has_mask: bool = False
 
 
 #: minimum mean tile occupancy for the MXU block path to beat scalar hash
 MXU_MIN_TILE_DENSITY = 0.25
+#: mask density below which the hash family wins the masked use case: the
+#: mask-pruned accumulator state fits a small probe table and the sort
+#: epilogue is skipped (outputs of masked graph products are rarely
+#: consumed sorted -- the C8 finding, sharpened by the mask).
+MASKED_HASH_DENSITY = 0.25
 _PROBE_TILE = (8, 8)
 
 
@@ -71,17 +85,29 @@ def block_density_of(a: CSR, tile=_PROBE_TILE) -> float:
 
 
 def measure_stats(a: CSR, b: CSR, row_nnz_c=None,
-                  probe_blocks: bool = False) -> SpGEMMStats:
+                  probe_blocks: bool = False,
+                  mask: CSR | None = None,
+                  complement_mask: bool = False) -> SpGEMMStats:
     """Host-side stat collection (concrete values; jittable pieces inside)."""
     flop = sched.flops_per_row(a, b)
     total_flop = float(flop.sum())
     nnz_a = float(a.nnz)
     if row_nnz_c is None:
         # cheap upper-bound estimate; exact comes from core.spgemm.symbolic
-        nnz_c = float(jnp.minimum(flop, b.n_cols).sum())
+        row_bound = jnp.minimum(flop, b.n_cols)
+        if mask is not None:
+            row_bound = sched.masked_row_bound(row_bound, mask,
+                                               complement_mask)
+        nnz_c = float(row_bound.sum())
     else:
         nnz_c = float(jnp.asarray(row_nnz_c).sum())
     mean_flop = total_flop / max(a.n_rows, 1)
+    cells = max(a.n_rows * b.n_cols, 1)
+    if mask is None:
+        mask_density = 1.0
+    else:
+        frac = float(mask.nnz) / cells
+        mask_density = (1.0 - frac) if complement_mask else frac
     return SpGEMMStats(
         n_rows=a.n_rows, n_cols=b.n_cols, nnz_a=nnz_a, flop=total_flop,
         nnz_c_est=max(nnz_c, 1.0),
@@ -90,7 +116,8 @@ def measure_stats(a: CSR, b: CSR, row_nnz_c=None,
         row_skew=float(flop.max()) / max(mean_flop, 1e-9),
         compression_ratio=total_flop / max(nnz_c, 1.0),
         density_ef=nnz_a / max(a.n_rows, 1),
-        block_density=(block_density_of(a) if probe_blocks else 0.0))
+        block_density=(block_density_of(a) if probe_blocks else 0.0),
+        mask_density=mask_density, has_mask=mask is not None)
 
 
 # ---------------------------------------------------------------------------
@@ -125,10 +152,20 @@ def model_costs(stats: SpGEMMStats, sorted_output: bool) -> dict:
 # ---------------------------------------------------------------------------
 
 def choose_algorithm_from_stats(stats: SpGEMMStats, sorted_output: bool,
-                                use_case: str = "AxA") -> str:
+                                use_case: str = "AxA",
+                                semiring: str = "plus_times") -> str:
     """Reproduction of Table 4 (+ section 4.2.4 reasoning).
 
-    use_case: "AxA" | "LxU" | "tall_skinny".
+    use_case: "AxA" | "LxU" | "tall_skinny" | "masked".
+
+    Extensions beyond Table 4 (DESIGN.md section 7):
+      * unsorted boolean/any_pair products route to the hash family: the
+        paper's C8 finding (unsorted hash output is ~1.6x faster) is an
+        upper bound for boolean semirings, where the accumulator stores no
+        values at all and the sort epilogue is the only log factor left;
+      * ``use_case="masked"`` keys on mask density -- a sparse mask caps the
+        accumulator state to nnz(mask_i*), which favors the probe table,
+        while a dense mask degenerates to the LxU column of Table 4.
     """
     high_cr = stats.compression_ratio > 2.0
     dense_ef = stats.density_ef > 8.0
@@ -136,8 +173,23 @@ def choose_algorithm_from_stats(stats: SpGEMMStats, sorted_output: bool,
 
     # TPU extension: clustered nonzeros -> MXU block kernel regardless of
     # the scalar-regime columns (the tile product amortizes everything).
-    if stats.block_density >= MXU_MIN_TILE_DENSITY:
+    # Only for plain unmasked (+, x) products: the bcsr path has no
+    # semiring/mask support, so recommending it for a generalized request
+    # would send the caller straight into a NotImplementedError.
+    if (stats.block_density >= MXU_MIN_TILE_DENSITY
+            and semiring == "plus_times"
+            and not stats.has_mask and use_case != "masked"):
         return "bcsr"
+
+    # Boolean semirings with relaxed sortedness: hash family, per C8.
+    if semiring in ("boolean", "any_pair") and not sorted_output:
+        return "hash_vector" if dense_ef else "hash"
+
+    if use_case == "masked":
+        if stats.mask_density <= MASKED_HASH_DENSITY or high_cr:
+            return "hash"
+        # dense mask: effectively the LxU regime at low compression ratio
+        return "heap"
 
     if use_case == "LxU":
         # Fig 17: Heap best at low CR (sparser outputs), Hash otherwise.
@@ -162,7 +214,11 @@ def choose_algorithm_from_stats(stats: SpGEMMStats, sorted_output: bool,
 
 def choose_algorithm(a: CSR, b: CSR, sorted_output: bool = False,
                      use_case: str = "AxA",
-                     probe_blocks: bool = False) -> str:
+                     probe_blocks: bool = False,
+                     semiring: str = "plus_times",
+                     mask: CSR | None = None,
+                     complement_mask: bool = False) -> str:
     return choose_algorithm_from_stats(
-        measure_stats(a, b, probe_blocks=probe_blocks), sorted_output,
-        use_case)
+        measure_stats(a, b, probe_blocks=probe_blocks, mask=mask,
+                      complement_mask=complement_mask), sorted_output,
+        use_case, semiring=semiring)

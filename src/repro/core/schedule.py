@@ -35,6 +35,19 @@ def flops_per_row(a: CSR, b: CSR) -> jax.Array:
     return jax.ops.segment_sum(rnz, a.row_ids(), num_segments=a.n_rows)
 
 
+def masked_row_bound(flop: jax.Array, mask: CSR,
+                     complement: bool = False) -> jax.Array:
+    """Per-row nnz(C) upper bound under a structural mask (DESIGN.md
+    section 7): a non-complemented mask caps row i of C at nnz(mask_i*), a
+    complemented mask at ``n_cols - nnz(mask_i*)``.  This is the capacity
+    math the symbolic phase and the launcher use when a mask is present --
+    the mask shrinks the *static* allocation, not just the dynamic nnz.
+    """
+    mrow = mask.row_nnz().astype(flop.dtype)
+    lim = (jnp.int32(mask.n_cols) - mrow) if complement else mrow
+    return jnp.minimum(flop, lim)
+
+
 def prefix_sum(x: jax.Array) -> jax.Array:
     """Exclusive-then-inclusive prefix sum, (n+1,): ps[0]=0, ps[-1]=total."""
     return jnp.concatenate([jnp.zeros((1,), x.dtype),

@@ -1,0 +1,92 @@
+"""Semirings for SpGEMM (DESIGN.md section 7).
+
+The paper's kernels hard-code the arithmetic semiring ``(+, x, 0)``, but its
+headline use cases are graph algorithms (sections 5.5-5.6) where the natural
+formulation is ``C = A (+.x) B`` over a *semiring*: multi-source BFS is a
+boolean ``any_pair`` product, shortest paths are ``min_plus``, and frontier
+expansion with parent tracking is ``plus_first``.  GraphBLAS-style engines
+(KokkosKernels, CombBLAS) ship this as a first-class knob; here it is a small
+frozen dataclass threaded through every accumulator as a *static* argument,
+so each (algorithm, semiring) pair jit-compiles to its own specialized
+program -- no dynamic dispatch inside kernels.
+
+Semantics follow GraphBLAS: ``mul`` combines *stored* entries only (a
+structural zero annihilates), ``add`` reduces the multi-set of products per
+output coordinate, and ``zero`` is the additive identity used for padded
+lanes.  The output keeps the *structural* union pattern: an entry exists in C
+iff at least one (a_ik, b_kj) pair of stored entries exists -- value-level
+cancellation does not remove entries (matching the paper's symbolic phase,
+which is pattern-only).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Semiring:
+    """An SpGEMM semiring ``(add, mul, zero)``.
+
+    Attributes:
+      name: canonical registry key.
+      add:  elementwise reduction combiner (associative + commutative).
+      mul:  elementwise product of a stored A value and a stored B value.
+      zero: additive identity (value given to padded / invalid lanes before
+        a reduction; ``add(x, zero) == x``).
+      segment_reduce: the ``jax.ops.segment_*`` matching ``add`` -- the
+        sort-based accumulators (ESC and the hash jnp fallback) reduce
+        duplicate coordinates with one segmented reduction instead of a loop.
+    """
+    name: str
+    add: Callable[[jax.Array, jax.Array], jax.Array]
+    mul: Callable[[jax.Array, jax.Array], jax.Array]
+    zero: float
+    segment_reduce: Callable[..., jax.Array]
+
+    def __repr__(self):  # keep jit cache keys readable in logs
+        return f"Semiring({self.name})"
+
+
+def _ones_like_pair(x, y):
+    # any_pair: the mere existence of a stored (a, b) pair contributes 1.
+    return jnp.ones_like(x * y)
+
+
+def _first(x, y):
+    # plus_first: keep the A-side value (frontier products: B is a pattern).
+    return x * jnp.ones_like(y)
+
+
+PLUS_TIMES = Semiring("plus_times", jnp.add, jnp.multiply, 0.0,
+                      jax.ops.segment_sum)
+BOOLEAN = Semiring("boolean", jnp.maximum, _ones_like_pair, 0.0,
+                   jax.ops.segment_max)
+MIN_PLUS = Semiring("min_plus", jnp.minimum, jnp.add, float("inf"),
+                    jax.ops.segment_min)
+PLUS_FIRST = Semiring("plus_first", jnp.add, _first, 0.0,
+                      jax.ops.segment_sum)
+
+SEMIRINGS = {
+    "plus_times": PLUS_TIMES,
+    "boolean": BOOLEAN,
+    "any_pair": BOOLEAN,       # GraphBLAS alias
+    "min_plus": MIN_PLUS,
+    "plus_first": PLUS_FIRST,
+}
+
+
+def resolve_semiring(s: "str | Semiring") -> Semiring:
+    """Accept a registry name or a Semiring instance (custom semirings are
+    legal anywhere a name is -- they just need hashable fields so they can be
+    a static jit argument)."""
+    if isinstance(s, Semiring):
+        return s
+    try:
+        return SEMIRINGS[s]
+    except KeyError:
+        raise ValueError(
+            f"unknown semiring {s!r}; known: {sorted(SEMIRINGS)}") from None

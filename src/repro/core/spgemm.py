@@ -17,7 +17,18 @@ equivalent of the heap path.  ``heap`` is the faithful one-phase merge of
 section 4.2.3 (an argmin tournament replaces the pointer heap: on a VPU the
 k-wide argmin is one vector op, while a binary heap is a latency-bound
 pointer chase -- see DESIGN.md section 2).  ``hash``/``hash_vector`` live in
-``repro.kernels.spgemm_hash`` (Pallas) with a jnp fallback here.
+``repro.kernels.spgemm_hash`` (Pallas) with a jnp fallback here
+(:func:`spgemm_hash_jnp`) that owns the semiring/masked generalizations.
+
+Graph-workload generalizations (DESIGN.md section 7):
+
+  * every accumulator takes ``semiring=`` (:mod:`repro.core.semiring`):
+    ``plus_times`` (default), ``boolean``/``any_pair``, ``min_plus``,
+    ``plus_first``;
+  * ``mask=`` takes a structural CSR mask (``complement_mask=True`` inverts
+    it) and prunes candidates *inside* the expand/merge/probe loops -- never
+    by post-filtering a dense product -- with matching capacity math in
+    :func:`symbolic` (``schedule.masked_row_bound``).
 
 Shapes are static everywhere: capacities come from the symbolic phase
 (:func:`symbolic`), the dynamic ``nnz`` rides along as a scalar -- the
@@ -31,10 +42,53 @@ from typing import Literal
 import jax
 import jax.numpy as jnp
 
-from .formats import CSR
+from .formats import CSR, csr_sorted_keys, sorted_keys_contain
+from .semiring import Semiring, resolve_semiring
 from . import schedule as sched
 
 Algorithm = Literal["auto", "dense", "esc", "heap", "hash", "hash_vector"]
+
+#: hash-order scrambling modulus for the jnp hash fallback (Fig. 8's
+#: multiply hash over a fixed 2^20 table: output order == table-scan order).
+_HASH_CONST = -1640531527
+_HASH_P = 1 << 20
+
+
+# ----------------------------------------------------------------------------
+# Mask plumbing (DESIGN.md section 7): structural CSR masks, probed with one
+# binary search per candidate inside the accumulator loops.  All membership
+# logic lives in formats.csr_sorted_keys / sorted_keys_contain (shared with
+# CSR.contains) so the sorted_cols guard exists exactly once.
+# ----------------------------------------------------------------------------
+
+def _check_mask(a: CSR, b: CSR, mask: CSR | None):
+    """Masks live in output coordinates: shape must be (m, n) of C.
+
+    The membership probe encodes ``row * n_cols + col`` with the *mask's*
+    n_cols; a shape-mismatched mask would silently test arbitrary other
+    coordinates, so fail loudly instead."""
+    if mask is not None:
+        assert mask.shape == (a.n_rows, b.n_cols), \
+            f"mask shape {mask.shape} != output shape {(a.n_rows, b.n_cols)}"
+
+
+def _canon_mask(mask: CSR | None) -> CSR | None:
+    """Probes binary-search row-major keys; an unsorted mask (e.g. a
+    previous hash-family output) is canonicalized first.  ``sorted_cols``
+    is static metadata, so this is a trace-time branch."""
+    if mask is not None and not mask.sorted_cols:
+        return mask.sort_rows()
+    return mask
+
+
+def _mask_prune(rows, cols, valid, mask: CSR | None, complement: bool):
+    """valid &= (rows, cols) in mask  (or not-in, when complemented)."""
+    if mask is None:
+        return valid
+    allowed = mask.contains(rows, cols)
+    if complement:
+        allowed = ~allowed
+    return valid & allowed
 
 
 # ----------------------------------------------------------------------------
@@ -46,17 +100,24 @@ def symbolic_flops(a: CSR, b: CSR) -> jax.Array:
     return sched.flops_per_row(a, b)
 
 
-@jax.jit
-def symbolic(a: CSR, b: CSR):
-    """Exact per-row nnz(C) and total flop.
+@partial(jax.jit, static_argnames=("complement_mask",))
+def symbolic(a: CSR, b: CSR, mask: CSR | None = None,
+             complement_mask: bool = False):
+    """Exact per-row nnz(C) and total flop, mask-aware.
 
     Returns (row_nnz_c, indptr_c, flop_per_row, total_flop).  Uses the
     dense-free ESC expansion with a *count-distinct* reduction; this is the
     two-phase method's phase one, giving the numeric phase its exact static
-    capacity requirement (the "select cap" the launcher uses).
+    capacity requirement (the "select cap" the launcher uses).  With a mask,
+    pruned candidates are not counted, so the capacity the launcher
+    allocates is the *masked* nnz(C) -- additionally bounded a priori by
+    ``schedule.masked_row_bound``.
     """
+    _check_mask(a, b, mask)
+    mask = _canon_mask(mask)
     flop = symbolic_flops(a, b)
     rows, cols, _, valid = _expand(a, b, flop_cap=_default_flop_cap(a, b))
+    valid = _mask_prune(rows, cols, valid, mask, complement_mask)
     order = jnp.lexsort((cols, jnp.where(valid, rows, a.n_rows)))
     rows_s, cols_s, valid_s = rows[order], cols[order], valid[order]
     newseg = _boundary_flags(rows_s, cols_s, valid_s)
@@ -71,9 +132,45 @@ def symbolic(a: CSR, b: CSR):
 # Oracle
 # ----------------------------------------------------------------------------
 
-def spgemm_dense(a: CSR, b: CSR, cap_c: int) -> CSR:
-    """Reference oracle via dense product. O(m*n*k) -- tests only."""
-    c = a.to_dense() @ b.to_dense()
+def spgemm_dense(a: CSR, b: CSR, cap_c: int,
+                 semiring: str | Semiring = "plus_times",
+                 mask: CSR | None = None,
+                 complement_mask: bool = False) -> CSR:
+    """Reference oracle via dense product. O(m*n*k) -- tests only.
+
+    The only code path allowed to post-filter a dense product with the mask;
+    every real accumulator prunes inside its loops.
+
+    Representation caveat: a dense array cannot carry an *explicit zero*,
+    so a structurally-present entry whose semiring value is exactly 0
+    (e.g. a zero-sum ``min_plus`` path under mixed-sign weights) is dropped
+    by ``CSR.from_dense`` here while the sparse accumulators keep it.
+    ``to_dense()`` comparisons are unaffected; nnz comparisons against this
+    oracle are only exact when values cannot hit 0 (the R-MAT suite uses
+    values in [0.5, 1.5]).
+    """
+    sr = resolve_semiring(semiring)
+    _check_mask(a, b, mask)
+    ad, bd = a.to_dense(), b.to_dense()
+    ap, bp = ad != 0, bd != 0
+    if sr.name == "plus_times":
+        c = ad @ bd
+    elif sr.name == "boolean":
+        c = ((ap.astype(jnp.float32) @ bp.astype(jnp.float32)) > 0) \
+            .astype(a.dtype)
+    elif sr.name == "plus_first":
+        c = ad @ bp.astype(ad.dtype)
+    elif sr.name == "min_plus":
+        pair = ap[:, :, None] & bp[None, :, :]
+        s = jnp.where(pair, ad[:, :, None] + bd[None, :, :], jnp.inf)
+        c = jnp.min(s, axis=1)
+        c = jnp.where(jnp.isinf(c), 0.0, c).astype(a.dtype)
+    else:
+        raise ValueError(f"dense oracle lacks semiring {sr.name!r}")
+    if mask is not None:
+        md = mask.to_dense() != 0
+        keep = ~md if complement_mask else md
+        c = jnp.where(keep, c, 0)
     return CSR.from_dense(c, cap=cap_c)
 
 
@@ -87,11 +184,15 @@ def _default_flop_cap(a: CSR, b: CSR) -> int:
     return a.cap * max(1, min(b.cap, b.n_cols))
 
 
-def _expand(a: CSR, b: CSR, flop_cap: int):
+def _expand(a: CSR, b: CSR, flop_cap: int, sr: Semiring | None = None):
     """Materialize all intermediate products (paper's `value` in Fig. 1).
 
     Returns (rows, cols, vals, valid) each of shape (flop_cap,).
+    ``vals`` holds ``sr.mul`` products with ``sr.zero`` in invalid lanes.
     """
+    if sr is None:
+        from .semiring import PLUS_TIMES
+        sr = PLUS_TIMES
     pnz = (b.indptr[a.indices + 1] - b.indptr[a.indices]).astype(jnp.int32)
     pnz = jnp.where(a.valid_mask(), pnz, 0)
     off = sched.prefix_sum(pnz)                      # (cap_a + 1,)
@@ -103,7 +204,8 @@ def _expand(a: CSR, b: CSR, flop_cap: int):
     valid = p < total
     rows = a.row_ids()[j]
     cols = jnp.where(valid, b.indices[b_slot], 0)
-    vals = jnp.where(valid, a.data[j] * b.data[b_slot], 0)
+    vals = jnp.where(valid, sr.mul(a.data[j], b.data[b_slot]),
+                     jnp.asarray(sr.zero, a.dtype))
     return rows, cols, vals, valid
 
 
@@ -113,22 +215,42 @@ def _boundary_flags(rows_s, cols_s, valid_s):
     return valid_s & ((rows_s != prev_r) | (cols_s != prev_c))
 
 
-@partial(jax.jit, static_argnames=("cap_c", "flop_cap"))
-def spgemm_esc(a: CSR, b: CSR, cap_c: int, flop_cap: int | None = None) -> CSR:
-    """Expand-sort-compress SpGEMM. Output is sorted (it is a sort)."""
+def _esc_core(a: CSR, b: CSR, cap_c: int, flop_cap: int | None,
+              sr: Semiring, mask: CSR | None, complement_mask: bool,
+              hash_order: bool) -> CSR:
+    """Shared expand/prune/sort/compress pipeline.
+
+    ``hash_order=False``: plain ESC, output sorted by column (Table 1).
+    ``hash_order=True``: the hash-family jnp fallback -- within each row the
+    output is emitted in multiply-hash *table-scan* order (Fig. 8a over a
+    fixed 2^20 table), i.e. deliberately unsorted, preserving the C8
+    contract so the sorted-vs-unsorted gap stays measurable on CPU.
+
+    Mask pruning happens right after expand -- the jnp analogue of skipping
+    the probe/insert for masked-out candidates -- so pruned candidates never
+    enter the sort (the expensive part) nor claim an output slot.
+    """
     if flop_cap is None:
         flop_cap = _default_flop_cap(a, b)
+    _check_mask(a, b, mask)
+    mask = _canon_mask(mask)
     m, n = a.n_rows, b.n_cols
-    rows, cols, vals, valid = _expand(a, b, flop_cap)
+    rows, cols, vals, valid = _expand(a, b, flop_cap, sr)
+    valid = _mask_prune(rows, cols, valid, mask, complement_mask)
+    vals = jnp.where(valid, vals, jnp.asarray(sr.zero, a.dtype))
     sort_rows = jnp.where(valid, rows, m)  # invalid to the end
-    order = jnp.lexsort((cols, sort_rows))
+    if hash_order:
+        h = (cols * _HASH_CONST) & (_HASH_P - 1)
+        order = jnp.lexsort((cols, h, sort_rows))
+    else:
+        order = jnp.lexsort((cols, sort_rows))
     rows_s, cols_s, vals_s, valid_s = (rows[order], cols[order], vals[order],
                                        valid[order])
     flags = _boundary_flags(rows_s, cols_s, valid_s)
     uid = jnp.cumsum(flags.astype(jnp.int32)) - 1          # id of output slot
     nnz_c = flags.sum().astype(jnp.int32)
     seg = jnp.where(valid_s, jnp.minimum(uid, cap_c - 1), cap_c)
-    data_c = jax.ops.segment_sum(vals_s, seg, num_segments=cap_c + 1)[:cap_c]
+    data_c = sr.segment_reduce(vals_s, seg, num_segments=cap_c + 1)[:cap_c]
     put = jnp.where(flags & (uid < cap_c), uid, cap_c)
     cols_c = jnp.zeros((cap_c,), jnp.int32).at[put].set(cols_s, mode="drop")
     row_nnz = jax.ops.segment_sum(flags.astype(jnp.int32),
@@ -138,15 +260,51 @@ def spgemm_esc(a: CSR, b: CSR, cap_c: int, flop_cap: int | None = None) -> CSR:
     nnz_c = jnp.minimum(nnz_c, cap_c)
     valid_c = jnp.arange(cap_c, dtype=jnp.int32) < nnz_c
     data_c = jnp.where(valid_c, data_c, 0).astype(a.dtype)
-    return CSR(indptr_c, cols_c, data_c, nnz_c, (m, n), sorted_cols=True)
+    return CSR(indptr_c, cols_c, data_c, nnz_c, (m, n),
+               sorted_cols=not hash_order)
+
+
+@partial(jax.jit, static_argnames=("cap_c", "flop_cap", "semiring",
+                                   "complement_mask"))
+def spgemm_esc(a: CSR, b: CSR, cap_c: int, flop_cap: int | None = None,
+               semiring: str | Semiring = "plus_times",
+               mask: CSR | None = None,
+               complement_mask: bool = False) -> CSR:
+    """Expand-sort-compress SpGEMM. Output is sorted (it is a sort)."""
+    sr = resolve_semiring(semiring)
+    return _esc_core(a, b, cap_c, flop_cap, sr, mask, complement_mask,
+                     hash_order=False)
+
+
+@partial(jax.jit, static_argnames=("cap_c", "flop_cap", "semiring",
+                                   "complement_mask"))
+def spgemm_hash_jnp(a: CSR, b: CSR, cap_c: int, flop_cap: int | None = None,
+                    semiring: str | Semiring = "plus_times",
+                    mask: CSR | None = None,
+                    complement_mask: bool = False) -> CSR:
+    """jnp fallback for the hash family (semiring/mask generality).
+
+    The Pallas kernels in ``repro.kernels.spgemm_hash`` stay specialized to
+    the arithmetic semiring; any request with a non-default semiring or a
+    mask routes here.  Contract-equivalent to the kernel: two-phase exact
+    capacity, mask pruned at probe time (before any accumulation state is
+    touched), rows emitted in table-scan order => ``sorted_cols=False`` (C8).
+    """
+    sr = resolve_semiring(semiring)
+    return _esc_core(a, b, cap_c, flop_cap, sr, mask, complement_mask,
+                     hash_order=True)
 
 
 # ----------------------------------------------------------------------------
 # Heap SpGEMM (paper section 4.2.3): one-phase k-way merge, sorted in/out.
 # ----------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("row_cap", "k_width"))
-def spgemm_heap(a: CSR, b: CSR, row_cap: int, k_width: int) -> CSR:
+@partial(jax.jit, static_argnames=("row_cap", "k_width", "semiring",
+                                   "complement_mask"))
+def spgemm_heap(a: CSR, b: CSR, row_cap: int, k_width: int,
+                semiring: str | Semiring = "plus_times",
+                mask: CSR | None = None,
+                complement_mask: bool = False) -> CSR:
     """Faithful one-phase merge accumulator.
 
     Per output row i: ``nnz(a_i*)`` cursors walk the (sorted) rows of B; each
@@ -156,12 +314,22 @@ def spgemm_heap(a: CSR, b: CSR, row_cap: int, k_width: int) -> CSR:
     row is O(nnz(a_i*)) cursors + O(row_cap) output, matching the paper's
     space argument.
 
+    Semiring: ``sr.mul`` at the leaves, ``sr.add`` on same-column repeats.
+    Mask: each extracted head is probed against the mask (one binary search
+    on precomputed keys) *inside* the merge loop; masked-out candidates
+    advance their cursor without claiming an output slot, so ``row_cap`` may
+    be sized to the masked bound (``schedule.masked_row_bound``).
+
     Static bounds: ``k_width`` >= max nnz(a_i*); ``row_cap`` >= max nnz(c_i*).
     Requires sorted inputs, emits sorted output (Table 1).
     """
     assert a.sorted_cols and b.sorted_cols, "heap path requires sorted inputs"
+    sr = resolve_semiring(semiring)
+    _check_mask(a, b, mask)
+    mask = _canon_mask(mask)
     m, n = a.n_rows, b.n_cols
     INF = jnp.int32(n + 1)
+    mkeys = None if mask is None else csr_sorted_keys(mask)
 
     k = jnp.arange(k_width, dtype=jnp.int32)[None, :]
     a_start = a.indptr[:-1][:, None] + k                      # (m, k_width)
@@ -172,7 +340,7 @@ def spgemm_heap(a: CSR, b: CSR, row_cap: int, k_width: int) -> CSR:
     cur = jnp.where(a_live, b.indptr[b_row], 0)               # cursor per lane
     end = jnp.where(a_live, b.indptr[b_row + 1], 0)
 
-    def one_row(cur, end, avals):
+    def one_row(row_id, cur, end, avals):
         out_cols = jnp.full((row_cap,), -1, jnp.int32)
         out_vals = jnp.zeros((row_cap,), a.dtype)
 
@@ -186,14 +354,25 @@ def spgemm_heap(a: CSR, b: CSR, row_cap: int, k_width: int) -> CSR:
                               INF)
             j = jnp.argmin(heads)                              # extract-min
             c = heads[j]
-            v = avals[j] * b.data[jnp.clip(cur[j], 0, b.cap - 1)]
+            v = sr.mul(avals[j], b.data[jnp.clip(cur[j], 0, b.cap - 1)])
+            if mkeys is None:
+                allowed = jnp.bool_(True)
+            else:
+                allowed = sorted_keys_contain(mkeys,
+                                              row_id * jnp.int32(n) + c)
+                if complement_mask:
+                    allowed = ~allowed
             prev = out_cols[jnp.maximum(out_n - 1, 0)]
             same = (out_n > 0) & (prev == c)
             slot = jnp.where(same, out_n - 1, jnp.minimum(out_n, row_cap - 1))
-            out_cols = out_cols.at[slot].set(c)
+            out_cols = out_cols.at[slot].set(
+                jnp.where(allowed, c, out_cols[slot]))
             out_vals = out_vals.at[slot].set(
-                jnp.where(same, out_vals[slot] + v, v))
-            out_n = jnp.where(same, out_n, jnp.minimum(out_n + 1, row_cap))
+                jnp.where(allowed,
+                          jnp.where(same, sr.add(out_vals[slot], v), v),
+                          out_vals[slot]))
+            out_n = jnp.where(allowed & ~same,
+                              jnp.minimum(out_n + 1, row_cap), out_n)
             cur = cur.at[j].add(1)
             return cur, out_cols, out_vals, out_n
 
@@ -201,7 +380,8 @@ def spgemm_heap(a: CSR, b: CSR, row_cap: int, k_width: int) -> CSR:
             cond, body, (cur, out_cols, out_vals, jnp.int32(0)))
         return out_cols, out_vals, out_n
 
-    out_cols, out_vals, out_n = jax.vmap(one_row)(cur, end, a_vals)  # (m, cap)
+    out_cols, out_vals, out_n = jax.vmap(one_row)(
+        jnp.arange(m, dtype=jnp.int32), cur, end, a_vals)      # (m, cap)
     # compact (m, row_cap) panels into CSR
     indptr_c = sched.prefix_sum(out_n).astype(jnp.int32)
     nnz_c = indptr_c[-1]
@@ -233,24 +413,60 @@ def spmm(a: CSR, x: jax.Array) -> jax.Array:
 # ----------------------------------------------------------------------------
 
 def spgemm(a: CSR, b: CSR, cap_c: int, algorithm: Algorithm = "auto",
-           sorted_output: bool | None = None, **kw) -> CSR:
-    """Front door. ``auto`` consults the recipe (core.recipe)."""
+           sorted_output: bool | None = None,
+           semiring: str | Semiring = "plus_times",
+           mask: CSR | None = None, complement_mask: bool = False,
+           use_case: str | None = None, **kw) -> CSR:
+    """Front door. ``auto`` consults the recipe (core.recipe).
+
+    ``semiring``/``mask`` flow to every accumulator; the Pallas hash kernels
+    keep their (+, x) specialization, so generalized requests on the hash
+    family execute :func:`spgemm_hash_jnp` (same contract, unsorted output).
+    """
+    sr = resolve_semiring(semiring)
+    general = sr.name != "plus_times" or mask is not None
+    if mask is not None and not mask.sorted_cols:
+        # membership probes binary-search row-major keys; an unsorted mask
+        # (e.g. a previous hash-family output) must be canonicalized first.
+        mask = mask.sort_rows()
     if algorithm == "auto":
         from .recipe import choose_algorithm
-        algorithm = choose_algorithm(a, b, sorted_output=bool(sorted_output))
+        if use_case is None:
+            use_case = "masked" if mask is not None else "AxA"
+        algorithm = choose_algorithm(
+            a, b, sorted_output=bool(sorted_output), use_case=use_case,
+            semiring=sr.name, mask=mask, complement_mask=complement_mask)
     if algorithm == "dense":
-        out = spgemm_dense(a, b, cap_c)
+        out = spgemm_dense(a, b, cap_c, semiring=sr, mask=mask,
+                           complement_mask=complement_mask)
     elif algorithm == "esc":
-        out = spgemm_esc(a, b, cap_c, **kw)
+        out = spgemm_esc(a, b, cap_c, semiring=sr, mask=mask,
+                         complement_mask=complement_mask, **kw)
     elif algorithm == "heap":
         row_cap = kw.pop("row_cap", min(cap_c, b.n_cols))
         k_width = kw.pop("k_width", a.cap)
-        out = spgemm_heap(a, b, row_cap=row_cap, k_width=k_width)
+        out = spgemm_heap(a, b, row_cap=row_cap, k_width=k_width,
+                          semiring=sr, mask=mask,
+                          complement_mask=complement_mask)
     elif algorithm in ("hash", "hash_vector"):
-        from repro.kernels.spgemm_hash import ops as hash_ops
-        out = hash_ops.spgemm_hash(a, b, cap_c,
-                                   vector=(algorithm == "hash_vector"), **kw)
+        if general:
+            # Pallas kernels are (+, x)-specialized; the jnp fallback owns
+            # semirings and masked probing (DESIGN.md section 7).
+            kw.pop("n_bins", None)
+            kw.pop("table_size", None)
+            kw.pop("vector", None)
+            kw.pop("interpret", None)
+            out = spgemm_hash_jnp(a, b, cap_c, semiring=sr, mask=mask,
+                                  complement_mask=complement_mask, **kw)
+        else:
+            from repro.kernels.spgemm_hash import ops as hash_ops
+            out = hash_ops.spgemm_hash(a, b, cap_c,
+                                       vector=(algorithm == "hash_vector"),
+                                       **kw)
     elif algorithm == "bcsr":
+        if general:
+            raise NotImplementedError(
+                "bcsr path is (+, x)-only and unmasked; pick esc/heap/hash")
         # TPU block path (DESIGN.md section 2): dense (bm, bn) tiles on the
         # MXU with a block-column hash accumulator.  CSR in / CSR out.
         from repro.core.formats import csr_to_bcsr, bcsr_to_csr

@@ -80,16 +80,35 @@ def tall_skinny_from(a_rows: np.ndarray, a_cols: np.ndarray, n: int,
     return CSR.from_numpy_coo(rows, cols, vals, (n, k), cap=cap)
 
 
-def triangular_split(a: CSR):
+def symmetrize(a: CSR, cap: int | None = None) -> CSR:
+    """Undirected simple graph from a directed pattern: A|A^T, no diagonal.
+
+    Host-side preprocessing (like generation itself); shared by the graph
+    example, the graph benchmarks, and the tests.
+    """
+    d = np.asarray(a.to_dense())
+    d = ((d + d.T) > 0).astype(np.float32)
+    np.fill_diagonal(d, 0.0)
+    return CSR.from_dense(np.asarray(d), cap=cap)
+
+
+def triangular_split(a: CSR, return_adjacency: bool = False):
     """Paper section 5.6 preprocessing: reorder rows by increasing degree,
-    split A = L + U; returns (L, U) ready for the L @ U wedge count."""
-    import jax.numpy as jnp
+    split A = L + U; returns (L, U) ready for the L @ U wedge count.
+
+    With ``return_adjacency=True`` also returns the degree-permuted
+    adjacency as a CSR -- the structural mask of the masked triangle count
+    ``spgemm(L, U, mask=adj)`` (only wedges that close into triangles are
+    ever accumulated; DESIGN.md section 7).
+    """
     dense = np.asarray(a.to_dense())
     deg = (dense != 0).sum(axis=1)
     order = np.argsort(deg, kind="stable")
     p = dense[order][:, order]
     l = np.tril(p, k=-1)
     u = np.triu(p, k=1)
-    del jnp
-    return (CSR.from_dense(np.asarray(l), cap=a.cap),
-            CSR.from_dense(np.asarray(u), cap=a.cap))
+    L = CSR.from_dense(np.asarray(l), cap=a.cap)
+    U = CSR.from_dense(np.asarray(u), cap=a.cap)
+    if return_adjacency:
+        return L, U, CSR.from_dense(np.asarray(p), cap=a.cap)
+    return L, U

@@ -1,0 +1,13 @@
+"""Version shims for the Pallas TPU API surface.
+
+The kernels are written against the current Pallas names; older jaxlibs
+(<= 0.4.x) spell some of them differently.  Everything version-dependent is
+funnelled through here so the kernel bodies stay on one spelling.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+#: ``pltpu.CompilerParams`` (new) vs ``pltpu.TPUCompilerParams`` (<= 0.4.x).
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")

@@ -27,6 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import _compat
+
 from repro.kernels.spgemm_hash.kernel import _probe_scalar, _probe_vector, EMPTY
 
 
@@ -110,6 +112,6 @@ def numeric_call(n_bins: int, gm: int, bcap_a: int, bcap_b: int, bcap_c: int,
         out_shape=[jax.ShapeDtypeStruct((bcap_c,), jnp.int32),
                    jax.ShapeDtypeStruct((bcap_c, bm, bn), jnp.float32)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.CompilerParams(
             dimension_semantics=("arbitrary",)),
     ))

@@ -32,6 +32,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import _compat
+
 #: Knuth multiplicative constant (wraps mod 2^32; int32 two's complement).
 HASH_CONST = -1640531527   # == 2654435761 mod 2^32 (Python int -> inlined literal)
 
@@ -46,17 +48,26 @@ def _hash(key: jax.Array, mask: jax.Array) -> jax.Array:
 
 
 def _probe_scalar(tkey_ref, key, table_size):
-    """Linear probing (Fig. 8a): return slot holding `key` or first empty."""
+    """Linear probing (Fig. 8a): return slot holding `key` or first empty.
+
+    The probed key rides in the loop carry so the cond never reads the ref
+    (older jax cannot discharge ref reads in a while cond under interpret
+    mode; on TPU the two spellings lower identically).
+    """
     mask = jnp.int32(table_size - 1)
 
-    def cond(idx):
-        k = tkey_ref[idx]
+    def cond(state):
+        _, k = state
         return (k != key) & (k != EMPTY)
 
-    def body(idx):
-        return (idx + 1) & mask
+    def body(state):
+        idx, _ = state
+        nidx = (idx + 1) & mask
+        return nidx, tkey_ref[nidx]
 
-    return jax.lax.while_loop(cond, body, _hash(key, mask))
+    idx0 = _hash(key, mask)
+    idx, _ = jax.lax.while_loop(cond, body, (idx0, tkey_ref[idx0]))
+    return idx
 
 
 def _probe_vector(tkey_ref, key, table_size):
@@ -74,15 +85,19 @@ def _probe_vector(tkey_ref, key, table_size):
     def load(chunk_id):
         return pl.load(tkey_ref, (pl.ds(chunk_id * CHUNK, CHUNK),))
 
-    def cond(chunk_id):
-        ks = load(chunk_id)
+    # chunk contents ride in the carry: no ref reads in the while cond
+    # (same interpret-mode constraint as _probe_scalar).
+    def cond(state):
+        _, ks = state
         return ~jnp.any((ks == key) | (ks == EMPTY))
 
-    def body(chunk_id):
-        return (chunk_id + 1) & cmask
+    def body(state):
+        chunk_id, _ = state
+        nid = (chunk_id + 1) & cmask
+        return nid, load(nid)
 
-    chunk_id = jax.lax.while_loop(cond, body, _hash(key, cmask))
-    ks = load(chunk_id)
+    c0 = _hash(key, cmask)
+    chunk_id, ks = jax.lax.while_loop(cond, body, (c0, load(c0)))
     hit_lane = jnp.min(jnp.where(ks == key, lane, BIG))
     empty_lane = jnp.min(jnp.where(ks == EMPTY, lane, BIG))
     lane_id = jnp.where(hit_lane < BIG, hit_lane, empty_lane)
@@ -203,7 +218,7 @@ def symbolic_call(n_bins: int, m: int, cap_a: int, cap_b: int,
         kernel, grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((m,), jnp.int32),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.CompilerParams(
             dimension_semantics=("arbitrary",)),
     ))
 
@@ -226,6 +241,6 @@ def numeric_call(n_bins: int, m: int, cap_a: int, cap_b: int, cap_c: int,
         out_shape=[jax.ShapeDtypeStruct((cap_c,), jnp.int32),
                    jax.ShapeDtypeStruct((cap_c,), jnp.float32)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.CompilerParams(
             dimension_semantics=("arbitrary",)),
     ))

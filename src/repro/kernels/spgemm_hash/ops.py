@@ -30,8 +30,21 @@ def _is_concrete(x) -> bool:
 
 def spgemm_hash(a: CSR, b: CSR, cap_c: int, *, n_bins: int = 8,
                 vector: bool = False, table_size: int | None = None,
-                interpret: bool | None = None) -> CSR:
-    """C = A @ B via the hash kernel. Returns CSR with sorted_cols=False."""
+                interpret: bool | None = None,
+                semiring="plus_times", mask: CSR | None = None,
+                complement_mask: bool = False) -> CSR:
+    """C = A @ B via the hash kernel. Returns CSR with sorted_cols=False.
+
+    The Pallas kernel is specialized to the arithmetic semiring; requests
+    with a non-default ``semiring`` or a ``mask`` take the jnp fallback
+    (``core.spgemm.spgemm_hash_jnp``), which keeps the same contract
+    (two-phase capacity, probe-time mask pruning, unsorted select output).
+    """
+    from repro.core.semiring import resolve_semiring
+    if resolve_semiring(semiring).name != "plus_times" or mask is not None:
+        from repro.core.spgemm import spgemm_hash_jnp
+        return spgemm_hash_jnp(a, b, cap_c, semiring=semiring, mask=mask,
+                               complement_mask=complement_mask)
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     m, n = a.n_rows, b.n_cols

@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import _compat
+
 
 def _spmm_kernel(offsets_ref, indptr_a_ref, a_idx_ref, a_val_ref, x_ref,
                  y_ref, acc_ref):
@@ -54,6 +56,6 @@ def spmm_call(n_bins: int, m: int, n: int, k: int, cap_a: int, dtype,
         _spmm_kernel, grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((m, k), dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.CompilerParams(
             dimension_semantics=("arbitrary",)),
     ))

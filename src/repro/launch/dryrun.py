@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ARCHS, SHAPES, get as get_arch, shape_applicable
+from repro.parallel import sharding
 from repro.configs.base import InputShape, ModelConfig
 from repro.launch.mesh import make_production_mesh
 from repro.models import transformer as T
@@ -139,6 +140,15 @@ def caches_struct(cfg: ModelConfig, batch: int, max_len: int,
 # Cell lowering
 # ---------------------------------------------------------------------------
 
+def _cost_dict(compiled) -> dict:
+    """``Compiled.cost_analysis()``: dict on current jax, list-of-dicts (one
+    per computation) on older jax -- normalize to one dict."""
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
 def lower_cell(cfg: ModelConfig, shape: InputShape, mesh, *,
                overrides: dict | None = None, pctx: ParallelCtx | None = None,
                opt_cfg=None):
@@ -150,7 +160,7 @@ def lower_cell(cfg: ModelConfig, shape: InputShape, mesh, *,
         opt_cfg = opt_cfg or opt_config_for(cfg)
         train_step = step_lib.make_train_step(cfg, pctx, opt_cfg)
         st = state_struct(cfg, pctx, opt_cfg)
-        with jax.set_mesh(mesh):
+        with sharding.mesh_context(mesh):
             lowered = jax.jit(train_step, donate_argnums=(0,)).lower(st, specs)
         return lowered, pctx
     if shape.kind == "prefill":
@@ -160,7 +170,7 @@ def lower_cell(cfg: ModelConfig, shape: InputShape, mesh, *,
             logits, caches = T.prefill(params, tokens, cfg, pctx)
             return logits, caches
 
-        with jax.set_mesh(mesh):
+        with sharding.mesh_context(mesh):
             lowered = jax.jit(prefill_step).lower(p, specs["tokens"])
         return lowered, pctx
     # decode
@@ -170,7 +180,7 @@ def lower_cell(cfg: ModelConfig, shape: InputShape, mesh, *,
     def serve_step(params, token, caches, pos):
         return T.decode_step(params, token, caches, pos, cfg, pctx)
 
-    with jax.set_mesh(mesh):
+    with sharding.mesh_context(mesh):
         lowered = jax.jit(serve_step, donate_argnums=(2,)).lower(
             p, specs["token"], caches, specs["pos"])
     return lowered, pctx
@@ -204,7 +214,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
             v = getattr(mem, k, None)
             if v is not None:
                 rec[k] = int(v)
-    cost = compiled.cost_analysis()
+    cost = _cost_dict(compiled)
     if cost:
         rec["hlo_flops"] = float(cost.get("flops", 0.0))
         rec["hlo_bytes"] = float(cost.get("bytes accessed", 0.0))
@@ -238,7 +248,7 @@ def _calibrate(cfg: ModelConfig, shape: InputShape, mesh, overrides) -> dict:
         lowered, _ = lower_cell(cfg_v, shape, mesh, pctx=pctx_v,
                                 opt_cfg=opt_cfg)
         compiled = lowered.compile()
-        cost = compiled.cost_analysis() or {}
+        cost = _cost_dict(compiled)
         out[tag] = {
             "hlo_flops": float(cost.get("flops", 0.0)),
             "hlo_bytes": float(cost.get("bytes accessed", 0.0)),

@@ -80,6 +80,14 @@ def single_device_ctx(**kw) -> ParallelCtx:
     return ParallelCtx(mesh=None, **kw)
 
 
+def mesh_context(mesh: Mesh):
+    """``jax.set_mesh(mesh)`` where available; on older jax the Mesh object
+    itself is the context manager that installs the global mesh."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
 def _axes_size(mesh: Mesh, axes: Sequence[str]) -> int:
     n = 1
     for a in axes:

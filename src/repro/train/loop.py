@@ -64,22 +64,35 @@ def run(cfg, pctx: ParallelCtx, opt_cfg: opt.AdamWConfig, loop: LoopConfig,
     jitted = jax.jit(train_step, donate_argnums=(0,))
     history = []
     t_last = time.perf_counter()
-    for s in range(start_step, loop.total_steps):
-        if loop.fail_at_step is not None and s == loop.fail_at_step:
-            raise RuntimeError(f"injected failure at step {s}")
-        batch = data.batch(s)
-        state, metrics = jitted(state, batch)
-        if (s + 1) % loop.log_every == 0 or s == loop.total_steps - 1:
-            m = {k: float(v) for k, v in metrics.items()}
-            now = time.perf_counter()
-            m["step"] = s
-            m["sec_per_step"] = (now - t_last) / loop.log_every
-            t_last = now
-            history.append(m)
-            if on_metrics:
-                on_metrics(m)
-        if ckpt is not None and (s + 1) % loop.ckpt_every == 0:
-            ckpt.save(s + 1, state)
+    try:
+        for s in range(start_step, loop.total_steps):
+            if loop.fail_at_step is not None and s == loop.fail_at_step:
+                raise RuntimeError(f"injected failure at step {s}")
+            batch = data.batch(s)
+            state, metrics = jitted(state, batch)
+            if (s + 1) % loop.log_every == 0 or s == loop.total_steps - 1:
+                m = {k: float(v) for k, v in metrics.items()}
+                now = time.perf_counter()
+                m["step"] = s
+                m["sec_per_step"] = (now - t_last) / loop.log_every
+                t_last = now
+                history.append(m)
+                if on_metrics:
+                    on_metrics(m)
+            if ckpt is not None and (s + 1) % loop.ckpt_every == 0:
+                ckpt.save(s + 1, state)
+    except BaseException:
+        # Fault-tolerance contract (DESIGN.md section 6): drain the async
+        # writer before the process dies, or a crash between the host
+        # snapshot and the atomic rename silently loses the newest complete
+        # checkpoint (it would sit in ``.tmp`` forever).  A writer error
+        # must not mask the original failure being propagated.
+        if ckpt is not None:
+            try:
+                ckpt.wait()
+            except Exception:
+                pass
+        raise
     if ckpt is not None:
         ckpt.save(loop.total_steps, state, blocking=True)
     return state, history

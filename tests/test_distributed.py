@@ -88,7 +88,8 @@ mesh = Mesh(np.array(jax.devices()).reshape(2, 2), ("data", "model"))
 p1 = ParallelCtx(mesh=mesh, batch_axes=("data",), fsdp_axes=("data",),
                  remat=False, attn_impl="full", moe_impl="dense")
 s1 = step_lib.init_state(key, cfg, ocfg)
-with jax.set_mesh(mesh):
+from repro.parallel.sharding import mesh_context
+with mesh_context(mesh):
     s1b, m1 = jax.jit(step_lib.make_train_step(cfg, p1, ocfg))(s1, batch)
 assert abs(float(m0["loss"]) - float(m1["loss"])) < 1e-4, (m0["loss"], m1["loss"])
 d = max(float(jnp.abs(a - b).max()) for a, b in

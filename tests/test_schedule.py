@@ -1,6 +1,9 @@
 """Property tests for the load-balanced scheduler (paper C1, Fig. 6)."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import schedule as sched

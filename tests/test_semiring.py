@@ -1,0 +1,252 @@
+"""Masked & semiring SpGEMM layer (DESIGN.md section 7).
+
+Deliberately hypothesis-free: this coverage must run even in environments
+without the optional property-testing extra.
+
+Contracts:
+  * all four semirings x {esc, heap, hash} == dense mask-after oracle, with
+    masks (plain + complemented) pruned inside the accumulators;
+  * boolean L@U == thresholded numeric result (semiring identity);
+  * masked symbolic() returns the exact masked capacity;
+  * the recipe routes masked / unsorted-boolean cases to the hash family;
+  * the example's masked triangle count agrees with brute force on an
+    R-MAT scale-7 graph with no dense product on the path.
+"""
+import os
+import sys
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.core import (CSR, spgemm, spgemm_esc, spgemm_heap, spgemm_hash_jnp,
+                        symbolic, choose_algorithm_from_stats, measure_stats,
+                        masked_row_bound, resolve_semiring, SEMIRINGS)
+from repro.core.recipe import SpGEMMStats
+from repro.core.spgemm import symbolic_flops
+from repro.data.rmat import rmat_csr, symmetrize, triangular_split
+
+ALL_SEMIRINGS = ("plus_times", "boolean", "min_plus", "plus_first")
+ALGOS = ("esc", "heap", "hash")
+
+
+def _dense_oracle(a: CSR, b: CSR, sr_name: str) -> np.ndarray:
+    """Independent numpy semiring product over *structural* nonzeros."""
+    ad, bd = np.asarray(a.to_dense()), np.asarray(b.to_dense())
+    ap, bp = ad != 0, bd != 0
+    if sr_name == "plus_times":
+        return ad @ bd
+    if sr_name == "boolean":
+        return ((ap.astype(np.float32) @ bp.astype(np.float32)) > 0) \
+            .astype(np.float32)
+    if sr_name == "plus_first":
+        return ad @ bp.astype(np.float32)
+    if sr_name == "min_plus":
+        s = np.where(ap[:, :, None] & bp[None, :, :],
+                     ad[:, :, None] + bd[None, :, :], np.inf)
+        out = s.min(axis=1)
+        return np.where(np.isinf(out), 0.0, out).astype(np.float32)
+    raise AssertionError(sr_name)
+
+
+def _mask_after(c: np.ndarray, mask: CSR, complement: bool) -> np.ndarray:
+    md = np.asarray(mask.to_dense()) != 0
+    keep = ~md if complement else md
+    return np.where(keep, c, 0.0)
+
+
+def _run(a, b, algo, cap, **kw):
+    if algo == "heap":
+        cd = _mask_after(_dense_oracle(a, b, "plus_times"),
+                         kw["mask"], kw["complement_mask"]) \
+            if kw.get("mask") is not None else _dense_oracle(a, b, "plus_times")
+        row_cap = int(max((cd != 0).sum(axis=1))) + 1
+        k_width = int(np.asarray(a.row_nnz()).max()) + 1
+        return spgemm(a, b, cap, algorithm="heap", row_cap=row_cap,
+                      k_width=k_width, **kw)
+    return spgemm(a, b, cap, algorithm=algo, **kw)
+
+
+@pytest.mark.parametrize("semiring", ALL_SEMIRINGS)
+@pytest.mark.parametrize("algo", ALGOS)
+def test_semiring_unmasked_matches_oracle(semiring, algo):
+    a = rmat_csr(5, 3, "G500", seed=3)
+    b = rmat_csr(5, 3, "ER", seed=103)
+    cd = _dense_oracle(a, b, semiring)
+    cap = int((cd != 0).sum()) + 8
+    c = _run(a, b, algo, cap, semiring=semiring)
+    assert np.allclose(np.asarray(c.to_dense()), cd, atol=1e-3), \
+        (semiring, algo)
+
+
+@pytest.mark.parametrize("semiring", ALL_SEMIRINGS)
+@pytest.mark.parametrize("algo", ALGOS)
+@pytest.mark.parametrize("complement", (False, True))
+def test_semiring_masked_matches_mask_after_oracle(semiring, algo, complement):
+    """Masked SpGEMM (pruned inside the loops) == dense mask-after oracle."""
+    a = rmat_csr(5, 3, "G500", seed=11)
+    b = rmat_csr(5, 3, "ER", seed=111)
+    mask = rmat_csr(5, 4, "ER", seed=7)
+    cd = _mask_after(_dense_oracle(a, b, semiring), mask, complement)
+    cap = int((cd != 0).sum()) + 8
+    c = _run(a, b, algo, cap, semiring=semiring, mask=mask,
+             complement_mask=complement)
+    assert np.allclose(np.asarray(c.to_dense()), cd, atol=1e-3), \
+        (semiring, algo, complement)
+
+
+def test_boolean_equals_thresholded_numeric():
+    """Semiring identity: boolean L@U == (numeric L@U != 0) structurally."""
+    a = symmetrize(rmat_csr(6, 4, "G500", seed=2))
+    L, U = triangular_split(a)
+    num = _dense_oracle(L, U, "plus_times")
+    cap = int((num != 0).sum()) + 8
+    c_bool = spgemm_esc(L, U, cap, semiring="boolean")
+    got = np.asarray(c_bool.to_dense())
+    assert np.array_equal(got != 0, num != 0)
+    assert np.all(got[got != 0] == 1.0)
+
+
+def test_symbolic_masked_capacity_exact():
+    a = rmat_csr(5, 3, "G500", seed=5)
+    b = rmat_csr(5, 3, "ER", seed=105)
+    mask = rmat_csr(5, 4, "ER", seed=9)
+    ap = np.asarray(a.to_dense()) != 0
+    bp = np.asarray(b.to_dense()) != 0
+    md = np.asarray(mask.to_dense()) != 0
+    pat = (ap.astype(np.int32) @ bp.astype(np.int32)) > 0
+    rn, indptr, flop, _ = symbolic(a, b, mask=mask)
+    assert np.array_equal(np.asarray(rn), (pat & md).sum(axis=1))
+    rn_c, _, _, _ = symbolic(a, b, mask=mask, complement_mask=True)
+    assert np.array_equal(np.asarray(rn_c), (pat & ~md).sum(axis=1))
+    # the a-priori bound dominates the exact count
+    bound = np.asarray(masked_row_bound(symbolic_flops(a, b), mask))
+    assert np.all(np.asarray(rn) <= bound)
+
+
+def test_recipe_masked_and_unsorted_boolean_routing():
+    base = dict(n_rows=1000, n_cols=1000, nnz_a=16_000, flop=256_000,
+                nnz_c_est=128_000, max_row_flop=64, mean_row_nnz_a=16,
+                row_skew=2.0, compression_ratio=1.5, density_ef=4.0)
+    sparse_mask = SpGEMMStats(**base, mask_density=0.01)
+    dense_mask = SpGEMMStats(**base, mask_density=0.9)
+    # sparse mask -> hash (probe table collapses to the mask support)
+    assert choose_algorithm_from_stats(sparse_mask, False,
+                                       "masked") == "hash"
+    # dense mask at low CR -> LxU-like regime -> heap
+    assert choose_algorithm_from_stats(dense_mask, False, "masked") == "heap"
+    # high CR dominates even under a dense mask
+    hc = SpGEMMStats(**{**base, "compression_ratio": 8.0}, mask_density=0.9)
+    assert choose_algorithm_from_stats(hc, False, "masked") == "hash"
+    # unsorted boolean -> hash family regardless of use case (C8)
+    s = SpGEMMStats(**base)
+    assert choose_algorithm_from_stats(
+        s, False, "AxA", semiring="boolean") in ("hash", "hash_vector")
+    dense_ef = SpGEMMStats(**{**base, "density_ef": 16.0})
+    assert choose_algorithm_from_stats(
+        dense_ef, False, "AxA", semiring="boolean") == "hash_vector"
+    # sorted boolean falls through to the plain table
+    assert choose_algorithm_from_stats(
+        s, True, "AxA", semiring="boolean") == \
+        choose_algorithm_from_stats(s, True, "AxA")
+
+
+def test_measure_stats_mask_density():
+    a = rmat_csr(5, 3, "G500", seed=0)
+    mask = rmat_csr(5, 2, "ER", seed=1)
+    s = measure_stats(a, a, mask=mask)
+    frac = float(mask.nnz) / (32 * 32)
+    assert s.mask_density == pytest.approx(frac)
+    s_c = measure_stats(a, a, mask=mask, complement_mask=True)
+    assert s_c.mask_density == pytest.approx(1.0 - frac)
+    assert measure_stats(a, a).mask_density == 1.0
+
+
+def test_hash_jnp_contract():
+    """Fallback keeps the hash contract: unsorted flag, correct values."""
+    a = rmat_csr(5, 3, "G500", seed=4)
+    cd = _dense_oracle(a, a, "plus_times")
+    cap = int((cd != 0).sum()) + 8
+    c = spgemm_hash_jnp(a, a, cap)
+    assert not c.sorted_cols
+    assert np.allclose(np.asarray(c.to_dense()), cd, atol=1e-3)
+    assert int(c.nnz) == int((cd != 0).sum())
+    # sort epilogue restores Table 1 sortedness
+    cs = c.sort_rows()
+    cols, ip = np.asarray(cs.indices), np.asarray(cs.indptr)
+    for i in range(cs.n_rows):
+        assert np.all(np.diff(cols[ip[i]:ip[i + 1]]) > 0)
+
+
+def test_unsorted_mask_is_canonicalized_by_dispatcher():
+    """An unsorted mask (e.g. hash-family output) gives the same result as
+    its sorted form -- the dispatcher re-sorts before the probes."""
+    a = rmat_csr(5, 3, "G500", seed=11)
+    b = rmat_csr(5, 3, "ER", seed=111)
+    mask = rmat_csr(5, 4, "ER", seed=7)
+    cd = _mask_after(_dense_oracle(a, b, "plus_times"), mask, False)
+    cap = int((cd != 0).sum()) + 8
+    for algo in ("esc", "heap"):
+        c = _run(a, b, algo, cap, mask=mask.with_unsorted_flag(),
+                 complement_mask=False)
+        assert np.allclose(np.asarray(c.to_dense()), cd, atol=1e-3), algo
+
+
+def test_unsorted_mask_in_symbolic_and_shape_check():
+    a = rmat_csr(5, 3, "G500", seed=11)
+    b = rmat_csr(5, 3, "ER", seed=111)
+    mask = rmat_csr(5, 4, "ER", seed=7)
+    # symbolic canonicalizes an unsorted mask instead of asserting
+    rn_sorted, _, _, _ = symbolic(a, b, mask=mask)
+    rn_unsorted, _, _, _ = symbolic(a, b, mask=mask.with_unsorted_flag())
+    assert np.array_equal(np.asarray(rn_sorted), np.asarray(rn_unsorted))
+    # a shape-mismatched mask fails loudly, not silently
+    bad = rmat_csr(4, 3, "ER", seed=1)         # 16x16 mask on a 32x32 product
+    with pytest.raises(AssertionError, match="mask shape"):
+        spgemm_esc(a, b, 64, mask=bad)
+
+
+def test_recipe_bcsr_only_for_plain_products():
+    """Block-dense stats must not recommend bcsr for semiring/masked
+    requests the bcsr path would reject."""
+    base = dict(n_rows=1000, n_cols=1000, nnz_a=16_000, flop=256_000,
+                nnz_c_est=128_000, max_row_flop=64, mean_row_nnz_a=16,
+                row_skew=2.0, compression_ratio=2.0, density_ef=16.0,
+                block_density=0.5)
+    plain = SpGEMMStats(**base)
+    assert choose_algorithm_from_stats(plain, False, "AxA") == "bcsr"
+    assert choose_algorithm_from_stats(
+        plain, False, "AxA", semiring="boolean") != "bcsr"
+    masked = SpGEMMStats(**base, mask_density=0.1)
+    assert choose_algorithm_from_stats(masked, False, "masked") != "bcsr"
+    # a fully dense mask reaches mask_density == 1.0 but is still a mask
+    dense_mask = SpGEMMStats(**base, mask_density=1.0, has_mask=True)
+    assert choose_algorithm_from_stats(dense_mask, False, "AxA") != "bcsr"
+
+
+def test_semiring_registry():
+    assert resolve_semiring("any_pair") is SEMIRINGS["boolean"]
+    assert resolve_semiring(SEMIRINGS["min_plus"]).name == "min_plus"
+    with pytest.raises(ValueError):
+        resolve_semiring("max_times")
+
+
+def test_triangle_count_scale7_no_dense_product():
+    """The example's masked triangle count vs brute force at scale 7."""
+    from examples.graph_analytics import triangle_count
+    a = symmetrize(rmat_csr(7, 6, "G500", seed=1))
+    ad = np.asarray(a.to_dense()).astype(np.int64)
+    brute = int(np.trace(np.linalg.matrix_power(ad, 3)) // 6)
+    assert triangle_count(a) == brute
+
+
+def test_masked_bfs_agrees_with_dense_frontier():
+    from examples.graph_analytics import (multi_source_bfs,
+                                          multi_source_bfs_masked)
+    a = symmetrize(rmat_csr(6, 6, "G500", seed=2))
+    sources = [0, 5, 21]
+    d_dense = np.asarray(multi_source_bfs(a, sources, n_hops=4))
+    d_mask = np.asarray(multi_source_bfs_masked(a, sources, n_hops=4))
+    assert np.array_equal(d_dense, d_mask)

@@ -6,6 +6,7 @@ compute the same C, differing only in sortedness and cost.
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (CSR, spgemm, spgemm_dense, spgemm_esc, spgemm_heap,
