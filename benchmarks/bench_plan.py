@@ -1,0 +1,183 @@
+"""Inspector-executor planner benchmark (DESIGN.md section 10).
+
+Two questions, on skewed (G500) R-MAT inputs:
+
+  1. **Planned vs unplanned iteration**: how much of a repeated product's
+     wall-clock is inspection (schedule + symbolic + recipe) that
+     ``plan.execute`` amortizes away?  Measured for the hash kernel (the
+     symbolic *kernel* is skipped on execute) and for ESC (the exact
+     ``flop_cap`` shrinks the expansion buffer from the worst-case bound).
+  2. **Per-bin vs global-max table sizing** (Fig. 7 lines 9-12): the same
+     numeric kernel run with each bin's power-of-two table size vs every
+     bin paying for the single worst row in the matrix.
+
+``--smoke`` runs a downscaled version with hard assertions -- planned ==
+unplanned == oracle, per-bin == global-max, zero schedule/symbolic
+invocations inside ``plan.execute``, cache hit on re-plan -- used as the CI
+smoke step.
+
+    PYTHONPATH=src python benchmarks/bench_plan.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, ".")
+
+from repro.core import (clear_plan_cache, plan_cache_stats, plan_spgemm,
+                        spgemm, spgemm_esc)
+from repro.core.spgemm import symbolic_flops
+from repro.data.rmat import rmat_csr
+from repro.kernels.spgemm_hash import ops as hash_ops
+
+from benchmarks.common import bench, emit, flops_rate
+
+
+def _counted(module_name: str, attr: str, counter: dict):
+    """Swap ``module.attr`` for a counting wrapper; return the restorer."""
+    mod = importlib.import_module(module_name)
+    orig = getattr(mod, attr)
+
+    def wrapper(*a, **kw):
+        counter[attr] = counter.get(attr, 0) + 1
+        return orig(*a, **kw)
+
+    setattr(mod, attr, wrapper)
+    return lambda: setattr(mod, attr, orig)
+
+
+def planned_vs_unplanned(a, tag: str, iters: int):
+    """Repeated A@A: fresh spgemm each call vs one plan + executes."""
+    flop = int(np.asarray(symbolic_flops(a, a)).sum())
+    clear_plan_cache()
+    plan = plan_spgemm(a, a, algorithm="hash")
+    cap = plan.cap_c
+
+    t_un = bench(lambda: spgemm(a, a, cap, algorithm="hash"), iters=iters)
+    emit(f"plan,{tag},hash_unplanned", t_un, flops_rate(flop, t_un))
+    t_pl = bench(lambda: plan.execute(a, a), iters=iters)
+    emit(f"plan,{tag},hash_planned", t_pl,
+         f"{flops_rate(flop, t_pl)};speedup={t_un / t_pl:.2f}x")
+
+    # ESC: the planned path passes the exact flop bound instead of the
+    # worst-case O(cap_a * min(cap_b, n)) expansion buffer.
+    plan_esc = plan_spgemm(a, a, algorithm="esc")
+    t_eun = bench(lambda: spgemm_esc(a, a, cap_c=cap), iters=iters)
+    emit(f"plan,{tag},esc_default_flopcap", t_eun, flops_rate(flop, t_eun))
+    t_epl = bench(lambda: plan_esc.execute(a, a), iters=iters)
+    emit(f"plan,{tag},esc_planned", t_epl,
+         f"{flops_rate(flop, t_epl)};speedup={t_eun / t_epl:.2f}x")
+    return plan
+
+
+def per_bin_vs_global(a, tag: str, iters: int, n_bins: int = 8):
+    """Numeric kernel with per-bin table sizes vs global-max everywhere."""
+    flop = int(np.asarray(symbolic_flops(a, a)).sum())
+    offsets, bin_tsize, table_size = hash_ops.hash_schedule(a, a, n_bins)
+    uniform = jnp.full_like(bin_tsize, jnp.int32(table_size))
+    cd_nnz = int(np.asarray((a.to_dense() @ a.to_dense()) != 0).sum())
+    cap = cd_nnz + 8
+
+    t_bin = bench(lambda: hash_ops.spgemm_hash(
+        a, a, cap, table_size=table_size,
+        schedule=(offsets, bin_tsize)), iters=iters)
+    sizes = "/".join(str(s) for s in np.asarray(bin_tsize).tolist())
+    emit(f"plan,{tag},table_per_bin", t_bin, f"sizes={sizes}")
+    t_max = bench(lambda: hash_ops.spgemm_hash(
+        a, a, cap, table_size=table_size,
+        schedule=(offsets, uniform)), iters=iters)
+    emit(f"plan,{tag},table_global_max", t_max,
+         f"size={table_size};per_bin_speedup={t_max / t_bin:.2f}x")
+    return (offsets, bin_tsize, uniform, table_size, cap)
+
+
+def smoke():
+    """Downscaled run with hard assertions (the CI smoke step)."""
+    # skewed and sparse: equal-flop bins then get genuinely different
+    # max-row-flop bounds, so per-bin table sizes actually spread
+    a = rmat_csr(6, 2, "G500", seed=1)
+    cd = np.asarray(a.to_dense()) @ np.asarray(a.to_dense())
+
+    clear_plan_cache()
+    plan = plan_spgemm(a, a, algorithm="hash")
+    assert plan.nnz_c == int((cd != 0).sum())
+
+    # no schedule / symbolic-kernel work inside execute
+    counter: dict = {}
+    restore = [
+        _counted("repro.core.schedule", "make_schedule", counter),
+        _counted("repro.core.schedule", "rows_to_bins", counter),
+        _counted("repro.kernels.spgemm_hash.kernel", "symbolic_call",
+                 counter),
+    ]
+    try:
+        c_pl = plan.execute(a, a)
+    finally:
+        for r in restore:
+            r()
+    assert not counter, f"plan.execute re-inspected: {counter}"
+    assert np.allclose(np.asarray(c_pl.to_dense()), cd, atol=1e-3)
+
+    # planned == unplanned == oracle
+    c_un = spgemm(a, a, plan.cap_c, algorithm="hash")
+    assert np.allclose(np.asarray(c_un.to_dense()), cd, atol=1e-3)
+
+    # re-plan on the same structure is a cache hit
+    before = plan_cache_stats()
+    plan2 = plan_spgemm(a, a, algorithm="hash")
+    after = plan_cache_stats()
+    assert plan2 is plan and after["hits"] == before["hits"] + 1
+
+    # per-bin sizing changes cost, not results
+    offsets, bin_tsize, uniform, table_size, cap = \
+        per_bin_vs_global(a, "smoke", iters=1, n_bins=16)
+    assert int(np.asarray(bin_tsize).min()) < table_size, \
+        "expected a real per-bin size spread on the skewed smoke input"
+    c_bin = hash_ops.spgemm_hash(a, a, cap, table_size=table_size,
+                                 schedule=(offsets, bin_tsize))
+    c_max = hash_ops.spgemm_hash(a, a, cap, table_size=table_size,
+                                 schedule=(offsets, uniform))
+    assert np.allclose(np.asarray(c_bin.to_dense()),
+                       np.asarray(c_max.to_dense()), atol=1e-3)
+    assert np.allclose(np.asarray(c_bin.to_dense()), cd, atol=1e-3)
+    assert int(np.asarray(bin_tsize).max()) <= table_size
+
+    planned_vs_unplanned(a, "smoke", iters=1)
+    print("bench_plan smoke: OK", flush=True)
+
+
+def run(quick: bool = True):
+    """benchmarks.run suite entry.
+
+    Skewed *sparse* inputs are where per-bin sizing pays: with G500 skew
+    at low edge factor, most equal-flop bins hold light rows while the
+    global max chases one heavy row (dense-ish inputs saturate every
+    bin's bound at n_cols and the sizes collapse to one value).
+    """
+    configs = ((7, 2, 16),) if quick else ((7, 2, 16), (8, 2, 32))
+    for scale, ef, n_bins in configs:
+        a = rmat_csr(scale, ef, "G500", seed=scale)
+        tag = f"g500_s{scale}_ef{ef}"
+        planned_vs_unplanned(a, tag, iters=2 if quick else 3)
+        per_bin_vs_global(a, tag, iters=2 if quick else 3, n_bins=n_bins)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="downscaled run with correctness assertions")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+        return
+    run(quick=not args.full)
+
+
+if __name__ == "__main__":
+    main()

@@ -94,15 +94,17 @@ def fig9_balanced_vs_naive():
     m = a.n_rows
     naive = jnp.asarray(np.linspace(0, m, 9).astype(np.int32))
     tsize = sched.lowest_p2(int(jnp.max(flops)) + 1)
+    # naive bins get no per-bin sizing either: every bin probes the max
+    uniform = jnp.full((8,), tsize, jnp.int32)
     sym = HK.symbolic_call(8, m, a.cap, a.cap, tsize, False, True)
     num = HK.numeric_call(8, m, a.cap, a.cap, cap, tsize, False, True)
 
     def naive_run():
-        rn = sym(naive, a.indptr, a.indptr, a.indices,
+        rn = sym(naive, uniform, a.indptr, a.indptr, a.indices,
                  a.data.astype(jnp.float32), a.indices,
                  a.data.astype(jnp.float32))
         ip = sched.prefix_sum(rn).astype(jnp.int32)
-        return num(naive, a.indptr, a.indptr, ip, a.indices,
+        return num(naive, uniform, a.indptr, a.indptr, ip, a.indices,
                    a.data.astype(jnp.float32), a.indices,
                    a.data.astype(jnp.float32))
     t_nv = bench(naive_run, iters=2)

@@ -15,6 +15,7 @@ from . import bench_spgemm_figs as figs
 from . import bench_graph as graph
 from . import bench_micro as micro
 from . import bench_moe_dispatch as moe_bench
+from . import bench_plan as plan_bench
 
 
 SUITES = [
@@ -32,6 +33,7 @@ SUITES = [
     ("table4_recipe", lambda q: figs.table4_recipe(q)),
     ("graph", lambda q: graph.run(q)),
     ("moe_dispatch", lambda q: moe_bench.run(q)),
+    ("plan", lambda q: plan_bench.run(q)),
 ]
 
 

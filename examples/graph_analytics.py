@@ -1,6 +1,6 @@
 """Graph analytics on the SpGEMM engine: the paper's two application
 scenarios (sections 5.5-5.6) end-to-end, on the masked/semiring layer
-(DESIGN.md section 7).
+(DESIGN.md section 7) and the inspector-executor planner (section 10).
 
   * triangle counting: reorder by degree, split A = L + U, then one masked
     product ``spgemm(L, U, mask=A_perm)`` -- the mask prunes non-closing
@@ -11,25 +11,32 @@ scenarios (sections 5.5-5.6) end-to-end, on the masked/semiring layer
     mask=visited, complement_mask=True)`` where the complemented visited
     mask retires vertices inside the product.
 
+Every sparse product goes through ``plan_spgemm`` + ``plan.execute``: the
+schedule + symbolic + recipe inspection runs once per *structure*, so a
+repeated query over the same graph (the serving shape: many triangle
+counts on reweighted graphs, the same BFS re-issued) skips straight to the
+numeric phase via the structure-keyed plan cache.
+
     PYTHONPATH=src python examples/graph_analytics.py
 """
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import CSR, lowest_p2, spgemm, spmm, symbolic
+from repro.core import CSR, plan_cache_stats, plan_spgemm, spmm
 from repro.data.rmat import rmat_csr, symmetrize, triangular_split
 
 
 def triangle_count(a: CSR) -> int:
     """Triangles via masked wedges: tri = sum(L@U under mask A_perm) / 2.
 
-    The product path is fully sparse: capacity comes from the masked
-    symbolic phase and the count is read off the CSR values directly.
+    The product path is fully sparse: `plan_spgemm` runs the masked
+    symbolic phase once (exact capacity, recorded algorithm) and the
+    execute is numeric-only -- a second count on the same structure (e.g.
+    a reweighted graph) reuses the cached plan.
     """
     L, U, adj = triangular_split(a, return_adjacency=True)
-    row_nnz, _, _, _ = symbolic(L, U, mask=adj)
-    cap = int(np.asarray(row_nnz).sum()) + 8
-    c = spgemm(L, U, cap, algorithm="auto", mask=adj, semiring="plus_times")
+    plan = plan_spgemm(L, U, mask=adj, semiring="plus_times")
+    c = plan.execute(L, U)
     tri = float(jnp.where(c.valid_mask(), c.data, 0).sum()) / 2
     return int(round(tri))
 
@@ -67,6 +74,12 @@ def multi_source_bfs_masked(a: CSR, sources, n_hops: int):
     product, so the frontier CSR only ever holds newly discovered vertices
     -- the direction-agnostic analogue of the paper's section 5.5 workload
     with the frontier kept sparse end to end.
+
+    Each hop's product is planned: the plan's symbolic phase *is* the
+    frontier-size oracle (``plan.nnz_c``), and its exact capacities feed
+    the numeric execute.  Hop structures depend only on (graph, sources),
+    so re-issuing the same BFS -- the serving pattern -- hits the plan
+    cache on every hop and runs numeric-only end to end.
     """
     n, k = a.n_rows, len(sources)
     cap = n * k
@@ -76,15 +89,15 @@ def multi_source_bfs_masked(a: CSR, sources, n_hops: int):
     dist = np.full((n, k), -1, np.int32)
     dist[rows, cols] = 0
     for hop in range(1, n_hops + 1):
-        row_nnz, _, _, _ = symbolic(a, frontier, mask=visited,
-                                    complement_mask=True)
-        nnz_next = int(np.asarray(row_nnz).sum())
-        if nnz_next == 0:
+        # bucket_caps: hop structures drift, so power-of-two capacities let
+        # hops with similar frontier sizes share compiled programs on the
+        # first run (repeat runs hit the plan cache regardless)
+        plan = plan_spgemm(a, frontier, algorithm="hash",
+                           semiring="boolean", mask=visited,
+                           complement_mask=True, bucket_caps=True)
+        if plan.nnz_c == 0:
             break
-        # power-of-two capacity buckets: cap_c is a static jit argument, so
-        # an exact per-hop cap would recompile the product every hop.
-        nxt = spgemm(a, frontier, lowest_p2(nnz_next + 8), algorithm="hash",
-                     semiring="boolean", mask=visited, complement_mask=True)
+        nxt = plan.execute(a, frontier)
         nr, nc = _coo_of(nxt)
         dist[nr, nc] = hop
         vr, vc = _coo_of(visited)
@@ -95,6 +108,8 @@ def multi_source_bfs_masked(a: CSR, sources, n_hops: int):
 
 
 def main():
+    import time
+
     # undirected graph from an R-MAT pattern
     a = symmetrize(rmat_csr(8, 8, "G500", seed=1))
     ad = np.asarray(a.to_dense())
@@ -107,12 +122,31 @@ def main():
 
     sources = [0, 17, 42, 100]
     dist = multi_source_bfs(a, sources, n_hops=6)
+
+    t0 = time.perf_counter()
     dist_m = multi_source_bfs_masked(a, sources, n_hops=6)
+    t_first = time.perf_counter() - t0
     assert np.array_equal(np.asarray(dist), np.asarray(dist_m)), \
         "masked-frontier BFS must agree with the dense frontier stack"
     reached = np.asarray((dist >= 0).sum(axis=0))
     print(f"multi-source BFS from {sources}: reached per source {reached} "
           f"(dense SpMM == masked boolean SpGEMM)")
+
+    # serving shape: the same query again -- every hop hits the plan cache
+    before = plan_cache_stats()
+    t0 = time.perf_counter()
+    dist_r = multi_source_bfs_masked(a, sources, n_hops=6)
+    t_repeat = time.perf_counter() - t0
+    after = plan_cache_stats()
+    assert np.array_equal(np.asarray(dist_m), np.asarray(dist_r))
+    hops_hit = after["hits"] - before["hits"]
+    assert after["misses"] == before["misses"], \
+        "repeat BFS must not plan anything new"
+    print(f"repeat BFS: {hops_hit} cached plans (no schedule/symbolic/"
+          f"recipe recomputation), {t_first:.3f}s -> {t_repeat:.3f}s")
+    # repeat triangle count hits the cache too (reweighted-graph pattern)
+    assert triangle_count(a) == brute
+    print(f"plan cache: {plan_cache_stats()}")
 
 
 if __name__ == "__main__":

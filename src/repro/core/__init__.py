@@ -5,10 +5,12 @@ from .semiring import (Semiring, SEMIRINGS, resolve_semiring, PLUS_TIMES,
 from .spgemm import (spgemm, spgemm_dense, spgemm_esc, spgemm_heap,
                      spgemm_hash_jnp, spmm, symbolic, symbolic_flops)
 from .schedule import (flops_per_row, rows_to_bins, bin_flop, make_schedule,
-                       lowbnd, lowest_p2, max_flop_per_bin_row,
-                       masked_row_bound)
-from .recipe import (SpGEMMStats, measure_stats, model_costs,
+                       lowbnd, lowest_p2, lowest_p2_arr, bin_table_sizes,
+                       max_flop_per_bin_row, masked_row_bound, guard_i32_flop)
+from .recipe import (SpGEMMStats, measure_stats, model_costs, recommend,
                      choose_algorithm, choose_algorithm_from_stats)
+from .plan import (SpGEMMPlan, plan_spgemm, structure_key, plan_cache_stats,
+                   clear_plan_cache)
 
 __all__ = [
     "CSR", "BCSR", "ELL", "csr_to_bcsr", "bcsr_to_csr",
@@ -17,7 +19,10 @@ __all__ = [
     "spgemm", "spgemm_dense", "spgemm_esc", "spgemm_heap", "spgemm_hash_jnp",
     "spmm", "symbolic", "symbolic_flops",
     "flops_per_row", "rows_to_bins", "bin_flop", "make_schedule", "lowbnd",
-    "lowest_p2", "max_flop_per_bin_row", "masked_row_bound",
-    "SpGEMMStats", "measure_stats", "model_costs", "choose_algorithm",
-    "choose_algorithm_from_stats",
+    "lowest_p2", "lowest_p2_arr", "bin_table_sizes", "max_flop_per_bin_row",
+    "masked_row_bound", "guard_i32_flop",
+    "SpGEMMStats", "measure_stats", "model_costs", "recommend",
+    "choose_algorithm", "choose_algorithm_from_stats",
+    "SpGEMMPlan", "plan_spgemm", "structure_key", "plan_cache_stats",
+    "clear_plan_cache",
 ]

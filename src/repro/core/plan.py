@@ -1,0 +1,303 @@
+"""Inspector-executor SpGEMM planner (DESIGN.md section 10).
+
+The paper's two-phase method (Fig. 7) and ``RowsToThreads`` scheduling
+(Fig. 6) are pure *inspection*: for a fixed sparsity structure they can be
+computed once and reused across every numeric product.  That is exactly the
+repeated-product shape of graph workloads (multi-source BFS iterations,
+triangle counting, A.A chains) and of a serving system answering many
+products over the same graph -- the symbolic/numeric split-and-reuse that
+Deveci et al. (arXiv:1801.03065) make a first-class API in KokkosKernels.
+
+:func:`plan_spgemm` runs the full inspection once -- flop counting, equal-
+flop binning, per-bin hash-table sizing, the exact symbolic phase, and the
+recipe's algorithm choice -- and freezes the result in a :class:`SpGEMMPlan`.
+``plan.execute(a, b)`` (or ``spgemm(a, b, plan=plan)``) then runs only the
+numeric work: no schedule, no symbolic kernel, no recipe, and -- because
+every capacity in the plan is a deterministic static int -- no retracing
+once each (algorithm, capacity) program is compiled.
+
+Plans are cached under a **structure key**: a blake2b digest of each
+operand's ``(shape, cap, nnz, indptr, indices)`` plus the request's
+semantic fields (semiring, mask structure, complement flag, sortedness,
+algorithm, use case, n_bins).  Values deliberately do not enter the key --
+a re-weighted graph with the same adjacency hits the cached plan.
+Invalidation is by construction: a structural change produces a different
+key, and :func:`clear_plan_cache` empties the table wholesale.
+
+Planning is a host-side (eager) operation: the exact capacities must be
+concrete Python ints to become static shapes.  ``execute`` is jit-friendly
+-- it only calls the already-specialized numeric primitives.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .formats import CSR
+from .semiring import Semiring, resolve_semiring
+from . import schedule as sched
+from .spgemm import (_canon_mask, _check_mask, spgemm_dense, spgemm_esc,
+                     spgemm_hash_jnp, spgemm_heap, symbolic)
+
+
+def structure_key(a: CSR) -> bytes:
+    """Digest of a CSR's *structure* (pattern + static layout), not values.
+
+    Covers shape, capacity, nnz, and the indptr/indices arrays (padded
+    tails are zeros by the CSR contract, so whole-array hashing is
+    deterministic).  Two CSRs with equal keys run identically through
+    schedule + symbolic, which is what makes plan reuse sound.
+    """
+    cached = a.__dict__.get("_structure_digest")
+    if cached is not None:
+        return cached
+    h = hashlib.blake2b(digest_size=16)
+    h.update(repr((a.shape, a.cap, int(a.nnz), a.sorted_cols)).encode())
+    h.update(np.asarray(a.indptr).tobytes())
+    h.update(np.asarray(a.indices).tobytes())
+    digest = h.digest()
+    # memoize on the (frozen, immutable-field) instance: jax arrays cannot
+    # be mutated in place and dataclasses.replace builds a fresh object, so
+    # the digest can never go stale; repeat lookups (the serving loop's
+    # per-hop cache hits) skip the O(nnz) host transfer + hash
+    object.__setattr__(a, "_structure_digest", digest)
+    return digest
+
+
+#: plan cache: PlanKey tuple -> SpGEMMPlan (insertion-ordered; LRU-bounded
+#: so a serving loop over many structures cannot grow host/device memory
+#: without bound -- each entry pins O(m) arrays plus the mask CSR)
+_CACHE: dict = {}
+_STATS = {"hits": 0, "misses": 0}
+#: maximum cached plans; oldest-used evicted first.
+PLAN_CACHE_CAPACITY = 256
+
+
+def plan_cache_stats() -> dict:
+    """Copy of the cache counters: {'hits', 'misses', 'size'}."""
+    return {**_STATS, "size": len(_CACHE)}
+
+
+def clear_plan_cache() -> None:
+    _CACHE.clear()
+    _STATS["hits"] = _STATS["misses"] = 0
+
+
+def _plan_key(a: CSR, b: CSR, mask: Optional[CSR], sr_name: str,
+              complement_mask: bool, sorted_output: bool, algorithm: str,
+              use_case: Optional[str], n_bins: int) -> tuple:
+    return (structure_key(a), structure_key(b),
+            None if mask is None else structure_key(mask),
+            sr_name, complement_mask, sorted_output, algorithm, use_case,
+            n_bins)
+
+
+@dataclass(frozen=True)
+class SpGEMMPlan:
+    """Frozen product recipe for one (A-structure, B-structure) pair.
+
+    Everything the executor needs, nothing recomputed: the flop profile and
+    equal-flop bin offsets (Fig. 6), the per-bin power-of-two hash-table
+    sizes and the static scratch allocation (Fig. 7 lines 9-12), the exact
+    ``indptr_c``/capacities from the symbolic phase, and the recipe's
+    algorithm choice.  All capacities are Python ints -- static shapes --
+    so structure-identical executes hit the jit dispatch cache.
+    """
+    key: tuple = dataclasses.field(repr=False)
+    algorithm: str
+    semiring: str
+    complement_mask: bool
+    sorted_output: bool
+    mask: Optional[CSR] = dataclasses.field(repr=False)
+    shape_a: Tuple[int, int]
+    shape_b: Tuple[int, int]
+    cap_a: int
+    cap_b: int
+    nnz_a: int
+    nnz_b: int
+    n_bins: int
+    # --- inspection products -------------------------------------------
+    flop: jax.Array = dataclasses.field(repr=False)      # per-row flop
+    total_flop: int
+    flop_cap: int            # exact expansion bound for esc/jnp-hash paths
+    offsets: jax.Array = dataclasses.field(repr=False)   # (n_bins + 1,)
+    bin_tsize: jax.Array = dataclasses.field(repr=False)  # (n_bins,) p2
+    table_size: int          # static scratch allocation (bin max, p2)
+    row_nnz_c: jax.Array = dataclasses.field(repr=False)
+    indptr_c: jax.Array = dataclasses.field(repr=False)
+    nnz_c: int
+    cap_c: int               # exact nnz(C) as a static capacity
+    row_cap: int             # heap: max nnz(c_i*)
+    k_width: int             # heap: max nnz(a_i*)
+
+    # -------------------------------------------------------------------
+    def check_structure(self, a: CSR, b: CSR, strict: bool = False) -> None:
+        """Cheap (shapes/caps/nnz) or strict (re-hash) structure check.
+
+        Executing a plan against a *different* structure silently produces
+        wrong capacities, so the cheap check always runs; ``strict=True``
+        re-digests both operands (costs a host transfer -- debugging aid).
+        """
+        assert a.shape == self.shape_a and b.shape == self.shape_b, \
+            f"plan is for {self.shape_a}x{self.shape_b}, " \
+            f"got {a.shape}x{b.shape}"
+        assert a.cap == self.cap_a and b.cap == self.cap_b, \
+            "operand capacities differ from the planned structure"
+        for op, planned in ((a, self.nnz_a), (b, self.nnz_b)):
+            # each operand guarded independently: jit over just one of
+            # them (e.g. a re-weighted B in a serving loop) must not trip
+            # a concretization error on the other's check
+            if not isinstance(op.nnz, jax.core.Tracer):
+                assert int(op.nnz) == planned, \
+                    "operand nnz differs from the planned structure " \
+                    "(replan or clear_plan_cache)"
+        if strict:
+            assert (structure_key(a), structure_key(b)) == self.key[:2], \
+                "operand structure differs from the planned structure"
+
+    def execute(self, a: CSR, b: CSR) -> CSR:
+        """Numeric phase only: same contract as ``spgemm`` with this plan's
+        recorded algorithm/semiring/mask, zero re-inspection."""
+        self.check_structure(a, b)
+        sr = resolve_semiring(self.semiring)
+        general = sr.name != "plus_times" or self.mask is not None
+        algo = self.algorithm
+        if algo == "dense":
+            out = spgemm_dense(a, b, self.cap_c, semiring=sr,
+                                 mask=self.mask,
+                                 complement_mask=self.complement_mask)
+        elif algo == "esc":
+            out = spgemm_esc(a, b, self.cap_c, flop_cap=self.flop_cap,
+                               semiring=sr, mask=self.mask,
+                               complement_mask=self.complement_mask)
+        elif algo == "heap":
+            out = spgemm_heap(a, b, row_cap=self.row_cap,
+                                k_width=self.k_width, cap_c=self.cap_c,
+                                semiring=sr, mask=self.mask,
+                                complement_mask=self.complement_mask)
+        elif algo in ("hash", "hash_vector"):
+            if general:
+                out = spgemm_hash_jnp(a, b, self.cap_c,
+                                        flop_cap=self.flop_cap, semiring=sr,
+                                        mask=self.mask,
+                                        complement_mask=self.complement_mask)
+            else:
+                from repro.kernels.spgemm_hash import ops as hash_ops
+                out = hash_ops.spgemm_hash(
+                    a, b, self.cap_c, vector=(algo == "hash_vector"),
+                    table_size=self.table_size,
+                    schedule=(self.offsets, self.bin_tsize),
+                    indptr_c=self.indptr_c)
+        else:
+            raise ValueError(f"plan holds unknown algorithm {algo!r}")
+        if self.sorted_output and not out.sorted_cols:
+            out = out.sort_rows()
+        return out
+
+    __call__ = execute
+
+
+def plan_spgemm(a: CSR, b: CSR, *, algorithm: str = "auto",
+                semiring: str | Semiring = "plus_times",
+                mask: Optional[CSR] = None, complement_mask: bool = False,
+                sorted_output: bool = False, use_case: Optional[str] = None,
+                n_bins: int = 8, cache: bool = True,
+                bucket_caps: bool = False) -> SpGEMMPlan:
+    """Run the full inspection once and freeze it as a :class:`SpGEMMPlan`.
+
+    With ``cache=True`` (default) the structure-keyed cache is consulted
+    first: a structure-identical repeat request returns the existing plan
+    and skips schedule + symbolic + recipe entirely.
+
+    ``bucket_caps=True`` rounds the static capacities (``cap_c``,
+    ``flop_cap``, heap ``row_cap``) up to powers of two.  Exact capacities
+    (the default) allocate nothing beyond nnz(C), but every distinct
+    structure then compiles its own numeric program; bucketing trades a
+    <2x allocation slack for program sharing across *similar* structures
+    -- the right call inside loops whose structure drifts every iteration
+    (e.g. BFS frontiers) where exactness would retrace each hop.
+    """
+    sr = resolve_semiring(semiring)
+    key = _plan_key(a, b, mask, sr.name, complement_mask, sorted_output,
+                    algorithm, use_case, n_bins) + (bucket_caps,)
+    if cache:
+        hit = _CACHE.get(key)
+        if hit is not None:
+            _STATS["hits"] += 1
+            _CACHE[key] = _CACHE.pop(key)          # LRU: move to newest
+            return hit
+        _STATS["misses"] += 1
+
+    from repro.kernels.spgemm_hash import kernel as HK
+    _check_mask(a, b, mask)
+    mask = _canon_mask(mask)
+    n = b.n_cols
+
+    # Fig. 6: flop profile + equal-flop bins.  The eager form is the same
+    # code path make_schedule jits, but here the inputs are concrete so
+    # the int32 overflow guard raises loudly instead of mis-binning.
+    flop, offsets, tsize = sched.make_schedule_eager(a, b, n_bins)
+    max_row_flop = int(jnp.max(flop)) if flop.size else 0
+    total_flop = int(jnp.sum(flop))
+
+    # Fig. 7 lines 9-12: static scratch allocation = global-max p2 bound;
+    # per-bin effective sizes ride in the plan as prefetched scalars.
+    table_size = max(sched.lowest_p2(min(max_row_flop, n) + 1), HK.CHUNK)
+    bin_tsize = sched.bin_table_sizes(tsize, n, table_size, floor=HK.CHUNK)
+
+    # Symbolic phase with the exact flop bound -- the worst-case
+    # O(cap_a * min(cap_b, n)) default buffer is never allocated on replan.
+    flop_cap = max(total_flop, 1)
+    if bucket_caps:
+        flop_cap = sched.lowest_p2(flop_cap)
+    row_nnz_c, indptr_c, _, _ = symbolic(
+        a, b, mask=mask, complement_mask=complement_mask, flop_cap=flop_cap)
+    nnz_c = int(jnp.sum(row_nnz_c))
+    cap_c = max(nnz_c, 1)
+    row_cap = max(int(jnp.max(row_nnz_c)), 1)
+    k_width = max(int(jnp.max(a.row_nnz())), 1)
+    if bucket_caps:
+        cap_c = sched.lowest_p2(cap_c)
+        row_cap = sched.lowest_p2(row_cap)
+
+    if algorithm == "heap" and not (a.sorted_cols and b.sorted_cols):
+        # match the direct dispatcher: an explicit heap request on
+        # unsorted inputs fails loudly (spgemm_heap's own contract)
+        raise AssertionError("heap path requires sorted inputs")
+    if algorithm == "auto":
+        from .recipe import recommend
+        uc = use_case if use_case is not None else \
+            ("masked" if mask is not None else "AxA")
+        algorithm, _ = recommend(a, b, sorted_output=sorted_output,
+                                 use_case=uc, semiring=sr.name, mask=mask,
+                                 complement_mask=complement_mask,
+                                 row_nnz_c=row_nnz_c)
+        if algorithm == "heap" and not (a.sorted_cols and b.sorted_cols):
+            # recipe picked heap on its merits, but the inputs cannot feed
+            # it; hash keeps the unsorted contract
+            algorithm = "hash"
+    if algorithm == "bcsr":
+        raise NotImplementedError(
+            "the bcsr block path recomputes its own block schedule; "
+            "plan esc/heap/hash instead")
+
+    plan = SpGEMMPlan(
+        key=key, algorithm=algorithm, semiring=sr.name,
+        complement_mask=complement_mask, sorted_output=sorted_output,
+        mask=mask, shape_a=a.shape, shape_b=b.shape, cap_a=a.cap,
+        cap_b=b.cap, nnz_a=int(a.nnz), nnz_b=int(b.nnz), n_bins=n_bins,
+        flop=flop, total_flop=total_flop, flop_cap=flop_cap,
+        offsets=offsets, bin_tsize=bin_tsize, table_size=table_size,
+        row_nnz_c=row_nnz_c, indptr_c=indptr_c, nnz_c=nnz_c, cap_c=cap_c,
+        row_cap=row_cap, k_width=k_width)
+    if cache:
+        _CACHE[key] = plan
+        while len(_CACHE) > PLAN_CACHE_CAPACITY:
+            _CACHE.pop(next(iter(_CACHE)))         # evict least-recent
+    return plan

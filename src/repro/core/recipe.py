@@ -12,8 +12,10 @@ are dense enough to feed the MXU):
                                                    nonzeros cluster in tiles)
 
 The empirical decision table (Table 4) is reproduced in
-:func:`choose_algorithm_from_stats` and validated against measured rankings
-in ``benchmarks/bench_recipe.py``.
+:func:`choose_algorithm_from_stats` and validated against the cost-model
+and measured rankings by the ``table4_recipe`` rows of
+``benchmarks/bench_spgemm_figs.py``; the planner's recorded choices
+(``core.plan``) are exercised by ``benchmarks/bench_plan.py``.
 """
 from __future__ import annotations
 
@@ -212,13 +214,34 @@ def choose_algorithm_from_stats(stats: SpGEMMStats, sorted_output: bool,
     return "hash"
 
 
+def recommend(a: CSR, b: CSR, sorted_output: bool = False,
+              use_case: str = "AxA",
+              probe_blocks: bool = False,
+              semiring: str = "plus_times",
+              mask: CSR | None = None,
+              complement_mask: bool = False,
+              row_nnz_c=None) -> tuple[str, SpGEMMStats]:
+    """Measure stats and choose -- returns ``(algorithm, stats)``.
+
+    ``row_nnz_c`` takes the symbolic phase's exact per-row counts when the
+    caller already has them (the planner does), replacing the cheap
+    upper-bound estimate so compression-ratio decisions are exact; the
+    chosen algorithm is what the planner records in the plan.
+    """
+    stats = measure_stats(a, b, row_nnz_c=row_nnz_c,
+                          probe_blocks=probe_blocks, mask=mask,
+                          complement_mask=complement_mask)
+    return choose_algorithm_from_stats(stats, sorted_output, use_case,
+                                       semiring=semiring), stats
+
+
 def choose_algorithm(a: CSR, b: CSR, sorted_output: bool = False,
                      use_case: str = "AxA",
                      probe_blocks: bool = False,
                      semiring: str = "plus_times",
                      mask: CSR | None = None,
                      complement_mask: bool = False) -> str:
-    return choose_algorithm_from_stats(
-        measure_stats(a, b, probe_blocks=probe_blocks, mask=mask,
-                      complement_mask=complement_mask), sorted_output,
-        use_case, semiring=semiring)
+    algo, _ = recommend(a, b, sorted_output=sorted_output, use_case=use_case,
+                        probe_blocks=probe_blocks, semiring=semiring,
+                        mask=mask, complement_mask=complement_mask)
+    return algo

@@ -20,8 +20,45 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .formats import CSR
+
+#: largest value an int32 prefix sum may reach without wrapping.
+_I32_MAX = 2**31 - 1
+
+
+def _acc_dtype():
+    """Accumulator dtype for flop prefix sums: int64 when x64 is enabled
+    (overflow becomes impossible), int32 otherwise (exact at proxy scale,
+    DESIGN.md section 9, guarded by :func:`guard_i32_flop`)."""
+    return jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
+
+
+def guard_i32_flop(flop, n_bins: int = 1, what: str = "rows_to_bins"):
+    """Fail loudly instead of mis-binning on int32 prefix-sum overflow.
+
+    The equal-flop partition multiplies the *total* flop by bin ids up to
+    ``n_bins - 1`` before dividing, so the quantity that must fit int32 is
+    ``total * (n_bins - 1)``, not just the total.  Three regimes:
+
+      * x64 enabled: accumulation is promoted to int64 -- nothing to guard;
+      * concrete ``flop`` (the planner's eager path): check exactly in
+        numpy int64 and raise ``OverflowError``;
+      * traced without x64 (e.g. inside ``make_schedule``'s jit): the check
+        cannot run -- callers that may see >2^31 total flop must plan
+        eagerly (``core.plan``) or enable x64.
+    """
+    if jax.config.jax_enable_x64:
+        return
+    if isinstance(flop, jax.core.Tracer):
+        return
+    total = int(np.asarray(flop, dtype=np.int64).sum())
+    if total * max(n_bins - 1, 1) > _I32_MAX:
+        raise OverflowError(
+            f"{what}: total flop {total} (x {max(n_bins - 1, 1)} partition "
+            f"targets) overflows the int32 prefix sum; enable "
+            f"jax_enable_x64 or shard the product (DESIGN.md section 9)")
 
 
 def flops_per_row(a: CSR, b: CSR) -> jax.Array:
@@ -67,11 +104,14 @@ def rows_to_bins(flop: jax.Array, n_bins: int) -> jax.Array:
       * every bin's flop <= ceil(total/n_bins) + max_row_flop.
     """
     m = flop.shape[0]
-    # float64-free exact arithmetic: totals stay < 2^31 for the workloads
-    # here (the proxy suite is downscaled); see DESIGN.md section 9.
-    ps = prefix_sum(flop.astype(jnp.int32))
+    # Exact arithmetic without float64: int32 accumulation is exact below
+    # 2^31 (the proxy-scale regime, DESIGN.md section 9); the guard raises
+    # on concrete inputs that would wrap, and x64 promotes to int64.
+    guard_i32_flop(flop, n_bins, "rows_to_bins")
+    acc = _acc_dtype()
+    ps = prefix_sum(flop.astype(acc))
     total = ps[-1]
-    targets = (total * jnp.arange(1, n_bins, dtype=jnp.int32)) // n_bins
+    targets = (total * jnp.arange(1, n_bins, dtype=acc)) // n_bins
     # ps is over row *boundaries*; bin b starts at the first row whose
     # cumulative flop reaches target b.
     cuts = lowbnd(ps[1:], targets + 1)
@@ -89,7 +129,8 @@ def bin_row_assignment(offsets: jax.Array, n_rows: int) -> jax.Array:
 
 def bin_flop(flop: jax.Array, offsets: jax.Array) -> jax.Array:
     """Total flop per bin (n_bins,) -- the balance metric."""
-    ps = prefix_sum(flop.astype(jnp.int32))
+    guard_i32_flop(flop, 1, "bin_flop")
+    ps = prefix_sum(flop.astype(_acc_dtype()))
     return ps[offsets[1:]] - ps[offsets[:-1]]
 
 
@@ -102,13 +143,17 @@ def max_flop_per_bin_row(flop: jax.Array, offsets: jax.Array) -> jax.Array:
     return jax.ops.segment_max(flop, bins, num_segments=n_bins)
 
 
-@partial(jax.jit, static_argnames=("n_bins",))
-def make_schedule(a: CSR, b: CSR, n_bins: int):
-    """Full Fig. 6 pipeline. Returns (flop, offsets, bin_table_size).
+def make_schedule_eager(a: CSR, b: CSR, n_bins: int):
+    """Un-jitted Fig. 6 pipeline -- the single source of truth.
 
-    ``bin_table_size`` is the per-bin hash-table bound of Fig. 7 line 10:
-    ``min(N_col, max-row-flop-in-bin)`` (power-of-two rounding happens at
-    kernel instantiation where the static size is needed).
+    Returns (flop, offsets, bin_table_size); ``bin_table_size`` is the
+    per-bin hash-table bound of Fig. 7 line 10: ``min(N_col,
+    max-row-flop-in-bin)`` (power-of-two rounding happens where the static
+    size is needed: kernel instantiation / :func:`bin_table_sizes`).
+
+    The planner calls this form directly: on concrete inputs the int32
+    overflow guard inside :func:`rows_to_bins` actually fires (under
+    :func:`make_schedule`'s jit the values are tracers and it cannot).
     """
     flop = flops_per_row(a, b)
     offsets = rows_to_bins(flop, n_bins)
@@ -117,9 +162,44 @@ def make_schedule(a: CSR, b: CSR, n_bins: int):
     return flop, offsets, tsize
 
 
+make_schedule = partial(jax.jit, static_argnames=("n_bins",))(
+    make_schedule_eager)
+make_schedule.__doc__ = "Jitted :func:`make_schedule_eager`."
+
+
 def lowest_p2(x: int) -> int:
     """Static helper: minimum 2^n >= x (Fig. 7 line 12)."""
     p = 1
     while p < x:
         p *= 2
     return p
+
+
+def lowest_p2_arr(x: jax.Array) -> jax.Array:
+    """Traceable :func:`lowest_p2` over an int32 array.
+
+    Exponent via float32 log2 with an exactness patch-up (float rounding can
+    land one power low); exact for values < 2^24, far above any table size a
+    VMEM scratch can hold.
+    """
+    x = jnp.maximum(x.astype(jnp.int32), 1)
+    e = jnp.ceil(jnp.log2(x.astype(jnp.float32))).astype(jnp.int32)
+    p = jnp.left_shift(jnp.int32(1), jnp.clip(e, 0, 30))
+    return jnp.where(p < x, p * 2, p)
+
+
+def bin_table_sizes(tsize: jax.Array, n_cols: int, table_size: int,
+                    floor: int = 1) -> jax.Array:
+    """Per-bin hash-table sizes (Fig. 7 lines 9-12), padded to powers of two.
+
+    ``tsize`` is ``make_schedule``'s per-bin max-row-flop bound; each bin's
+    table is the lowest power of two >= ``min(tsize_b, n_cols) + 1`` (the +1
+    keeps the load factor < 1 so linear probes terminate), clamped into
+    ``[floor, table_size]`` where ``table_size`` is the static scratch
+    allocation (the global bin max) and ``floor`` is the vector-probe chunk
+    width when chunked probing is on.  Traceable, so plans can be built
+    under an outer jit as long as ``table_size`` is pinned.
+    """
+    t = jnp.minimum(tsize.astype(jnp.int32), jnp.int32(n_cols)) + 1
+    return jnp.clip(lowest_p2_arr(t), jnp.int32(max(floor, 1)),
+                    jnp.int32(table_size))

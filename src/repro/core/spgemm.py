@@ -100,9 +100,9 @@ def symbolic_flops(a: CSR, b: CSR) -> jax.Array:
     return sched.flops_per_row(a, b)
 
 
-@partial(jax.jit, static_argnames=("complement_mask",))
+@partial(jax.jit, static_argnames=("complement_mask", "flop_cap"))
 def symbolic(a: CSR, b: CSR, mask: CSR | None = None,
-             complement_mask: bool = False):
+             complement_mask: bool = False, flop_cap: int | None = None):
     """Exact per-row nnz(C) and total flop, mask-aware.
 
     Returns (row_nnz_c, indptr_c, flop_per_row, total_flop).  Uses the
@@ -112,11 +112,19 @@ def symbolic(a: CSR, b: CSR, mask: CSR | None = None,
     pruned candidates are not counted, so the capacity the launcher
     allocates is the *masked* nnz(C) -- additionally bounded a priori by
     ``schedule.masked_row_bound``.
+
+    ``flop_cap`` sizes the expansion buffer.  The default is the worst-case
+    ``O(cap_a * min(cap_b, n))`` bound; callers with a tight bound -- the
+    planner passes the exact ``flop.sum()`` on structure-identical re-plans
+    -- shrink the dominant intermediate by orders of magnitude.  It must be
+    >= the true total flop or candidates are silently dropped.
     """
     _check_mask(a, b, mask)
     mask = _canon_mask(mask)
     flop = symbolic_flops(a, b)
-    rows, cols, _, valid = _expand(a, b, flop_cap=_default_flop_cap(a, b))
+    if flop_cap is None:
+        flop_cap = _default_flop_cap(a, b)
+    rows, cols, _, valid = _expand(a, b, flop_cap=flop_cap)
     valid = _mask_prune(rows, cols, valid, mask, complement_mask)
     order = jnp.lexsort((cols, jnp.where(valid, rows, a.n_rows)))
     rows_s, cols_s, valid_s = rows[order], cols[order], valid[order]
@@ -299,9 +307,10 @@ def spgemm_hash_jnp(a: CSR, b: CSR, cap_c: int, flop_cap: int | None = None,
 # Heap SpGEMM (paper section 4.2.3): one-phase k-way merge, sorted in/out.
 # ----------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("row_cap", "k_width", "semiring",
+@partial(jax.jit, static_argnames=("row_cap", "k_width", "cap_c", "semiring",
                                    "complement_mask"))
 def spgemm_heap(a: CSR, b: CSR, row_cap: int, k_width: int,
+                cap_c: int | None = None,
                 semiring: str | Semiring = "plus_times",
                 mask: CSR | None = None,
                 complement_mask: bool = False) -> CSR:
@@ -320,7 +329,13 @@ def spgemm_heap(a: CSR, b: CSR, row_cap: int, k_width: int,
     advance their cursor without claiming an output slot, so ``row_cap`` may
     be sized to the masked bound (``schedule.masked_row_bound``).
 
-    Static bounds: ``k_width`` >= max nnz(a_i*); ``row_cap`` >= max nnz(c_i*).
+    Static bounds: ``k_width`` >= max nnz(a_i*); ``row_cap`` >= max nnz(c_i*);
+    ``cap_c`` is the CSR output capacity (default ``m * row_cap``) -- passing
+    the same ``cap_c`` every other algorithm uses keeps output shapes equal
+    across the dispatcher, which is what makes compiled consumers reusable
+    across algorithm choices.  A row that exceeds ``row_cap`` keeps its
+    first ``row_cap`` (smallest-column) entries and *drops* the overflow --
+    it never overwrites the last emitted entry.
     Requires sorted inputs, emits sorted output (Table 1).
     """
     assert a.sorted_cols and b.sorted_cols, "heap path requires sorted inputs"
@@ -364,6 +379,10 @@ def spgemm_heap(a: CSR, b: CSR, row_cap: int, k_width: int,
                     allowed = ~allowed
             prev = out_cols[jnp.maximum(out_n - 1, 0)]
             same = (out_n > 0) & (prev == c)
+            # Overflow policy: a *new* column on a full row is dropped (the
+            # cursor still advances), keeping the first row_cap entries
+            # intact; repeats of the last kept column still accumulate.
+            allowed = allowed & (same | (out_n < row_cap))
             slot = jnp.where(same, out_n - 1, jnp.minimum(out_n, row_cap - 1))
             out_cols = out_cols.at[slot].set(
                 jnp.where(allowed, c, out_cols[slot]))
@@ -382,10 +401,13 @@ def spgemm_heap(a: CSR, b: CSR, row_cap: int, k_width: int,
 
     out_cols, out_vals, out_n = jax.vmap(one_row)(
         jnp.arange(m, dtype=jnp.int32), cur, end, a_vals)      # (m, cap)
-    # compact (m, row_cap) panels into CSR
+    # compact (m, row_cap) panels into a cap_c-sized CSR buffer (matching
+    # the static output shape of the esc/hash paths; default keeps the old
+    # worst-case m * row_cap panel size)
+    if cap_c is None:
+        cap_c = m * row_cap
     indptr_c = sched.prefix_sum(out_n).astype(jnp.int32)
-    nnz_c = indptr_c[-1]
-    cap_c = m * row_cap
+    nnz_c = jnp.minimum(indptr_c[-1], jnp.int32(cap_c))
     lane = jnp.arange(row_cap, dtype=jnp.int32)[None, :]
     live = lane < out_n[:, None]
     dest = jnp.where(live, indptr_c[:-1][:, None] + lane, cap_c)
@@ -412,23 +434,29 @@ def spmm(a: CSR, x: jax.Array) -> jax.Array:
 # Public dispatcher
 # ----------------------------------------------------------------------------
 
-def spgemm(a: CSR, b: CSR, cap_c: int, algorithm: Algorithm = "auto",
+def spgemm(a: CSR, b: CSR, cap_c: int | None = None,
+           algorithm: Algorithm = "auto",
            sorted_output: bool | None = None,
            semiring: str | Semiring = "plus_times",
            mask: CSR | None = None, complement_mask: bool = False,
-           use_case: str | None = None, **kw) -> CSR:
+           use_case: str | None = None, plan=None, **kw) -> CSR:
     """Front door. ``auto`` consults the recipe (core.recipe).
 
     ``semiring``/``mask`` flow to every accumulator; the Pallas hash kernels
     keep their (+, x) specialization, so generalized requests on the hash
     family execute :func:`spgemm_hash_jnp` (same contract, unsorted output).
+
+    ``plan=`` takes an :class:`repro.core.plan.SpGEMMPlan` (inspector-
+    executor path): schedule, symbolic capacities, and the recipe choice all
+    come from the plan and nothing is recomputed -- every other argument
+    except ``(a, b)`` is ignored.
     """
+    if plan is not None:
+        return plan.execute(a, b)
+    assert cap_c is not None, "spgemm needs cap_c unless plan= is given"
     sr = resolve_semiring(semiring)
     general = sr.name != "plus_times" or mask is not None
-    if mask is not None and not mask.sorted_cols:
-        # membership probes binary-search row-major keys; an unsorted mask
-        # (e.g. a previous hash-family output) must be canonicalized first.
-        mask = mask.sort_rows()
+    mask = _canon_mask(mask)
     if algorithm == "auto":
         from .recipe import choose_algorithm
         if use_case is None:
@@ -445,8 +473,10 @@ def spgemm(a: CSR, b: CSR, cap_c: int, algorithm: Algorithm = "auto",
     elif algorithm == "heap":
         row_cap = kw.pop("row_cap", min(cap_c, b.n_cols))
         k_width = kw.pop("k_width", a.cap)
+        # cap_c flows through so heap output shapes agree with every other
+        # algorithm (static-shape contract; jit reuse across algorithms).
         out = spgemm_heap(a, b, row_cap=row_cap, k_width=k_width,
-                          semiring=sr, mask=mask,
+                          cap_c=cap_c, semiring=sr, mask=mask,
                           complement_mask=complement_mask)
     elif algorithm in ("hash", "hash_vector"):
         if general:

@@ -32,16 +32,18 @@ def spgemm_bcsr(a: BCSR, b: BCSR, bcap_c: int, *, n_bins: int = 8,
     pa, pb = _pattern_csr(a), _pattern_csr(b)
     gm = pa.n_rows
 
-    flop, offsets, _ = sched.make_schedule(pa, pb, n_bins)
+    flop, offsets, tsize = sched.make_schedule(pa, pb, n_bins)
     if table_size is None:
         table_size = sched.lowest_p2(
             int(min(int(jnp.max(flop)), pb.n_cols)) + 1)
     table_size = max(table_size, HK.CHUNK)
+    bin_tsize = sched.bin_table_sizes(tsize, pb.n_cols, table_size,
+                                      floor=HK.CHUNK)
 
     # Phase 1 (symbolic): exact block-nnz per block row of C.
     sym = HK.symbolic_call(n_bins, gm, pa.cap, pb.cap, table_size, vector,
                            interpret)
-    row_nnzb = sym(offsets, pa.indptr, pb.indptr,
+    row_nnzb = sym(offsets, bin_tsize, pa.indptr, pb.indptr,
                    pa.indices, pa.data, pb.indices, pb.data)
     indptr_cb = sched.prefix_sum(row_nnzb).astype(jnp.int32)
 

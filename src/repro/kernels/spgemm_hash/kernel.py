@@ -50,11 +50,15 @@ def _hash(key: jax.Array, mask: jax.Array) -> jax.Array:
 def _probe_scalar(tkey_ref, key, table_size):
     """Linear probing (Fig. 8a): return slot holding `key` or first empty.
 
+    ``table_size`` may be a static int or a traced per-bin scalar (Fig. 7
+    lines 9-12: each bin probes only its own power-of-two-sized prefix of
+    the scratch table); either way it must be a power of two.
+
     The probed key rides in the loop carry so the cond never reads the ref
     (older jax cannot discharge ref reads in a while cond under interpret
     mode; on TPU the two spellings lower identically).
     """
-    mask = jnp.int32(table_size - 1)
+    mask = jnp.int32(table_size) - 1
 
     def cond(state):
         _, k = state
@@ -76,9 +80,9 @@ def _probe_vector(tkey_ref, key, table_size):
     The hash addresses a *chunk*; within a chunk, hit/empty lanes are found
     with a masked iota-min (TPU stand-in for ``__builtin_ctz``).  Falls
     through to the next chunk on a full miss (linear probing over chunks).
+    ``table_size`` may be static or a traced per-bin scalar (>= CHUNK).
     """
-    n_chunks = table_size // CHUNK
-    cmask = jnp.int32(n_chunks - 1)
+    cmask = jnp.int32(table_size) // CHUNK - 1
     lane = jax.lax.broadcasted_iota(jnp.int32, (CHUNK,), 0)
     BIG = CHUNK + 1
 
@@ -105,9 +109,15 @@ def _probe_vector(tkey_ref, key, table_size):
 
 
 def _row_loop(i, *, indptr_a_ref, indptr_b_ref, a_idx_ref, a_val_ref,
-              b_idx_ref, b_val_ref, tkey_ref, tval_ref, table_size, vector,
+              b_idx_ref, b_val_ref, tkey_ref, tval_ref, tsize, vector,
               numeric):
-    """Fig. 1 inner loops for one output row, hash accumulation."""
+    """Fig. 1 inner loops for one output row, hash accumulation.
+
+    ``tsize`` is this bin's effective table size (Fig. 7 lines 9-12: a
+    power of two <= the static scratch allocation); probes never leave the
+    ``[0, tsize)`` prefix, so slots past it stay EMPTY and cost nothing but
+    the vectorized whole-table reinit.
+    """
     probe = _probe_vector if vector else _probe_scalar
     # Fig. 7: "reuses that hash table ... by reinitializing for each row".
     tkey_ref[...] = jnp.full_like(tkey_ref, EMPTY)
@@ -120,7 +130,7 @@ def _row_loop(i, *, indptr_a_ref, indptr_b_ref, a_idx_ref, a_val_ref,
 
         def do_b(t, inserted):
             c = b_idx_ref[t]
-            slot = probe(tkey_ref, c, table_size)
+            slot = probe(tkey_ref, c, tsize)
             is_new = tkey_ref[slot] == EMPTY
             tkey_ref[slot] = c
             if numeric:
@@ -134,28 +144,31 @@ def _row_loop(i, *, indptr_a_ref, indptr_b_ref, a_idx_ref, a_val_ref,
                              jnp.int32(0))
 
 
-def _symbolic_kernel(offsets_ref, indptr_a_ref, indptr_b_ref,
+def _symbolic_kernel(offsets_ref, tsize_ref, indptr_a_ref, indptr_b_ref,
                      a_idx_ref, a_val_ref, b_idx_ref, b_val_ref,
                      row_nnz_ref, tkey_ref, *, table_size, vector):
     b = pl.program_id(0)
+    # per-bin effective table size (prefetched; clamped to the allocation)
+    tsz = jnp.minimum(tsize_ref[b], jnp.int32(table_size))
 
     def do_row(i, _):
         cnt = _row_loop(
             i, indptr_a_ref=indptr_a_ref, indptr_b_ref=indptr_b_ref,
             a_idx_ref=a_idx_ref, a_val_ref=a_val_ref, b_idx_ref=b_idx_ref,
             b_val_ref=b_val_ref, tkey_ref=tkey_ref, tval_ref=None,
-            table_size=table_size, vector=vector, numeric=False)
+            tsize=tsz, vector=vector, numeric=False)
         row_nnz_ref[i] = cnt
         return 0
 
     jax.lax.fori_loop(offsets_ref[b], offsets_ref[b + 1], do_row, 0)
 
 
-def _numeric_kernel(offsets_ref, indptr_a_ref, indptr_b_ref, indptr_c_ref,
-                    a_idx_ref, a_val_ref, b_idx_ref, b_val_ref,
+def _numeric_kernel(offsets_ref, tsize_ref, indptr_a_ref, indptr_b_ref,
+                    indptr_c_ref, a_idx_ref, a_val_ref, b_idx_ref, b_val_ref,
                     out_idx_ref, out_val_ref, tkey_ref, tval_ref, *,
                     table_size, vector):
     b = pl.program_id(0)
+    tsz = jnp.minimum(tsize_ref[b], jnp.int32(table_size))
 
     @pl.when(b == 0)
     def _init():
@@ -167,8 +180,10 @@ def _numeric_kernel(offsets_ref, indptr_a_ref, indptr_b_ref, indptr_c_ref,
             i, indptr_a_ref=indptr_a_ref, indptr_b_ref=indptr_b_ref,
             a_idx_ref=a_idx_ref, a_val_ref=a_val_ref, b_idx_ref=b_idx_ref,
             b_val_ref=b_val_ref, tkey_ref=tkey_ref, tval_ref=tval_ref,
-            table_size=table_size, vector=vector, numeric=True)
+            tsize=tsz, vector=vector, numeric=True)
         # Flush occupied slots in table order -> **unsorted** columns (C8).
+        # Only this bin's [0, tsz) prefix can be occupied, so the scan stops
+        # there -- the per-bin sizing win the paper gets from Fig. 7 line 10.
         base = indptr_c_ref[i]
 
         def flush(s, cnt):
@@ -183,7 +198,7 @@ def _numeric_kernel(offsets_ref, indptr_a_ref, indptr_b_ref, indptr_c_ref,
                 out_val_ref[pos] = tval_ref[s]
             return cnt + occupied.astype(jnp.int32)
 
-        jax.lax.fori_loop(0, table_size, flush, jnp.int32(0))
+        jax.lax.fori_loop(0, tsz, flush, jnp.int32(0))
         return 0
 
     jax.lax.fori_loop(offsets_ref[b], offsets_ref[b + 1], do_row, 0)
@@ -204,11 +219,18 @@ def symbolic_call(n_bins: int, m: int, cap_a: int, cap_b: int,
                   table_size: int, vector: bool, interpret: bool):
     """Cached builder: a stable callable per static config, jit-wrapped so
     repeat invocations hit the dispatch cache instead of retracing (the
-    paper's C5 allocate-once discipline applied to compilation)."""
+    paper's C5 allocate-once discipline applied to compilation).
+
+    Call signature of the returned function:
+    ``(offsets, bin_tsize, indptr_a, indptr_b, a_idx, a_val, b_idx, b_val)``
+    where ``bin_tsize`` holds each bin's power-of-two effective table size
+    (Fig. 7 lines 9-12); ``table_size`` stays the static scratch allocation
+    (the bin max), so the grid and scratch shapes never depend on the data.
+    """
     kernel = functools.partial(_symbolic_kernel, table_size=table_size,
                                vector=vector)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,           # offsets, indptr_a, indptr_b
+        num_scalar_prefetch=4,           # offsets, bin_tsize, indptr_a/b
         grid=(n_bins,),
         in_specs=[_full(cap_a), _full(cap_a), _full(cap_b), _full(cap_b)],
         out_specs=_full(m),
@@ -229,7 +251,7 @@ def numeric_call(n_bins: int, m: int, cap_a: int, cap_b: int, cap_c: int,
     kernel = functools.partial(_numeric_kernel, table_size=table_size,
                                vector=vector)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=4,           # offsets, indptr_a, indptr_b, indptr_c
+        num_scalar_prefetch=5,   # offsets, bin_tsize, indptr_a/b, indptr_c
         grid=(n_bins,),
         in_specs=[_full(cap_a), _full(cap_a), _full(cap_b), _full(cap_b)],
         out_specs=[_full(cap_c), _full(cap_c)],

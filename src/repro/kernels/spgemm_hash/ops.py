@@ -3,16 +3,27 @@
 Assembles the full two-phase pipeline of paper Fig. 7:
 
   1. ``RowsToThreads`` (core.schedule): flop per row -> equal-flop bins;
-  2. static table sizing: ``lowest_p2(min(N_col, max_row_flop) + 1)``
-     (Fig. 7 lines 9-12; the +1 keeps the load factor < 1 so probes
-     terminate);
+  2. table sizing (Fig. 7 lines 9-12): the *static* scratch allocation is
+     ``lowest_p2(min(N_col, max_row_flop) + 1)`` (the +1 keeps the load
+     factor < 1 so probes terminate), and each bin additionally carries its
+     own power-of-two effective size ``bin_tsize[b] =
+     lowest_p2(min(N_col, max-row-flop-in-bin) + 1)`` threaded into the
+     kernels via scalar prefetch -- so a bin of light rows probes and
+     flushes a small table instead of paying for the single worst row in
+     the whole matrix;
   3. symbolic kernel -> exact row nnz -> indptr_C (prefix sum);
   4. numeric kernel -> (indices, values), unsorted within rows (C8).
 
 Static-shape note: the scratch table size must be a Python int, so when the
 inputs are concrete (the normal eager call) it is derived from the measured
 max row flop exactly as the paper sizes per-thread tables; under an outer
-``jit``/dry-run trace the caller must pin ``table_size``.
+``jit``/dry-run trace the caller must pin ``table_size``.  The per-bin
+sizes are data (prefetched scalars), so they stay exact either way.
+
+Inspector-executor path (``core.plan``): ``schedule=`` takes a precomputed
+``(offsets, bin_tsize)`` pair and ``indptr_c=`` the symbolic phase's exact
+row pointer, so a structure-identical repeat product runs the numeric
+kernel alone.
 """
 from __future__ import annotations
 
@@ -28,17 +39,46 @@ def _is_concrete(x) -> bool:
     return not isinstance(x, jax.core.Tracer)
 
 
+def _static_table_size(flop, n: int, table_size: int | None) -> int:
+    if table_size is None:
+        if not _is_concrete(flop):
+            raise ValueError("under trace, pass a static table_size")
+        table_size = sched.lowest_p2(
+            int(min(int(jnp.max(flop)), n)) + 1)
+    return max(table_size, K.CHUNK)
+
+
+def hash_schedule(a: CSR, b: CSR, n_bins: int,
+                  table_size: int | None = None):
+    """Fig. 6 + Fig. 7 lines 9-12: bins, static scratch size, per-bin sizes.
+
+    Returns ``(offsets, bin_tsize, table_size)`` -- everything the kernels
+    need besides the CSR payloads.  This is the inspection the planner
+    (``core.plan``) runs once and reuses.
+    """
+    flop, offsets, tsize = sched.make_schedule(a, b, n_bins)
+    table_size = _static_table_size(flop, b.n_cols, table_size)
+    bin_tsize = sched.bin_table_sizes(tsize, b.n_cols, table_size,
+                                      floor=K.CHUNK)
+    return offsets, bin_tsize, table_size
+
+
 def spgemm_hash(a: CSR, b: CSR, cap_c: int, *, n_bins: int = 8,
                 vector: bool = False, table_size: int | None = None,
                 interpret: bool | None = None,
                 semiring="plus_times", mask: CSR | None = None,
-                complement_mask: bool = False) -> CSR:
+                complement_mask: bool = False,
+                schedule=None, indptr_c: jax.Array | None = None) -> CSR:
     """C = A @ B via the hash kernel. Returns CSR with sorted_cols=False.
 
     The Pallas kernel is specialized to the arithmetic semiring; requests
     with a non-default ``semiring`` or a ``mask`` take the jnp fallback
     (``core.spgemm.spgemm_hash_jnp``), which keeps the same contract
     (two-phase capacity, probe-time mask pruning, unsorted select output).
+
+    ``schedule=(offsets, bin_tsize)`` skips the Fig. 6 inspection (pass a
+    static ``table_size`` alongside); ``indptr_c=`` additionally skips the
+    symbolic kernel -- the planned execute path runs numeric only.
     """
     from repro.core.semiring import resolve_semiring
     if resolve_semiring(semiring).name != "plus_times" or mask is not None:
@@ -48,24 +88,27 @@ def spgemm_hash(a: CSR, b: CSR, cap_c: int, *, n_bins: int = 8,
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     m, n = a.n_rows, b.n_cols
-    flop, offsets, _tsize = sched.make_schedule(a, b, n_bins)
-    if table_size is None:
-        if not _is_concrete(flop):
-            raise ValueError("under trace, pass a static table_size")
-        table_size = sched.lowest_p2(
-            int(min(int(jnp.max(flop)), n)) + 1)
-    table_size = max(table_size, K.CHUNK)
+    if schedule is None:
+        offsets, bin_tsize, table_size = hash_schedule(a, b, n_bins,
+                                                       table_size)
+    else:
+        offsets, bin_tsize = schedule
+        assert table_size is not None, \
+            "a precomputed schedule needs its static table_size"
+        table_size = max(table_size, K.CHUNK)
+    n_bins = offsets.shape[0] - 1
 
-    sym = K.symbolic_call(n_bins, m, a.cap, b.cap, table_size, vector,
-                          interpret)
-    row_nnz = sym(offsets, a.indptr, b.indptr,
-                  a.indices, a.data.astype(jnp.float32),
-                  b.indices, b.data.astype(jnp.float32))
-    indptr_c = sched.prefix_sum(row_nnz).astype(jnp.int32)
+    if indptr_c is None:
+        sym = K.symbolic_call(n_bins, m, a.cap, b.cap, table_size, vector,
+                              interpret)
+        row_nnz = sym(offsets, bin_tsize, a.indptr, b.indptr,
+                      a.indices, a.data.astype(jnp.float32),
+                      b.indices, b.data.astype(jnp.float32))
+        indptr_c = sched.prefix_sum(row_nnz).astype(jnp.int32)
 
     num = K.numeric_call(n_bins, m, a.cap, b.cap, cap_c, table_size, vector,
                          interpret)
-    cols_c, vals_c = num(offsets, a.indptr, b.indptr, indptr_c,
+    cols_c, vals_c = num(offsets, bin_tsize, a.indptr, b.indptr, indptr_c,
                          a.indices, a.data.astype(jnp.float32),
                          b.indices, b.data.astype(jnp.float32))
     nnz_c = indptr_c[-1]
@@ -77,17 +120,23 @@ def spgemm_hash(a: CSR, b: CSR, cap_c: int, *, n_bins: int = 8,
 
 def spgemm_hash_symbolic(a: CSR, b: CSR, *, n_bins: int = 8,
                          vector: bool = False, table_size: int | None = None,
-                         interpret: bool | None = None) -> jax.Array:
+                         interpret: bool | None = None,
+                         schedule=None) -> jax.Array:
     """Symbolic phase only: exact nnz(C) per row."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    m, n = a.n_rows, b.n_cols
-    flop, offsets, _ = sched.make_schedule(a, b, n_bins)
-    if table_size is None:
-        table_size = sched.lowest_p2(int(min(int(jnp.max(flop)), n)) + 1)
-    table_size = max(table_size, K.CHUNK)
+    m = a.n_rows
+    if schedule is None:
+        offsets, bin_tsize, table_size = hash_schedule(a, b, n_bins,
+                                                       table_size)
+    else:
+        offsets, bin_tsize = schedule
+        assert table_size is not None, \
+            "a precomputed schedule needs its static table_size"
+        table_size = max(table_size, K.CHUNK)
+    n_bins = offsets.shape[0] - 1
     sym = K.symbolic_call(n_bins, m, a.cap, b.cap, table_size, vector,
                           interpret)
-    return sym(offsets, a.indptr, b.indptr,
+    return sym(offsets, bin_tsize, a.indptr, b.indptr,
                a.indices, a.data.astype(jnp.float32),
                b.indices, b.data.astype(jnp.float32))
