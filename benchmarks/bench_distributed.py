@@ -1,0 +1,235 @@
+"""Distributed plan-aware SpGEMM benchmark (DESIGN.md section 11).
+
+Three questions, on an 8-way host-device mesh (self-provisioned via
+``--xla_force_host_platform_device_count`` when run as a script):
+
+  1. **Planned vs unplanned distributed iteration**: how much of a repeated
+     1D product's wall-clock does ``DistributedPlan.execute`` amortize away
+     (per-shard inspection + shard_map retrace vs the memoized jitted
+     executor)?
+  2. **Equal-flop vs equal-rows sharding**: the mesh-scale version of the
+     paper's Fig. 9 balance argument -- skewed G500 inputs concentrate flop
+     in few rows, so equal-rows shards idle most chips.
+  3. **SUMMA panel count**: K-panel streaming granularity vs wall-clock.
+
+``--smoke`` runs a downscaled version with hard assertions -- sparse-native
+sharding (zero ``to_dense`` calls), distributed == single-node planned
+products (bitwise), zero re-inspection on repeat executes, plan-cache hits
+on re-plans, and an honored ``k_panels`` -- used as the CI multi-device
+smoke step.
+
+    PYTHONPATH=src python benchmarks/bench_distributed.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import os
+import sys
+
+# must precede the first jax import; harmless no-op when run via
+# benchmarks.run (jax already up -- the suite then uses however many
+# devices the host exposes)
+if "jax" not in sys.modules and \
+        "xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               " --xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import Mesh  # noqa: E402
+
+sys.path.insert(0, ".")
+
+from repro.core import (CSR, clear_plan_cache, plan_cache_stats,  # noqa: E402
+                        plan_spgemm)
+from repro.core.distributed import (plan_spgemm_1d, plan_spgemm_summa,  # noqa: E402
+                                    shard_csr_rows, spgemm_1d, spgemm_summa,
+                                    unshard_rows)
+from repro.core.spgemm import symbolic_flops  # noqa: E402
+from repro.data.rmat import rmat_csr  # noqa: E402
+
+from benchmarks.common import bench, emit  # noqa: E402
+
+
+def _counted(module_name: str, attr: str, counter: dict):
+    mod = importlib.import_module(module_name)
+    orig = getattr(mod, attr)
+
+    def wrapper(*a, **kw):
+        counter[attr] = counter.get(attr, 0) + 1
+        return orig(*a, **kw)
+
+    setattr(mod, attr, wrapper)
+    return lambda: setattr(mod, attr, orig)
+
+
+def _mesh():
+    return Mesh(np.array(jax.devices()), ("data",))
+
+
+def _int_csr(m, n, nnz, seed):
+    r = np.random.default_rng(seed)
+    return CSR.from_numpy_coo(r.integers(0, m, nnz), r.integers(0, n, nnz),
+                              r.integers(1, 5, nnz).astype(np.float32),
+                              (m, n))
+
+
+def planned_vs_unplanned(mesh, a, b, tag: str, iters: int):
+    """Repeated distributed A@B: fresh planless call vs plan + executes."""
+    S = mesh.shape["data"]
+    a_sh = shard_csr_rows(a, S, b=b)
+    clear_plan_cache()
+    plan = plan_spgemm_1d(a_sh, b, algorithm="esc")
+    t_un = bench(lambda: spgemm_1d(mesh, a_sh, b, cap_c=plan.cap_c,
+                                   flop_cap=plan.flop_cap,
+                                   algorithm="esc").parts.data,
+                 iters=iters)
+    emit(f"dist,{tag},1d_unplanned", t_un)
+    t_pl = bench(lambda: plan.execute(mesh, a_sh, b).parts.data,
+                 iters=iters)
+    emit(f"dist,{tag},1d_planned", t_pl, f"speedup={t_un / t_pl:.2f}x")
+    return plan
+
+
+def flop_vs_rows_sharding(mesh, a, b, tag: str, iters: int):
+    """Equal-flop vs equal-rows shard boundaries (mesh-scale Fig. 9)."""
+    S = mesh.shape["data"]
+    m = a.n_rows
+    flop = np.asarray(symbolic_flops(a, b), np.int64)
+    for name, sh in (("equal_flop", shard_csr_rows(a, S, b=b)),
+                     ("equal_rows", shard_csr_rows(
+                         a, S, weights=np.ones(m, np.int64)))):
+        plan = plan_spgemm_1d(sh, b, algorithm="esc")
+        t = bench(lambda: plan.execute(mesh, sh, b).parts.data, iters=iters)
+        starts = sh.row_starts
+        per = [int(flop[starts[s]:starts[s + 1]].sum()) for s in range(S)]
+        imb = max(per) / max(sum(per) / S, 1)
+        emit(f"dist,{tag},shard_{name}", t, f"flop_imbalance={imb:.2f}")
+
+
+def summa_panels(mesh, a, b, tag: str, iters: int):
+    S = mesh.shape["data"]
+    for kp in (S, 2 * S, 4 * S):
+        if a.n_cols % kp:
+            continue
+        plan = plan_spgemm_summa(a, b, S, kp, algorithm="esc")
+        t = bench(lambda: plan.execute(mesh, a, b).parts.data, iters=iters)
+        emit(f"dist,{tag},summa_k{kp}", t, f"panels={plan.k_panels}")
+
+
+def smoke():
+    """Downscaled run with hard assertions (the CI multi-device step)."""
+    mesh = _mesh()
+    S = mesh.shape["data"]
+    a = rmat_csr(6, 3, "G500", seed=1)
+    b = rmat_csr(6, 3, "ER", seed=2)
+
+    # sparse-native sharding: zero to_dense on the shard path
+    calls = {"n": 0}
+    orig = CSR.to_dense
+
+    def spy(self):
+        calls["n"] += 1
+        return orig(self)
+
+    CSR.to_dense = spy
+    try:
+        a_sh = shard_csr_rows(a, S, b=b)
+    finally:
+        CSR.to_dense = orig
+    assert calls["n"] == 0, "shard_csr_rows densified"
+
+    # distributed == single-node planned product, bitwise
+    clear_plan_cache()
+    plan = plan_spgemm_1d(a_sh, b, algorithm="esc")
+    ref = plan_spgemm(a, b, algorithm="esc").execute(a, b)
+    c = unshard_rows(plan.execute(mesh, a_sh, b))
+    assert np.array_equal(np.asarray(c.to_dense()),
+                          np.asarray(ref.to_dense()))
+
+    # repeat execute: zero re-inspection (no schedule / symbolic work)
+    counter: dict = {}
+    restore = [
+        _counted("repro.core.schedule", "make_schedule", counter),
+        _counted("repro.core.schedule", "make_schedule_eager", counter),
+        _counted("repro.core.schedule", "rows_to_bins", counter),
+        _counted("repro.core.schedule", "flops_per_row", counter),
+        _counted("repro.core.spgemm", "symbolic", counter),
+    ]
+    try:
+        c2 = plan.execute(mesh, a_sh, b)
+    finally:
+        for r in restore:
+            r()
+    assert not counter, f"distributed execute re-inspected: {counter}"
+    assert np.array_equal(np.asarray(unshard_rows(c2).to_dense()),
+                          np.asarray(ref.to_dense()))
+
+    # repeat plan requests hit the shared LRU (zero re-inspections)
+    before = plan_cache_stats()
+    counter2: dict = {}
+    restore = [
+        _counted("repro.core.schedule", "make_schedule_eager", counter2),
+        _counted("repro.core.spgemm", "symbolic", counter2),
+    ]
+    try:
+        plan_again = plan_spgemm_1d(a_sh, b, algorithm="esc")
+    finally:
+        for r in restore:
+            r()
+    after = plan_cache_stats()
+    assert plan_again is plan and not counter2
+    assert after["misses"] == before["misses"]
+    assert after["hits"] == before["hits"] + 1
+
+    # SUMMA: k_panels honored, merge bit-matches on integer values
+    ai = _int_csr(64, 64, 256, 3)
+    bi = _int_csr(64, 48, 256, 4)
+    refd = np.asarray(plan_spgemm(ai, bi, algorithm="esc").execute(ai, bi)
+                      .to_dense())
+    for kp in (S, 2 * S):
+        cs = unshard_rows(spgemm_summa(mesh, ai, bi, k_panels=kp,
+                                       algorithm="esc"))
+        assert np.array_equal(np.asarray(cs.to_dense()), refd), kp
+    try:
+        spgemm_summa(mesh, ai, bi, k_panels=S + 1)
+    except ValueError:
+        pass
+    else:
+        raise AssertionError("invalid k_panels must raise")
+    print(f"bench_distributed smoke: OK ({S} devices)", flush=True)
+
+
+def run(quick: bool = True):
+    """benchmarks.run suite entry (uses however many devices exist)."""
+    mesh = _mesh()
+    S = mesh.shape["data"]
+    scale = 7 if quick else 8
+    a = rmat_csr(scale, 3, "G500", seed=scale)
+    b = rmat_csr(scale, 3, "ER", seed=scale + 1)
+    tag = f"g500_s{scale}_d{S}"
+    iters = 2 if quick else 3
+    planned_vs_unplanned(mesh, a, b, tag, iters)
+    flop_vs_rows_sharding(mesh, a, b, tag, iters)
+    ai = _int_csr(1 << scale, 1 << scale, (1 << scale) * 3, scale)
+    bi = _int_csr(1 << scale, 1 << scale, (1 << scale) * 3, scale + 1)
+    summa_panels(mesh, ai, bi, tag, iters)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="downscaled run with correctness assertions")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+        return
+    run(quick=not args.full)
+
+
+if __name__ == "__main__":
+    main()

@@ -16,6 +16,7 @@ from . import bench_graph as graph
 from . import bench_micro as micro
 from . import bench_moe_dispatch as moe_bench
 from . import bench_plan as plan_bench
+from . import bench_distributed as dist_bench
 
 
 SUITES = [
@@ -34,6 +35,7 @@ SUITES = [
     ("graph", lambda q: graph.run(q)),
     ("moe_dispatch", lambda q: moe_bench.run(q)),
     ("plan", lambda q: plan_bench.run(q)),
+    ("distributed", lambda q: dist_bench.run(q)),
 ]
 
 

@@ -11,6 +11,11 @@ from .recipe import (SpGEMMStats, measure_stats, model_costs, recommend,
                      choose_algorithm, choose_algorithm_from_stats)
 from .plan import (SpGEMMPlan, plan_spgemm, structure_key, plan_cache_stats,
                    clear_plan_cache)
+from .distributed import (ShardedCSR, shard_csr_rows, reshard_rows,
+                          unshard_rows, DistributedPlan, plan_spgemm_1d,
+                          spgemm_1d, spmm_1d, SummaPlan, plan_spgemm_summa,
+                          spgemm_summa, summa_panel_bounds, multi_source_bfs
+                          as multi_source_bfs_1d)
 
 __all__ = [
     "CSR", "BCSR", "ELL", "csr_to_bcsr", "bcsr_to_csr",
@@ -25,4 +30,8 @@ __all__ = [
     "choose_algorithm", "choose_algorithm_from_stats",
     "SpGEMMPlan", "plan_spgemm", "structure_key", "plan_cache_stats",
     "clear_plan_cache",
+    "ShardedCSR", "shard_csr_rows", "reshard_rows", "unshard_rows",
+    "DistributedPlan", "plan_spgemm_1d", "spgemm_1d", "spmm_1d",
+    "SummaPlan", "plan_spgemm_summa", "spgemm_summa", "summa_panel_bounds",
+    "multi_source_bfs_1d",
 ]

@@ -1,139 +1,494 @@
-"""Distributed SpGEMM/SpMM over a device mesh (beyond-paper scale-out).
+"""Plan-aware distributed SpGEMM/SpMM over a device mesh (DESIGN.md §11).
 
-The paper is single-node; these routines lift its row-wise formulation onto a
-TPU mesh.  The load-balance contribution (C1) is reused at mesh scale: rows
-are assigned to chips by the same equal-flop prefix-sum partition, except the
-partition must be computed *host-side* (mesh layout is static), so we balance
-on nnz(A) rows as the flop proxy and let the per-chip Pallas grid rebalance
-exactly (two-level balancing, mirroring the paper's thread/core split).
+The paper's two-level load-balance story (equal-flop partition across
+threads, then per-thread hash/heap kernels) is lifted one level further:
+rows are assigned to *chips* by the same equal-flop prefix-sum partition
+(``schedule.equal_weight_partition``, the int64 host twin of
+``rows_to_bins``), and each chip's local product is a planned single-node
+SpGEMM -- three-level balancing, mirroring the inspector-executor split
+that distributed SpGEMM work (Gu et al., arXiv:2002.11302; the DBCSR port,
+arXiv:1708.03604) applies across nodes.
 
 Algorithms:
-  * ``spgemm_1d``: A row-partitioned over the flattened mesh axis, B
-    replicated/all-gathered in K panels -> C row-partitioned.  This is the
-    communication pattern of distributed Gustavson (A stays put, B streams).
-  * ``spmm_1d``: CSR x dense tall-skinny (BFS/betweenness use case) -- B is
-    all-gathered once (it is skinny: k << n).
-  * ``spgemm_summa``: 2D SUMMA-style over ("data", "model"): A block-rows x
-    B block-cols, with B panels broadcast along "data" and partial C
-    reduced along "model".  Used by the dry-run to prove the collective
-    schedule at 256/512 chips.
+  * ``spgemm_1d``: A row-partitioned over a mesh axis, B replicated -> C
+    row-partitioned (distributed Gustavson: A stays put).  Takes
+    ``algorithm=``/``semiring=``/``mask=`` like the single-node dispatcher,
+    or a frozen :class:`DistributedPlan` (``plan_spgemm_1d``).
+  * ``spmm_1d``: CSR x dense tall-skinny; returns the assembled global
+    ``(m, k)`` product (rectangular-safe -- no square assumption).
+  * ``spgemm_summa``: outer-product SUMMA over one mesh axis: K is split
+    into ``k_panels`` panels; chip ``s`` owns the A column-blocks and B
+    row-blocks of its panels, streams them through planned local products,
+    and the partial C's are merged with a reduce-scatter
+    (``jax.lax.psum_scatter``) that leaves C row-partitioned.
 
-Local per-shard products use the ESC engine (static caps per shard); on real
-TPUs the Pallas BCSR kernel slots in via the same local_spgemm hook.
+Everything host-side here is **sparse-native**: sharding slices the CSR
+arrays directly (never ``to_dense``).  The only dense intermediate in the
+whole subsystem is SUMMA's partial-C accumulator, which is what the
+reduce-scatter merge sums (its elementwise ``+`` must be the semiring's
+``add`` with identity 0 -- hence the ``min_plus`` rejection below).
+
+Local products dispatch through :func:`repro.core.spgemm.spgemm`.  The
+hash family runs as ``hash_jnp`` inside ``shard_map``: the Pallas kernel's
+table sizing is eager inspection that cannot trace, while the jnp fallback
+keeps the identical contract (two-phase capacity, unsorted select output)
+and accepts the plan's exact ``flop_cap``.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Callable
+import dataclasses
+import hashlib
+from dataclasses import dataclass
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from .formats import CSR
-from .spgemm import spgemm_esc, spmm
+from .plan import SpGEMMPlan, plan_spgemm, structure_key, cache_lookup, \
+    cache_store
+from .schedule import equal_weight_partition, flops_per_row
+from .semiring import Semiring, resolve_semiring
+from .spgemm import spgemm, spmm
 
 
-def shard_csr_rows(a: CSR, n_shards: int) -> CSR:
-    """Re-lay a CSR as n_shards equal-row local CSRs, stacked on axis 0.
+def _pad8(x: int) -> int:
+    """Static capacities padded to a lane multiple (like shard_csr_rows)."""
+    return -(-max(int(x), 1) // 8) * 8
 
-    Returns a CSR whose arrays have a leading shard dim:
-      indptr (S, m/S + 1), indices (S, cap/S), data (S, cap/S), nnz (S,)
-    Capacity is distributed evenly; rows are contiguous blocks (static
-    partition -- the dynamic equal-flop split happens *inside* each shard's
-    local schedule, see module docstring).
+
+# ----------------------------------------------------------------------------
+# Row-sharded CSR (the distributed operand/result currency)
+# ----------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShardedCSR:
+    """Row-partitioned CSR: ``parts`` arrays carry a leading shard dim.
+
+    ``parts`` is a CSR whose every array leaf is stacked ``(S, ...)``; its
+    static ``shape`` is the *local* ``(rows_cap, n_cols)`` where
+    ``rows_cap`` is the max shard height (equal-flop partitions produce
+    unequal row counts; short shards are padded with trailing empty rows so
+    the one SPMD program covers every shard).  ``row_starts`` records the
+    global partition; ``n_rows_global`` the unpadded global row count.
+    """
+    parts: CSR
+    row_starts: Tuple[int, ...] = dataclasses.field(
+        metadata=dict(static=True))
+    n_rows_global: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.row_starts) - 1
+
+    @property
+    def rows_cap(self) -> int:
+        return self.parts.n_rows
+
+    @property
+    def cap_per(self) -> int:
+        """Per-shard entry capacity (``parts.cap`` would read the shard
+        count off the stacked leading dim)."""
+        return self.parts.indices.shape[-1]
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return (self.n_rows_global, self.parts.n_cols)
+
+    def local(self, s: int) -> CSR:
+        """Shard ``s`` as a standalone (padded-height) CSR."""
+        return jax.tree.map(lambda x: x[s], self.parts)
+
+
+jax.tree_util.register_dataclass(
+    ShardedCSR, data_fields=["parts"],
+    meta_fields=["row_starts", "n_rows_global"])
+
+
+def shard_csr_rows(a: CSR, n_shards: int, b: CSR | None = None,
+                   weights=None, row_starts=None) -> ShardedCSR:
+    """Sparse-native row sharding with equal-flop boundaries.
+
+    The partition weight is, in order of preference: explicit ``weights``;
+    the planner's per-row flop counts ``flops_per_row(a, b)`` when the
+    right-hand operand is known; else nnz per row (the flop proxy).  Shard
+    boundaries come from :func:`schedule.equal_weight_partition` -- the
+    paper's Fig. 6 prefix-sum split, at mesh scale.  ``row_starts``
+    overrides the partition outright (used to co-shard masks/outputs with
+    an existing operand).
+
+    Never densifies: shards are direct slices of the CSR arrays (a row
+    partition of row-major CSR is contiguous), padded to a uniform
+    per-shard capacity (lane multiple of 8) and a uniform row count.
     """
     m = a.n_rows
-    assert m % n_shards == 0, (m, n_shards)
-    rows_per = m // n_shards
-    dense = a.to_dense()             # host/test-scale path
-    # Static per-shard capacity must cover the *max* shard (skewed inputs
-    # like G500 concentrate nnz in few rows -- the very imbalance C1 exists
-    # for); pad to a lane multiple.
-    import numpy as _np
-    counts = [int((_np.asarray(dense[i * rows_per:(i + 1) * rows_per]) != 0)
-                  .sum()) for i in range(n_shards)]
-    cap_per = -(-max(max(counts), 1) // 8) * 8
-    parts = [CSR.from_dense(dense[i * rows_per:(i + 1) * rows_per, :], cap_per)
-             for i in range(n_shards)]
-    stack = lambda *xs: jnp.stack(xs)
-    return jax.tree.map(stack, *parts)
+    if row_starts is None:
+        if weights is None:
+            weights = flops_per_row(a, b) if b is not None else a.row_nnz()
+        w = np.asarray(weights, np.int64)
+        assert w.shape == (m,), (w.shape, m)
+        row_starts = equal_weight_partition(w, n_shards)
+    starts = tuple(int(r) for r in np.asarray(row_starts))
+    assert len(starts) == n_shards + 1 and starts[0] == 0 \
+        and starts[-1] == m, (starts, m)
+    ip = np.asarray(a.indptr, np.int64)
+    ind = np.asarray(a.indices)
+    dat = np.asarray(a.data)
+    spans = [(starts[s], starts[s + 1]) for s in range(n_shards)]
+    rows_cap = max(max(r1 - r0 for r0, r1 in spans), 1)
+    counts = [int(ip[r1] - ip[r0]) for r0, r1 in spans]
+    cap_per = _pad8(max(counts))
+    indptr_s = np.zeros((n_shards, rows_cap + 1), np.int32)
+    indices_s = np.zeros((n_shards, cap_per), np.int32)
+    data_s = np.zeros((n_shards, cap_per), dat.dtype)
+    for s, (r0, r1) in enumerate(spans):
+        loc = (ip[r0:r1 + 1] - ip[r0]).astype(np.int32)
+        indptr_s[s, :r1 - r0 + 1] = loc
+        indptr_s[s, r1 - r0 + 1:] = loc[-1]        # trailing empty pad rows
+        indices_s[s, :counts[s]] = ind[ip[r0]:ip[r1]]
+        data_s[s, :counts[s]] = dat[ip[r0]:ip[r1]]
+    parts = CSR(jnp.asarray(indptr_s), jnp.asarray(indices_s),
+                jnp.asarray(data_s),
+                jnp.asarray(np.asarray(counts, np.int32)),
+                (rows_cap, a.n_cols), sorted_cols=a.sorted_cols)
+    return ShardedCSR(parts, starts, m)
 
 
-@partial(jax.jit, static_argnames=("mesh", "axis", "cap_c", "flop_cap"))
-def spgemm_1d(mesh: Mesh, a_sharded: CSR, b: CSR, cap_c: int,
-              flop_cap: int, axis: str = "data") -> CSR:
-    """Row-partitioned SpGEMM: local rows of A x replicated B.
+def reshard_rows(a: CSR, like: ShardedCSR) -> ShardedCSR:
+    """Shard ``a`` with an existing partition (masks follow their output)."""
+    assert a.n_rows == like.n_rows_global, (a.shape, like.shape)
+    return shard_csr_rows(a, like.n_shards, row_starts=like.row_starts)
 
-    ``a_sharded`` comes from :func:`shard_csr_rows` (leading shard dim
-    sharded over ``axis``); B is replicated (or broadcast by GSPMD).  Output
-    is a stacked CSR, row-partitioned the same way.
-    """
-    def local(a_loc: CSR, b_rep: CSR) -> CSR:
-        a_loc = jax.tree.map(lambda x: x[0], a_loc)   # drop unit shard dim
-        c = spgemm_esc(a_loc, b_rep, cap_c=cap_c, flop_cap=flop_cap)
+
+def unshard_rows(c_sh: ShardedCSR) -> CSR:
+    """Assemble a row-sharded result back into one global CSR (host-side,
+    sparse concatenation -- within-row entry order, hence sortedness, is
+    preserved)."""
+    parts, starts = c_sh.parts, c_sh.row_starts
+    ip = np.asarray(parts.indptr)
+    ind = np.asarray(parts.indices)
+    dat = np.asarray(parts.data)
+    row_nnz, idx, vals = [], [], []
+    for s in range(c_sh.n_shards):
+        local_m = starts[s + 1] - starts[s]
+        live = int(ip[s, local_m])
+        row_nnz.append(np.diff(ip[s, :local_m + 1]))
+        idx.append(ind[s, :live])
+        vals.append(dat[s, :live])
+    row_nnz = np.concatenate(row_nnz) if row_nnz else np.zeros(0, np.int64)
+    idx = np.concatenate(idx)
+    vals = np.concatenate(vals)
+    nnz = int(idx.size)
+    cap = max(nnz, 1)
+    indices = np.zeros(cap, np.int32)
+    data = np.zeros(cap, dat.dtype)
+    indices[:nnz] = idx
+    data[:nnz] = vals
+    indptr = np.zeros(c_sh.n_rows_global + 1, np.int32)
+    np.cumsum(row_nnz, out=indptr[1:])
+    return CSR(jnp.asarray(indptr), jnp.asarray(indices), jnp.asarray(data),
+               jnp.asarray(nnz, jnp.int32), c_sh.shape,
+               sorted_cols=parts.sorted_cols)
+
+
+# ----------------------------------------------------------------------------
+# Local product dispatch (shared by the 1D and SUMMA executors)
+# ----------------------------------------------------------------------------
+
+#: shard_map-side algorithm substitutions: the Pallas hash kernels size
+#: their tables by eager inspection (cannot trace); ``hash_jnp`` is the
+#: contract-equivalent fallback.  ``dense`` is the test oracle -- run the
+#: ESC engine instead of densifying per shard.
+_LOCAL_ALGO = {"hash": "hash_jnp", "hash_vector": "hash_jnp",
+               "dense": "esc"}
+
+
+def _local_spgemm(a_loc: CSR, b_loc: CSR, mask_loc: Optional[CSR], *,
+                  algorithm: str, semiring: str, complement_mask: bool,
+                  sorted_output: bool, cap_c: int,
+                  flop_cap: Optional[int], row_cap: Optional[int],
+                  k_width: Optional[int]) -> CSR:
+    """One shard's product, dispatched through the single-node front door."""
+    algo = _LOCAL_ALGO.get(algorithm, algorithm)
+    kw = {}
+    if algo in ("esc", "hash_jnp") and flop_cap is not None:
+        kw["flop_cap"] = flop_cap
+    if algo == "heap":
+        if row_cap is not None:
+            kw["row_cap"] = row_cap
+        if k_width is not None:
+            kw["k_width"] = k_width
+    return spgemm(a_loc, b_loc, cap_c, algorithm=algo, semiring=semiring,
+                  mask=mask_loc, complement_mask=complement_mask,
+                  sorted_output=sorted_output, **kw)
+
+
+def _build_1d_fn(mesh: Mesh, axis: str, masked: bool, statics: dict):
+    """shard_map'd SPMD body for the 1D row-partitioned product."""
+    def local(a_parts, b_rep, *maybe_mask):
+        a_loc = jax.tree.map(lambda x: x[0], a_parts)
+        m_loc = (jax.tree.map(lambda x: x[0], maybe_mask[0])
+                 if maybe_mask else None)
+        c = _local_spgemm(a_loc, b_rep, m_loc, **statics)
         return jax.tree.map(lambda x: x[None], c)
 
-    spec_a = jax.tree.map(lambda _: P(axis), a_sharded,
-                          is_leaf=lambda x: isinstance(x, jax.Array))
-    spec_b = jax.tree.map(lambda _: P(), b,
-                          is_leaf=lambda x: isinstance(x, jax.Array))
-    fn = shard_map(local, mesh=mesh, in_specs=(spec_a, spec_b),
-                   out_specs=spec_a, check_rep=False)
-    return fn(a_sharded, b)
+    in_specs = (P(axis), P()) + ((P(axis),) if masked else ())
+    return shard_map(local, mesh=mesh, in_specs=in_specs,
+                     out_specs=P(axis), check_rep=False)
 
 
-@partial(jax.jit, static_argnames=("mesh", "axis"))
-def spmm_1d(mesh: Mesh, a_sharded: CSR, x: jax.Array,
-            axis: str = "data") -> jax.Array:
-    """Row-partitioned SpMM (square x tall-skinny): y = A @ X.
+# ----------------------------------------------------------------------------
+# DistributedPlan: per-shard SpGEMMPlans frozen under one structure key
+# ----------------------------------------------------------------------------
 
-    X (n, k) is replicated (skinny); output (m, k) row-partitioned.
+@dataclass(frozen=True)
+class DistributedPlan:
+    """Frozen mesh-scale recipe for one (sharded-A, B) structure pair.
+
+    Holds the shard partition and one :class:`SpGEMMPlan` per shard; the
+    executor's static capacities are the per-shard maxima (shard_map runs
+    one SPMD program, so capacities must be uniform -- each shard's *exact*
+    numbers stay available in ``plans`` for audit).  Cached in the same LRU
+    as single-node plans under a ``("dist_1d", digest)`` key.
     """
-    def local(a_loc: CSR, x_rep: jax.Array) -> jax.Array:
-        a_loc = jax.tree.map(lambda v: v[0], a_loc)
+    key: tuple = dataclasses.field(repr=False)
+    row_starts: Tuple[int, ...]
+    algorithm: str
+    semiring: str
+    complement_mask: bool
+    sorted_output: bool
+    mask_sh: Optional[ShardedCSR] = dataclasses.field(repr=False)
+    shape_a: Tuple[int, int]
+    shape_b: Tuple[int, int]
+    cap_a: int
+    cap_b: int
+    nnz_b: int
+    plans: Tuple[SpGEMMPlan, ...] = dataclasses.field(repr=False)
+    cap_c: int
+    flop_cap: int
+    row_cap: int
+    k_width: int
+    nnz_c: int
+
+    def check_structure(self, a_sh: ShardedCSR, b: CSR) -> None:
+        assert a_sh.row_starts == self.row_starts, \
+            "operand partition differs from the planned shard boundaries"
+        assert a_sh.shape == self.shape_a and b.shape == self.shape_b, \
+            f"plan is for {self.shape_a}x{self.shape_b}, " \
+            f"got {a_sh.shape}x{b.shape}"
+        assert a_sh.cap_per == self.cap_a and b.cap == self.cap_b, \
+            "operand capacities differ from the planned structure"
+        if not isinstance(b.nnz, jax.core.Tracer):
+            assert int(b.nnz) == self.nnz_b, \
+                "B nnz differs from the planned structure (replan)"
+
+    def _executor(self, mesh: Mesh, axis: str):
+        statics = dict(algorithm=self.algorithm, semiring=self.semiring,
+                       complement_mask=self.complement_mask,
+                       sorted_output=self.sorted_output,
+                       cap_c=self.cap_c, flop_cap=self.flop_cap,
+                       row_cap=self.row_cap, k_width=self.k_width)
+        return _memoized_executor(
+            self, mesh, axis,
+            lambda: _build_1d_fn(mesh, axis, self.mask_sh is not None,
+                                 statics))
+
+    def execute(self, mesh: Mesh, a_sh: ShardedCSR, b: CSR,
+                axis: str = "data") -> ShardedCSR:
+        """Numeric phase only: zero re-inspection, uniform static caps."""
+        self.check_structure(a_sh, b)
+        args = (a_sh.parts, b)
+        if self.mask_sh is not None:
+            args = args + (self.mask_sh.parts,)
+        out = self._executor(mesh, axis)(*args)
+        return ShardedCSR(out, self.row_starts, self.shape_a[0])
+
+    __call__ = execute
+
+
+def _memoized_executor(plan, mesh: Mesh, axis: str, build):
+    """Per-(mesh, axis) jitted executor cache on a frozen plan dataclass
+    (shared by the 1D and SUMMA plans)."""
+    cache = plan.__dict__.get("_executors")
+    if cache is None:
+        cache = {}
+        object.__setattr__(plan, "_executors", cache)
+    fn = cache.get((mesh, axis))
+    if fn is None:
+        fn = jax.jit(build())
+        cache[(mesh, axis)] = fn
+    return fn
+
+
+def sharded_structure_key(sh: ShardedCSR) -> bytes:
+    """Digest of a ShardedCSR's structure (partition + stacked pattern).
+
+    The mesh twin of :func:`repro.core.plan.structure_key`: hashes the
+    stacked ``indptr``/``indices``/``nnz`` arrays in one pass and memoizes
+    on the (long-lived) instance, so repeat plan-cache lookups cost O(1)
+    instead of re-slicing and re-hashing every shard.
+    """
+    cached = sh.__dict__.get("_structure_digest")
+    if cached is not None:
+        return cached
+    p = sh.parts
+    h = hashlib.blake2b(digest_size=16)
+    h.update(repr((sh.row_starts, sh.n_rows_global, p.shape,
+                   p.indices.shape, p.sorted_cols)).encode())
+    h.update(np.asarray(p.indptr).tobytes())
+    h.update(np.asarray(p.indices).tobytes())
+    h.update(np.asarray(p.nnz).tobytes())
+    digest = h.digest()
+    object.__setattr__(sh, "_structure_digest", digest)
+    return digest
+
+
+def plan_spgemm_1d(a_sh: ShardedCSR, b: CSR, *, algorithm: str = "auto",
+                   semiring: str | Semiring = "plus_times",
+                   mask: CSR | ShardedCSR | None = None,
+                   complement_mask: bool = False,
+                   sorted_output: bool = False, n_bins: int = 8,
+                   cache: bool = True) -> DistributedPlan:
+    """Inspect every shard once and freeze a :class:`DistributedPlan`.
+
+    ``algorithm="auto"`` is resolved by shard 0's recipe choice and then
+    forced on every shard (shard_map is SPMD: one program).  The mask (in
+    global output coordinates) is co-sharded with A's row partition.  The
+    plan is cached in the shared LRU under one blake2b digest of all shard
+    structures + B + mask + partition + semantic fields, so a repeat
+    product on the same structures replans nothing.
+    """
+    sr = resolve_semiring(semiring)
+    mask_sh = None
+    if mask is not None:
+        mask_sh = mask if isinstance(mask, ShardedCSR) \
+            else reshard_rows(mask, a_sh)
+        assert mask_sh.row_starts == a_sh.row_starts, \
+            "mask must be sharded with A's row partition"
+    S = a_sh.n_shards
+    key = ("dist_1d", sharded_structure_key(a_sh), structure_key(b),
+           None if mask_sh is None else sharded_structure_key(mask_sh),
+           sr.name, complement_mask, sorted_output, algorithm, n_bins)
+    if cache:
+        hit = cache_lookup(key)
+        if hit is not None:
+            return hit
+
+    a_locals = [a_sh.local(s) for s in range(S)]
+    mask_locals = [mask_sh.local(s) for s in range(S)] if mask_sh else None
+    algo = algorithm
+    plans = []
+    for s in range(S):
+        p = plan_spgemm(a_locals[s], b, algorithm=algo, semiring=sr.name,
+                        mask=mask_locals[s] if mask_locals else None,
+                        complement_mask=complement_mask,
+                        sorted_output=sorted_output, n_bins=n_bins,
+                        cache=cache)
+        if algo == "auto":
+            algo = p.algorithm              # shard 0 resolves; rest uniform
+        plans.append(p)
+
+    plan = DistributedPlan(
+        key=key, row_starts=a_sh.row_starts, algorithm=algo,
+        semiring=sr.name, complement_mask=complement_mask,
+        sorted_output=sorted_output, mask_sh=mask_sh, shape_a=a_sh.shape,
+        shape_b=b.shape, cap_a=a_sh.cap_per, cap_b=b.cap,
+        nnz_b=int(b.nnz), plans=tuple(plans),
+        cap_c=_pad8(max(p.cap_c for p in plans)),
+        flop_cap=max(max(p.flop_cap for p in plans), 1),
+        row_cap=max(p.row_cap for p in plans),
+        k_width=max(p.k_width for p in plans),
+        nnz_c=sum(p.nnz_c for p in plans))
+    if cache:
+        cache_store(key, plan)
+    return plan
+
+
+# ----------------------------------------------------------------------------
+# 1D row-partitioned products
+# ----------------------------------------------------------------------------
+
+def spgemm_1d(mesh: Mesh, a_sh: ShardedCSR, b: CSR, cap_c: int | None = None,
+              flop_cap: int | None = None, axis: str = "data", *,
+              algorithm: str = "esc",
+              semiring: str | Semiring = "plus_times",
+              mask: CSR | ShardedCSR | None = None,
+              complement_mask: bool = False, sorted_output: bool = False,
+              plan: DistributedPlan | None = None) -> ShardedCSR:
+    """Row-partitioned SpGEMM: local shards of A x replicated B.
+
+    With ``plan=`` (from :func:`plan_spgemm_1d`) every capacity and the
+    algorithm/semiring/mask come from the plan and nothing is recomputed.
+    Without a plan, ``cap_c`` is the per-shard output capacity and the
+    explicit ``algorithm`` dispatches through :func:`spgemm` (``auto``
+    needs inspection -- use the planner).
+    """
+    if plan is not None:
+        return plan.execute(mesh, a_sh, b, axis=axis)
+    assert cap_c is not None, "spgemm_1d needs cap_c unless plan= is given"
+    if algorithm == "auto":
+        raise ValueError(
+            "algorithm='auto' needs inspection; use plan_spgemm_1d")
+    sr = resolve_semiring(semiring)
+    mask_sh = None
+    if mask is not None:
+        mask_sh = mask if isinstance(mask, ShardedCSR) \
+            else reshard_rows(mask, a_sh)
+        assert mask_sh.row_starts == a_sh.row_starts, \
+            "mask must be sharded with A's row partition"
+    statics = dict(algorithm=algorithm, semiring=sr.name,
+                   complement_mask=complement_mask,
+                   sorted_output=sorted_output, cap_c=cap_c,
+                   flop_cap=flop_cap, row_cap=None, k_width=None)
+    fn = _build_1d_fn(mesh, axis, mask_sh is not None, statics)
+    args = (a_sh.parts, b) + ((mask_sh.parts,) if mask_sh else ())
+    return ShardedCSR(fn(*args), a_sh.row_starts, a_sh.n_rows_global)
+
+
+def _gather_rows(y: jax.Array, a_sh: ShardedCSR) -> jax.Array:
+    """Drop per-shard pad rows from a stacked (S, rows_cap, k) result and
+    reassemble the global (m, k) order (rectangular/unequal-shard safe --
+    this replaces the old square-only ``reshape(nxt, (n, k))``)."""
+    S, rows_cap = a_sh.n_shards, a_sh.rows_cap
+    starts = a_sh.row_starts
+    idx = np.concatenate(
+        [np.arange(starts[s + 1] - starts[s], dtype=np.int64) + s * rows_cap
+         for s in range(S)])
+    flat = y.reshape((S * rows_cap,) + y.shape[2:])
+    return flat[jnp.asarray(idx, jnp.int32)]
+
+
+def spmm_1d(mesh: Mesh, a_sh: ShardedCSR, x: jax.Array,
+            axis: str = "data") -> jax.Array:
+    """Row-partitioned SpMM: y = A @ X with dense X of shape (n_cols, k).
+
+    X is replicated (tall-skinny: k << n); the result is assembled to the
+    global ``(n_rows, k)`` layout, which is correct for rectangular A and
+    unequal (equal-flop) shard heights alike.
+    """
+    assert x.shape[0] == a_sh.shape[1], (x.shape, a_sh.shape)
+
+    def local(a_parts, x_rep):
+        a_loc = jax.tree.map(lambda v: v[0], a_parts)
         return spmm(a_loc, x_rep)[None]
 
-    spec_a = jax.tree.map(lambda _: P(axis), a_sharded,
-                          is_leaf=lambda v: isinstance(v, jax.Array))
-    fn = shard_map(local, mesh=mesh, in_specs=(spec_a, P()),
+    fn = shard_map(local, mesh=mesh, in_specs=(P(axis), P()),
                    out_specs=P(axis), check_rep=False)
-    return fn(a_sharded, x)
+    return _gather_rows(fn(a_sh.parts, x), a_sh)
 
 
-def spgemm_summa(mesh: Mesh, a_dense: jax.Array, b_dense: jax.Array,
-                 row_axis: str = "data", col_axis: str = "model",
-                 k_panels: int | None = None) -> jax.Array:
-    """2D SUMMA product with sparse-aware panels, dense I/O (dry-run proof).
-
-    A is (m, n) sharded (row_axis, col_axis); B is (n, k) sharded
-    (row_axis=cols of A!, col_axis); C is (m, k) sharded (row_axis,
-    col_axis).  Every step broadcasts one K-panel of A along col_axis and
-    one of B along row_axis, accumulating local partial products -- the
-    classic SUMMA schedule the roofline's collective term measures.
-
-    GSPMD formulation: we express the product as a sharded einsum with
-    explicit sharding constraints; XLA emits the all-gather/reduce-scatter
-    schedule which `analysis.hlo_collectives` then audits.
-    """
-    del k_panels
-    a_dense = jax.lax.with_sharding_constraint(
-        a_dense, jax.sharding.NamedSharding(mesh, P(row_axis, col_axis)))
-    b_dense = jax.lax.with_sharding_constraint(
-        b_dense, jax.sharding.NamedSharding(mesh, P(col_axis, None)))
-    c = a_dense @ b_dense
-    return jax.lax.with_sharding_constraint(
-        c, jax.sharding.NamedSharding(mesh, P(row_axis, col_axis)))
-
-
-def multi_source_bfs(mesh: Mesh, a_sharded: CSR, sources: jax.Array,
+def multi_source_bfs(mesh: Mesh, a_sh: ShardedCSR, sources: jax.Array,
                      n: int, n_iters: int, axis: str = "data") -> jax.Array:
     """Multi-source BFS via repeated SpMM (paper section 5.5 use case).
 
     ``sources`` (k,) vertex ids; returns (n, k) hop-distance matrix (-1 =
     unreached).  Frontier is the dense tall-skinny matrix; one SpMM per hop.
     """
+    assert a_sh.shape == (n, n), \
+        f"BFS adjacency must be square (n, n); got {a_sh.shape}"
     k = sources.shape[0]
     frontier = jnp.zeros((n, k), jnp.float32).at[sources,
                                                  jnp.arange(k)].set(1.0)
@@ -141,11 +496,323 @@ def multi_source_bfs(mesh: Mesh, a_sharded: CSR, sources: jax.Array,
 
     def body(i, state):
         frontier, dist = state
-        nxt = spmm_1d(mesh, a_sharded, frontier, axis=axis)
-        nxt = jnp.reshape(nxt, (n, k))
+        nxt = spmm_1d(mesh, a_sh, frontier, axis=axis)   # (n, k), assembled
         new = (nxt > 0) & (dist < 0)
         dist = jnp.where(new, i + 1, dist)
         return new.astype(jnp.float32), dist
 
     _, dist = jax.lax.fori_loop(0, n_iters, body, (frontier, dist))
     return dist
+
+
+# ----------------------------------------------------------------------------
+# SUMMA: outer-product K-panel schedule with reduce-scatter merge
+# ----------------------------------------------------------------------------
+
+def summa_panel_bounds(k_dim: int, n_shards: int,
+                       k_panels: int | None = None) -> Tuple[Tuple[int, int],
+                                                             ...]:
+    """The K-panel schedule: ``k_panels`` contiguous equal panels of the
+    contraction dimension, ``k_panels / n_shards`` owned per chip.
+
+    ``k_panels`` defaults to one panel per chip and must be a multiple of
+    ``n_shards`` that divides K -- anything else raises (no silently
+    ignored arguments; this is the fix for the previously-dead parameter).
+    """
+    if k_panels is None:
+        k_panels = n_shards
+    if k_panels % n_shards != 0:
+        raise ValueError(
+            f"k_panels={k_panels} must be a multiple of the mesh axis size "
+            f"{n_shards} (each chip owns k_panels/n_shards panels)")
+    if k_dim % k_panels != 0:
+        raise ValueError(
+            f"k_panels={k_panels} must divide the contraction dim {k_dim}")
+    step = k_dim // k_panels
+    return tuple((i * step, (i + 1) * step) for i in range(k_panels))
+
+
+def _shard_summa(a: CSR, b: CSR, n_shards: int, k_panels: int):
+    """Sparse-native operand layout for the outer-product schedule.
+
+    Panel ``p`` (owned by chip ``p // (k_panels/n_shards)``) gets A's
+    column block and B's row block for K-range ``bounds[p]``: the column
+    block is a host-side entry filter (order-preserving, so sortedness
+    survives); the row block is a contiguous CSR slice.  Returns stacked
+    CSRs with leading dims ``(S, P)`` plus the per-panel **entry-gather
+    indices** ``(a_take, b_take)`` mapping each panel slot back to its
+    global entry -- the structural part of the decomposition the plan
+    freezes, so repeat executes re-gather only *values* (one device
+    gather) instead of re-running this host pass.
+    """
+    bounds = summa_panel_bounds(a.n_cols, n_shards, k_panels)
+    k_panels = len(bounds)
+    per = k_panels // n_shards
+    m, n = a.n_rows, b.n_cols
+    step = bounds[0][1] - bounds[0][0]
+
+    ip_a = np.asarray(a.indptr, np.int64)
+    ind_a = np.asarray(a.indices)
+    dat_a = np.asarray(a.data)
+    live_a = int(ip_a[-1])
+    rows_a = np.repeat(np.arange(m), np.diff(ip_a))
+    ip_b = np.asarray(b.indptr, np.int64)
+    ind_b = np.asarray(b.indices)
+    dat_b = np.asarray(b.data)
+
+    a_blocks, b_blocks = [], []
+    for lo, hi in bounds:
+        sel = (ind_a[:live_a] >= lo) & (ind_a[:live_a] < hi)
+        take_a = np.nonzero(sel)[0].astype(np.int32)
+        r = rows_a[take_a]
+        counts = np.bincount(r, minlength=m)
+        indptr = np.zeros(m + 1, np.int32)
+        np.cumsum(counts, out=indptr[1:])
+        a_blocks.append((indptr, (ind_a[take_a] - lo).astype(np.int32),
+                         dat_a[take_a], take_a))
+        lo_p, hi_p = int(ip_b[lo]), int(ip_b[hi])
+        take_b = np.arange(lo_p, hi_p, dtype=np.int32)
+        b_blocks.append(((ip_b[lo:hi + 1] - ip_b[lo]).astype(np.int32),
+                         ind_b[take_b].astype(np.int32), dat_b[take_b],
+                         take_b))
+
+    cap_a = _pad8(max(blk[1].size for blk in a_blocks))
+    cap_b = _pad8(max(blk[1].size for blk in b_blocks))
+
+    def stack(blocks, n_ptr, cap, dtype):
+        ptr = np.zeros((n_shards, per, n_ptr), np.int32)
+        idx = np.zeros((n_shards, per, cap), np.int32)
+        val = np.zeros((n_shards, per, cap), dtype)
+        take = np.zeros((n_shards, per, cap), np.int32)
+        nnz = np.zeros((n_shards, per), np.int32)
+        for pg, (p_ptr, p_idx, p_val, p_take) in enumerate(blocks):
+            s, p = pg // per, pg % per
+            ptr[s, p] = p_ptr
+            idx[s, p, :p_idx.size] = p_idx
+            val[s, p, :p_idx.size] = p_val
+            take[s, p, :p_idx.size] = p_take
+            nnz[s, p] = p_idx.size
+        return ptr, idx, val, take, nnz
+
+    pa, ia, va, ta, na = stack(a_blocks, m + 1, cap_a, dat_a.dtype)
+    pb, ib, vb, tb, nb = stack(b_blocks, step + 1, cap_b, dat_b.dtype)
+    a_parts = CSR(jnp.asarray(pa), jnp.asarray(ia), jnp.asarray(va),
+                  jnp.asarray(na), (m, step), sorted_cols=a.sorted_cols)
+    b_parts = CSR(jnp.asarray(pb), jnp.asarray(ib), jnp.asarray(vb),
+                  jnp.asarray(nb), (step, n), sorted_cols=b.sorted_cols)
+    return a_parts, b_parts, bounds, jnp.asarray(ta), jnp.asarray(tb)
+
+
+@dataclass(frozen=True)
+class SummaPlan:
+    """Frozen outer-product SUMMA schedule: per-(chip, panel) plans, the
+    global symbolic result that sizes the row-sharded output, and the
+    *panel structure* itself (stacked indptr/indices with zeroed data,
+    plus entry-gather indices).  Values deliberately stay out -- like
+    ``SpGEMMPlan``, a re-weighted operand pair reuses the plan -- so
+    ``execute`` re-gathers only ``data`` with one device gather per
+    operand instead of re-running the host decomposition."""
+    key: tuple = dataclasses.field(repr=False)
+    n_shards: int
+    k_panels: int
+    bounds: Tuple[Tuple[int, int], ...]
+    algorithm: str
+    semiring: str
+    shape_a: Tuple[int, int]
+    shape_b: Tuple[int, int]
+    cap_a: int
+    cap_b: int
+    nnz_a: int
+    nnz_b: int
+    plans: Tuple[SpGEMMPlan, ...] = dataclasses.field(repr=False)
+    a_struct: CSR = dataclasses.field(repr=False)   # stacked, data zeroed
+    b_struct: CSR = dataclasses.field(repr=False)
+    a_take: jax.Array = dataclasses.field(repr=False)
+    b_take: jax.Array = dataclasses.field(repr=False)
+    cap_c: int               # uniform per-panel local product capacity
+    flop_cap: int
+    row_cap: int
+    k_width: int
+    out_cap: int             # uniform per-row-shard output capacity
+    row_starts_out: Tuple[int, ...]
+    nnz_c: int
+
+    def check_structure(self, a: CSR, b: CSR) -> None:
+        assert a.shape == self.shape_a and b.shape == self.shape_b, \
+            f"plan is for {self.shape_a}x{self.shape_b}, " \
+            f"got {a.shape}x{b.shape}"
+        assert a.cap == self.cap_a and b.cap == self.cap_b, \
+            "operand capacities differ from the planned structure"
+        for op, planned in ((a, self.nnz_a), (b, self.nnz_b)):
+            if not isinstance(op.nnz, jax.core.Tracer):
+                assert int(op.nnz) == planned, \
+                    "operand nnz differs from the planned structure"
+
+    def execute(self, mesh: Mesh, a: CSR, b: CSR,
+                axis: str = "data") -> ShardedCSR:
+        """Numeric phase only: gather current values into the frozen panel
+        structure (device-side), run the panel loop + reduce-scatter."""
+        self.check_structure(a, b)
+        fn = _memoized_executor(self, mesh, axis,
+                                lambda: _build_summa_fn(self, mesh, axis))
+        out = fn(self.a_struct, self.a_take, a.data,
+                 self.b_struct, self.b_take, b.data)
+        return ShardedCSR(out, self.row_starts_out, self.shape_a[0])
+
+    __call__ = execute
+
+
+def _build_summa_fn(plan: SummaPlan, mesh: Mesh, axis: str):
+    """SPMD body: gather values into the frozen panel structure, stream
+    the chip's K-panels through planned local products, accumulate the
+    dense partial C, reduce-scatter over rows."""
+    per = plan.k_panels // plan.n_shards
+    m, n = plan.shape_a[0], plan.shape_b[1]
+    statics = dict(algorithm=plan.algorithm, semiring=plan.semiring,
+                   complement_mask=False, sorted_output=False,
+                   cap_c=plan.cap_c, flop_cap=plan.flop_cap,
+                   row_cap=plan.row_cap, k_width=plan.k_width)
+    boolean = plan.semiring == "boolean"
+
+    def gather(struct, take, data):
+        s_loc = jax.tree.map(lambda x: x[0], struct)     # (per, ...) local
+        lane = jnp.arange(take.shape[-1], dtype=jnp.int32)
+        live = lane[None, :] < s_loc.nnz[:, None]        # (per, cap)
+        vals = jnp.where(live, data[take[0]], 0).astype(data.dtype)
+        return dataclasses.replace(s_loc, data=vals)
+
+    def local(a_struct, a_take, a_data, b_struct, b_take, b_data):
+        a_loc = gather(a_struct, a_take, a_data)    # (per, ...) stacked
+        b_loc = gather(b_struct, b_take, b_data)
+        acc = jnp.zeros((m, n), a_data.dtype)
+        for p in range(per):
+            a_p = jax.tree.map(lambda x: x[p], a_loc)
+            b_p = jax.tree.map(lambda x: x[p], b_loc)
+            c_p = _local_spgemm(a_p, b_p, None, **statics)
+            # the reduce-scatter merge is an elementwise +, which is the
+            # semiring add for every semiring this path admits (boolean
+            # partials are 0/1 counts, thresholded after the scatter)
+            acc = acc + c_p.to_dense()
+        part = jax.lax.psum_scatter(acc, axis, scatter_dimension=0,
+                                    tiled=True)
+        if boolean:
+            part = (part > 0).astype(acc.dtype)
+        c_loc = CSR.from_dense(part, cap=plan.out_cap)
+        return jax.tree.map(lambda x: x[None], c_loc)
+
+    return shard_map(local, mesh=mesh,
+                     in_specs=(P(axis), P(axis), P(), P(axis), P(axis),
+                               P()),
+                     out_specs=P(axis), check_rep=False)
+
+
+def plan_spgemm_summa(a: CSR, b: CSR, n_shards: int,
+                      k_panels: int | None = None, *,
+                      algorithm: str = "auto",
+                      semiring: str | Semiring = "plus_times",
+                      n_bins: int = 8, cache: bool = True) -> SummaPlan:
+    """Inspect the outer-product SUMMA schedule once and freeze it.
+
+    Runs the *global* plan first (resolving ``auto`` and yielding the exact
+    ``row_nnz_c`` that sizes the row-sharded output), then one plan per
+    (chip, panel) local product.  Cached under a ``("summa", digest)`` key
+    in the shared LRU.
+
+    The merge is a dense-accumulator reduce-scatter, so the semiring's
+    ``add`` must be arithmetic ``+`` with identity 0: ``plus_times`` /
+    ``plus_first`` directly, ``boolean`` via a post-scatter threshold.
+    ``min_plus`` (identity +inf) is rejected.
+    """
+    sr = resolve_semiring(semiring)
+    if sr.name == "min_plus":
+        raise NotImplementedError(
+            "spgemm_summa's reduce-scatter merge needs an add-identity of "
+            "0; min_plus (identity +inf) needs the 1D path (spgemm_1d)")
+    m = a.n_rows
+    if m % n_shards != 0:
+        raise ValueError(
+            f"reduce-scatter tiles C rows equally: n_rows={m} must be "
+            f"divisible by the mesh axis size {n_shards}")
+    bounds = summa_panel_bounds(a.n_cols, n_shards, k_panels)
+    k_panels = len(bounds)
+
+    h = hashlib.blake2b(digest_size=16)
+    h.update(structure_key(a))
+    h.update(structure_key(b))
+    h.update(repr((n_shards, k_panels, sr.name, algorithm,
+                   n_bins)).encode())
+    key = ("summa", h.digest())
+    if cache:
+        hit = cache_lookup(key)
+        if hit is not None:
+            return hit
+
+    # Global inspection: exact output structure -> per-row-shard capacity,
+    # and the recipe's algorithm choice resolved on the whole product.
+    gplan = plan_spgemm(a, b, algorithm=algorithm, semiring=sr.name,
+                        n_bins=n_bins, cache=cache)
+    algo = gplan.algorithm
+    row_nnz = np.asarray(gplan.row_nnz_c, np.int64)
+    rows_per = m // n_shards
+    out_cap = _pad8(int(row_nnz.reshape(n_shards, rows_per).sum(axis=1)
+                        .max()))
+    row_starts_out = tuple(range(0, m + 1, rows_per))
+
+    a_parts, b_parts, _, a_take, b_take = _shard_summa(a, b, n_shards,
+                                                       k_panels)
+    per = k_panels // n_shards
+    plans = []
+    for s in range(n_shards):
+        for p in range(per):
+            a_p = jax.tree.map(lambda x: x[s, p], a_parts)
+            b_p = jax.tree.map(lambda x: x[s, p], b_parts)
+            plans.append(plan_spgemm(a_p, b_p, algorithm=algo,
+                                     semiring=sr.name, n_bins=n_bins,
+                                     cache=cache))
+
+    plan = SummaPlan(
+        key=key, n_shards=n_shards, k_panels=k_panels, bounds=bounds,
+        algorithm=algo, semiring=sr.name, shape_a=a.shape, shape_b=b.shape,
+        cap_a=a.cap, cap_b=b.cap, nnz_a=int(a.nnz), nnz_b=int(b.nnz),
+        plans=tuple(plans),
+        a_struct=dataclasses.replace(
+            a_parts, data=jnp.zeros_like(a_parts.data)),
+        b_struct=dataclasses.replace(
+            b_parts, data=jnp.zeros_like(b_parts.data)),
+        a_take=a_take, b_take=b_take,
+        cap_c=_pad8(max(p.cap_c for p in plans)),
+        flop_cap=max(max(p.flop_cap for p in plans), 1),
+        row_cap=max(p.row_cap for p in plans),
+        k_width=max(p.k_width for p in plans),
+        out_cap=out_cap, row_starts_out=row_starts_out,
+        nnz_c=gplan.nnz_c)
+    if cache:
+        cache_store(key, plan)
+    return plan
+
+
+def spgemm_summa(mesh: Mesh, a: CSR, b: CSR, axis: str = "data",
+                 k_panels: int | None = None, *, algorithm: str = "auto",
+                 semiring: str | Semiring = "plus_times", n_bins: int = 8,
+                 plan: SummaPlan | None = None) -> ShardedCSR:
+    """Outer-product SUMMA over one mesh axis; C comes back row-sharded.
+
+    Chip ``s`` owns K-panels ``[s*per, (s+1)*per)`` of A's column blocks
+    and B's row blocks, streams them through planned sparse local products,
+    and the dense partial C's are merged by a reduce-scatter along
+    ``axis``.  ``k_panels`` (default: one per chip) sets the panel count
+    of the stream -- invalid values raise, see :func:`summa_panel_bounds`.
+    """
+    n_shards = mesh.shape[axis]
+    if plan is None:
+        plan = plan_spgemm_summa(a, b, n_shards, k_panels,
+                                 algorithm=algorithm, semiring=semiring,
+                                 n_bins=n_bins)
+    else:
+        if plan.n_shards != n_shards:
+            raise ValueError(f"plan is for {plan.n_shards} shards, mesh "
+                             f"axis {axis!r} has {n_shards}")
+        if k_panels is not None and plan.k_panels != k_panels:
+            raise ValueError(f"plan holds k_panels={plan.k_panels}, "
+                             f"call requested {k_panels}")
+    return plan.execute(mesh, a, b, axis=axis)

@@ -89,6 +89,30 @@ def clear_plan_cache() -> None:
     _STATS["hits"] = _STATS["misses"] = 0
 
 
+def cache_lookup(key: tuple):
+    """Consult the shared plan LRU (counts a hit or a miss).
+
+    The cache is deliberately kind-agnostic: single-node ``SpGEMMPlan``s and
+    the distributed plans of ``core.distributed`` live in one table under
+    disjoint key namespaces, so one capacity bound and one ``clear`` govern
+    every frozen inspection product.
+    """
+    hit = _CACHE.get(key)
+    if hit is not None:
+        _STATS["hits"] += 1
+        _CACHE[key] = _CACHE.pop(key)              # LRU: move to newest
+        return hit
+    _STATS["misses"] += 1
+    return None
+
+
+def cache_store(key: tuple, value) -> None:
+    """Insert into the shared plan LRU, evicting least-recent past capacity."""
+    _CACHE[key] = value
+    while len(_CACHE) > PLAN_CACHE_CAPACITY:
+        _CACHE.pop(next(iter(_CACHE)))             # evict least-recent
+
+
 def _plan_key(a: CSR, b: CSR, mask: Optional[CSR], sr_name: str,
               complement_mask: bool, sorted_output: bool, algorithm: str,
               use_case: Optional[str], n_bins: int) -> tuple:
@@ -181,8 +205,8 @@ class SpGEMMPlan:
                                 k_width=self.k_width, cap_c=self.cap_c,
                                 semiring=sr, mask=self.mask,
                                 complement_mask=self.complement_mask)
-        elif algo in ("hash", "hash_vector"):
-            if general:
+        elif algo in ("hash", "hash_vector", "hash_jnp"):
+            if general or algo == "hash_jnp":
                 out = spgemm_hash_jnp(a, b, self.cap_c,
                                         flop_cap=self.flop_cap, semiring=sr,
                                         mask=self.mask,
@@ -227,12 +251,9 @@ def plan_spgemm(a: CSR, b: CSR, *, algorithm: str = "auto",
     key = _plan_key(a, b, mask, sr.name, complement_mask, sorted_output,
                     algorithm, use_case, n_bins) + (bucket_caps,)
     if cache:
-        hit = _CACHE.get(key)
+        hit = cache_lookup(key)
         if hit is not None:
-            _STATS["hits"] += 1
-            _CACHE[key] = _CACHE.pop(key)          # LRU: move to newest
             return hit
-        _STATS["misses"] += 1
 
     from repro.kernels.spgemm_hash import kernel as HK
     _check_mask(a, b, mask)
@@ -297,7 +318,5 @@ def plan_spgemm(a: CSR, b: CSR, *, algorithm: str = "auto",
         row_nnz_c=row_nnz_c, indptr_c=indptr_c, nnz_c=nnz_c, cap_c=cap_c,
         row_cap=row_cap, k_width=k_width)
     if cache:
-        _CACHE[key] = plan
-        while len(_CACHE) > PLAN_CACHE_CAPACITY:
-            _CACHE.pop(next(iter(_CACHE)))         # evict least-recent
+        cache_store(key, plan)
     return plan

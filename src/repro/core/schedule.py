@@ -167,6 +167,28 @@ make_schedule = partial(jax.jit, static_argnames=("n_bins",))(
 make_schedule.__doc__ = "Jitted :func:`make_schedule_eager`."
 
 
+def equal_weight_partition(weights, n_parts: int) -> np.ndarray:
+    """Host-side equal-weight contiguous partition (Fig. 6 at mesh scale).
+
+    The exact int64 twin of :func:`rows_to_bins` for *shard* boundaries:
+    mesh layout is static, so the partition is computed eagerly in numpy
+    (no overflow guard needed -- int64 accumulation is always exact here).
+    Returns ``row_starts`` of shape ``(n_parts + 1,)`` with the same
+    invariants as ``rows_to_bins``: starts[0] == 0, starts[-1] == n_rows,
+    monotone, and every part's weight <= ceil(total/n_parts) + max weight.
+    """
+    w = np.asarray(weights, dtype=np.int64)
+    assert w.ndim == 1, w.shape
+    n = w.shape[0]
+    ps = np.concatenate([np.zeros(1, np.int64), np.cumsum(w, dtype=np.int64)])
+    total = ps[-1]
+    targets = (total * np.arange(1, n_parts, dtype=np.int64)) // n_parts
+    cuts = np.searchsorted(ps[1:], targets + 1, side="left")
+    starts = np.concatenate([np.zeros(1, np.int64), cuts,
+                             np.full(1, n, np.int64)])
+    return np.minimum(starts, n)
+
+
 def lowest_p2(x: int) -> int:
     """Static helper: minimum 2^n >= x (Fig. 7 line 12)."""
     p = 1

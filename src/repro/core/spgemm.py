@@ -46,7 +46,8 @@ from .formats import CSR, csr_sorted_keys, sorted_keys_contain
 from .semiring import Semiring, resolve_semiring
 from . import schedule as sched
 
-Algorithm = Literal["auto", "dense", "esc", "heap", "hash", "hash_vector"]
+Algorithm = Literal["auto", "dense", "esc", "heap", "hash", "hash_vector",
+                    "hash_jnp"]
 
 #: hash-order scrambling modulus for the jnp hash fallback (Fig. 8's
 #: multiply hash over a fixed 2^20 table: output order == table-scan order).
@@ -478,6 +479,13 @@ def spgemm(a: CSR, b: CSR, cap_c: int | None = None,
         out = spgemm_heap(a, b, row_cap=row_cap, k_width=k_width,
                           cap_c=cap_c, semiring=sr, mask=mask,
                           complement_mask=complement_mask)
+    elif algorithm == "hash_jnp":
+        # Explicit jnp-fallback request: same contract as the hash family
+        # (unsorted select output) with no Pallas dependency.  This is what
+        # the distributed executor runs inside shard_map, where the Pallas
+        # kernel's eager inspection cannot trace (core/distributed.py).
+        out = spgemm_hash_jnp(a, b, cap_c, semiring=sr, mask=mask,
+                              complement_mask=complement_mask, **kw)
     elif algorithm in ("hash", "hash_vector"):
         if general:
             # Pallas kernels are (+, x)-specialized; the jnp fallback owns

@@ -1,0 +1,219 @@
+"""Differential SpGEMM suite: every algorithm against a scipy oracle.
+
+Each executable algorithm (esc / heap / hash / hash_jnp) is compared to an
+independent scipy.sparse (plus_times) or numpy (other semirings) oracle
+across semirings, masks (plain + complemented), sorted/unsorted output
+requests, rectangular shapes, and empty-row/empty-matrix edge cases.
+
+The deterministic grid below runs everywhere; the property-based layer at
+the bottom additionally fuzzes structures when the optional ``hypothesis``
+extra is installed (guarded like the other property suites -- absence
+skips only that layer, never the grid).
+
+Values are drawn from dyadic rationals ({0.5, 1.0, 1.5, 2.0}) so fp32
+products and sums are exact and every comparison can be bitwise; they are
+also strictly positive, which sidesteps the dense-oracle explicit-zero
+caveat documented on ``spgemm_dense``.
+"""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+sp = pytest.importorskip("scipy.sparse")
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import CSR, spgemm, spgemm_heap  # noqa: E402
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+ALGOS = ("esc", "heap", "hash", "hash_jnp")
+SEMIRINGS = ("plus_times", "boolean", "min_plus", "plus_first")
+VALS = np.array([0.5, 1.0, 1.5, 2.0], np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Oracles and builders
+# ---------------------------------------------------------------------------
+
+def _oracle(ad: np.ndarray, bd: np.ndarray, sr_name: str) -> np.ndarray:
+    """Independent oracle; plus_times goes through scipy.sparse."""
+    ap, bp = ad != 0, bd != 0
+    if sr_name == "plus_times":
+        return np.asarray((sp.csr_matrix(ad) @ sp.csr_matrix(bd)).todense(),
+                          np.float32)
+    if sr_name == "boolean":
+        return ((sp.csr_matrix(ap) @ sp.csr_matrix(bp)).todense() > 0) \
+            .astype(np.float32)
+    if sr_name == "plus_first":
+        return (ad @ bp.astype(np.float32)).astype(np.float32)
+    if sr_name == "min_plus":
+        s = np.where(ap[:, :, None] & bp[None, :, :],
+                     ad[:, :, None] + bd[None, :, :], np.inf)
+        out = s.min(axis=1)
+        return np.where(np.isinf(out), 0.0, out).astype(np.float32)
+    raise AssertionError(sr_name)
+
+
+def _mask_after(c: np.ndarray, mask_d: np.ndarray,
+                complement: bool) -> np.ndarray:
+    keep = (mask_d == 0) if complement else (mask_d != 0)
+    return np.where(keep, c, 0.0)
+
+
+def _rand_dense(m: int, n: int, density: float, seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    d = rng.choice(VALS, size=(m, n))
+    return np.where(rng.random((m, n)) < density, d, 0.0).astype(np.float32)
+
+
+def _csr(d: np.ndarray, cap: int | None = None) -> CSR:
+    r, c = np.nonzero(d)
+    return CSR.from_numpy_coo(r, c, d[r, c], d.shape, cap=cap)
+
+
+def _run(a: CSR, b: CSR, algo: str, cap: int, **kw) -> CSR:
+    return spgemm(a, b, cap, algorithm=algo, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic grid
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("semiring", SEMIRINGS)
+@pytest.mark.parametrize("algo", ALGOS)
+def test_semiring_matches_scipy_oracle(algo, semiring):
+    """Rectangular (9, 7) x (7, 11) product, all semirings x algorithms."""
+    ad = _rand_dense(9, 7, 0.35, seed=1)
+    bd = _rand_dense(7, 11, 0.35, seed=2)
+    a, b = _csr(ad), _csr(bd)
+    cd = _oracle(ad, bd, semiring)
+    c = _run(a, b, algo, cap=9 * 11, semiring=semiring)
+    assert np.array_equal(np.asarray(c.to_dense()), cd), (algo, semiring)
+
+
+@pytest.mark.parametrize("complement", (False, True))
+@pytest.mark.parametrize("algo", ALGOS)
+def test_masked_matches_oracle(algo, complement):
+    ad = _rand_dense(8, 8, 0.4, seed=3)
+    bd = _rand_dense(8, 8, 0.4, seed=4)
+    md = _rand_dense(8, 8, 0.5, seed=5)
+    a, b, mask = _csr(ad), _csr(bd), _csr(md)
+    cd = _mask_after(_oracle(ad, bd, "plus_times"), md, complement)
+    c = _run(a, b, algo, cap=64, mask=mask, complement_mask=complement)
+    assert np.array_equal(np.asarray(c.to_dense()), cd), (algo, complement)
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_sorted_output_contract(algo):
+    """sorted_output=True yields strictly increasing columns per row; the
+    hash family's raw output keeps its unsorted (C8) flag."""
+    ad = _rand_dense(10, 10, 0.4, seed=6)
+    bd = _rand_dense(10, 10, 0.4, seed=7)
+    a, b = _csr(ad), _csr(bd)
+    cd = _oracle(ad, bd, "plus_times")
+    c = _run(a, b, algo, cap=100, sorted_output=True)
+    assert c.sorted_cols
+    cols, ip = np.asarray(c.indices), np.asarray(c.indptr)
+    for i in range(c.n_rows):
+        assert np.all(np.diff(cols[ip[i]:ip[i + 1]]) > 0), (algo, i)
+    assert np.array_equal(np.asarray(c.to_dense()), cd)
+    raw = _run(a, b, algo, cap=100)
+    assert raw.sorted_cols == (algo in ("esc", "heap"))
+    assert np.array_equal(np.asarray(raw.to_dense()), cd)
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_empty_matrix_and_empty_rows(algo):
+    # completely empty A
+    empty = CSR.from_numpy_coo(np.zeros(0, np.int64), np.zeros(0, np.int64),
+                               np.zeros(0, np.float32), (6, 5), cap=8)
+    bd = _rand_dense(5, 7, 0.5, seed=8)
+    b = _csr(bd)
+    c = _run(empty, b, algo, cap=8)
+    assert int(c.nnz) == 0
+    assert np.array_equal(np.asarray(c.to_dense()), np.zeros((6, 7)))
+    # empty x empty
+    empty_b = CSR.from_numpy_coo(np.zeros(0, np.int64),
+                                 np.zeros(0, np.int64),
+                                 np.zeros(0, np.float32), (5, 7), cap=8)
+    c2 = _run(empty, empty_b, algo, cap=8)
+    assert int(c2.nnz) == 0
+    # A with interior empty rows / B with empty columns
+    ad = _rand_dense(8, 6, 0.5, seed=9)
+    ad[[1, 4], :] = 0.0
+    bd2 = _rand_dense(6, 8, 0.5, seed=10)
+    bd2[:, [0, 5]] = 0.0
+    a = _csr(ad)
+    cd = _oracle(ad, bd2, "plus_times")
+    c3 = _run(a, _csr(bd2), algo, cap=64)
+    assert np.array_equal(np.asarray(c3.to_dense()), cd), algo
+    ip = np.asarray(c3.indptr)
+    assert ip[2] == ip[1] and ip[5] == ip[4]    # empty rows stay empty
+
+
+def test_unsorted_inputs_route_and_heap_refuses():
+    """esc/hash accept unsorted inputs; heap fails loudly (its contract)."""
+    ad = _rand_dense(8, 8, 0.4, seed=11)
+    bd = _rand_dense(8, 8, 0.4, seed=12)
+    a = _csr(ad)
+    # scramble within rows: reverse each row's entries, flag unsorted
+    ip, ind, dat = (np.asarray(a.indptr), np.asarray(a.indices).copy(),
+                    np.asarray(a.data).copy())
+    for i in range(a.n_rows):
+        ind[ip[i]:ip[i + 1]] = ind[ip[i]:ip[i + 1]][::-1]
+        dat[ip[i]:ip[i + 1]] = dat[ip[i]:ip[i + 1]][::-1]
+    au = CSR(jnp.asarray(ip), jnp.asarray(ind), jnp.asarray(dat),
+             a.nnz, a.shape, sorted_cols=False)
+    b = _csr(bd)
+    cd = _oracle(ad, bd, "plus_times")
+    for algo in ("esc", "hash", "hash_jnp"):
+        c = _run(au, b, algo, cap=64)
+        assert np.array_equal(np.asarray(c.to_dense()), cd), algo
+    with pytest.raises(AssertionError, match="sorted inputs"):
+        spgemm_heap(au, b, row_cap=8, k_width=au.cap)
+
+
+# ---------------------------------------------------------------------------
+# Property-based layer (optional hypothesis extra)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    # dims drawn from a tiny fixed set so examples share compiled programs
+    _dims = st.sampled_from((3, 5, 8))
+
+    @st.composite
+    def _product_case(draw):
+        m, k, n = draw(_dims), draw(_dims), draw(_dims)
+        seed = draw(st.integers(0, 2**16))
+        density = draw(st.sampled_from((0.0, 0.2, 0.5, 0.9)))
+        ad = _rand_dense(m, k, density, seed)
+        bd = _rand_dense(k, n, density, seed + 1)
+        masked = draw(st.booleans())
+        md = _rand_dense(m, n, 0.5, seed + 2) if masked else None
+        complement = draw(st.booleans()) if masked else False
+        semiring = draw(st.sampled_from(SEMIRINGS))
+        algo = draw(st.sampled_from(ALGOS))
+        return ad, bd, md, complement, semiring, algo
+
+    @given(_product_case())
+    @settings(max_examples=25, deadline=None)
+    def test_property_all_algorithms_match_oracle(case):
+        ad, bd, md, complement, semiring, algo = case
+        a, b = _csr(ad), _csr(bd)
+        mask = _csr(md) if md is not None else None
+        cd = _oracle(ad, bd, semiring)
+        if md is not None:
+            cd = _mask_after(cd, md, complement)
+        c = spgemm(a, b, ad.shape[0] * bd.shape[1], algorithm=algo,
+                   semiring=semiring, mask=mask, complement_mask=complement)
+        assert np.array_equal(np.asarray(c.to_dense()), cd), \
+            (algo, semiring, complement)

@@ -11,8 +11,12 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 def _run(script: str, n_dev: int = 4, timeout=600):
     env = dict(os.environ)
-    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
-                        f" --xla_force_host_platform_device_count={n_dev}")
+    # replace (not append to) any inherited device-count flag: the CI
+    # multi-device job exports one globally and XLA rejects duplicates
+    flags = [f for f in env.get("XLA_FLAGS", "").split()
+             if not f.startswith("--xla_force_host_platform_device_count")]
+    env["XLA_FLAGS"] = " ".join(
+        flags + [f"--xla_force_host_platform_device_count={n_dev}"])
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
     r = subprocess.run([sys.executable, "-c", script], env=env,
                        capture_output=True, text=True, timeout=timeout)
@@ -20,31 +24,217 @@ def _run(script: str, n_dev: int = 4, timeout=600):
     return r.stdout
 
 
-def test_distributed_spgemm_spmm_bfs():
+# ---------------------------------------------------------------------------
+# Host-side sharding (no mesh needed -- runs in-process)
+# ---------------------------------------------------------------------------
+
+def test_shard_csr_rows_sparse_native_equal_flop_roundtrip():
+    """shard_csr_rows must never densify, must cut equal-flop boundaries,
+    and must round-trip exactly through unshard_rows."""
+    import numpy as np
+    from repro.core import CSR
+    from repro.core.distributed import shard_csr_rows, unshard_rows
+    from repro.core.schedule import flops_per_row
+    from repro.data.rmat import rmat_csr
+
+    a = rmat_csr(5, 4, "G500", seed=0)
+    b = rmat_csr(5, 4, "ER", seed=1)
+    calls = {"n": 0}
+    orig = CSR.to_dense
+
+    def spy(self):
+        calls["n"] += 1
+        return orig(self)
+
+    CSR.to_dense = spy
+    try:
+        sh = shard_csr_rows(a, 4, b=b)
+    finally:
+        CSR.to_dense = orig
+    assert calls["n"] == 0, "shard_csr_rows must stay sparse-native"
+
+    rt = unshard_rows(sh)
+    assert rt.shape == a.shape and rt.sorted_cols == a.sorted_cols
+    assert int(rt.nnz) == int(a.nnz)
+    assert np.array_equal(np.asarray(rt.to_dense()), np.asarray(a.to_dense()))
+
+    # equal-flop invariant: every shard <= ceil(total/S) + max row flop
+    flop = np.asarray(flops_per_row(a, b)).astype(np.int64)
+    total, S = int(flop.sum()), 4
+    starts = sh.row_starts
+    assert starts[0] == 0 and starts[-1] == a.n_rows
+    for s in range(S):
+        part = int(flop[starts[s]:starts[s + 1]].sum())
+        assert part <= -(-total // S) + int(flop.max()), (s, part)
+
+
+def test_summa_panel_bounds_pins_panel_count():
+    """k_panels is honored, never silently ignored (dead-arg regression)."""
+    import pytest
+    from repro.core.distributed import summa_panel_bounds
+
+    bounds = summa_panel_bounds(64, 8, 16)
+    assert len(bounds) == 16
+    assert bounds[0] == (0, 4) and bounds[-1] == (60, 64)
+    assert summa_panel_bounds(64, 8) == summa_panel_bounds(64, 8, 8)
+    with pytest.raises(ValueError, match="multiple of the mesh axis"):
+        summa_panel_bounds(64, 8, 12)
+    with pytest.raises(ValueError, match="must divide"):
+        summa_panel_bounds(64, 8, 128)
+
+
+# ---------------------------------------------------------------------------
+# Mesh equivalence (8-way host-device mesh, subprocess)
+# ---------------------------------------------------------------------------
+
+def test_distributed_1d_matches_single_node_planned():
+    """1D products bit-match the single-node planned spgemm() per
+    algorithm, repeat products hit the plan cache, and SpMM/BFS are
+    rectangular-safe."""
     _run("""
 import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import Mesh
-from repro.core.distributed import (shard_csr_rows, spgemm_1d, spmm_1d,
-                                    multi_source_bfs, spgemm_summa)
+from repro.core import CSR, plan_spgemm, plan_cache_stats
+from repro.core.distributed import (shard_csr_rows, plan_spgemm_1d,
+                                    spgemm_1d, spmm_1d, unshard_rows,
+                                    multi_source_bfs)
 from repro.data.rmat import rmat_csr
+assert len(jax.devices()) == 8
+mesh = Mesh(np.array(jax.devices()), ("data",))
 a = rmat_csr(6, 4, "G500", seed=0)
 b = rmat_csr(6, 4, "ER", seed=1)
-ad, bd = np.asarray(a.to_dense()), np.asarray(b.to_dense())
-cd = ad @ bd
-mesh = Mesh(np.array(jax.devices()).reshape(2, 2), ("data", "model"))
-ash = shard_csr_rows(a, 2)
-c = spgemm_1d(mesh, ash, b, cap_c=512, flop_cap=8192, axis="data")
-blocks = [np.asarray(jax.tree.map(lambda x: x[i], c).to_dense()) for i in range(2)]
-assert np.allclose(np.concatenate(blocks, 0), cd, atol=1e-3)
-x = np.random.default_rng(0).normal(size=(64, 8)).astype(np.float32)
-y = spmm_1d(mesh, ash, jnp.asarray(x), axis="data")
-assert np.allclose(np.asarray(y).reshape(64, 8), ad @ x, atol=1e-3)
-cs = spgemm_summa(mesh, jnp.asarray(ad), jnp.asarray(bd))
-assert np.allclose(np.asarray(cs), cd, atol=1e-3)
-dist = multi_source_bfs(mesh, ash, jnp.array([0, 3, 7]), 64, 4, axis="data")
-assert int((np.asarray(dist) >= 0).sum()) > 3
+a_sh = shard_csr_rows(a, 8, b=b)       # equal-flop boundaries
+assert a_sh.row_starts[0] == 0 and a_sh.row_starts[-1] == 64
+
+# bit-match per algorithm (hash references the contract-equivalent jnp
+# accumulator; the Pallas kernel reassociates sums by ~1 ulp)
+for algo, ref_algo in (("esc", "esc"), ("heap", "heap"),
+                       ("hash", "hash_jnp")):
+    ref = plan_spgemm(a, b, algorithm=ref_algo).execute(a, b)
+    dp = plan_spgemm_1d(a_sh, b, algorithm=algo)
+    c = unshard_rows(dp.execute(mesh, a_sh, b))
+    assert np.array_equal(np.asarray(c.to_dense()),
+                          np.asarray(ref.to_dense())), algo
+ref_pallas = plan_spgemm(a, b, algorithm="hash").execute(a, b)
+c_hash = unshard_rows(plan_spgemm_1d(a_sh, b, algorithm="hash")
+                      .execute(mesh, a_sh, b))
+assert np.allclose(np.asarray(c_hash.to_dense()),
+                   np.asarray(ref_pallas.to_dense()), atol=1e-5)
+
+# masked boolean product bit-matches too
+mask = rmat_csr(6, 3, "ER", seed=7)
+refm = plan_spgemm(a, b, semiring="boolean", mask=mask,
+                   algorithm="hash_jnp").execute(a, b)
+dpm = plan_spgemm_1d(a_sh, b, semiring="boolean", mask=mask,
+                     algorithm="hash")
+cm = unshard_rows(dpm.execute(mesh, a_sh, b))
+assert np.array_equal(np.asarray(cm.to_dense()),
+                      np.asarray(refm.to_dense()))
+
+# repeat products replan nothing (distributed plan-cache hit)
+before = plan_cache_stats()
+dp2 = plan_spgemm_1d(a_sh, b, algorithm="esc")
+dp3 = plan_spgemm_1d(a_sh, b, algorithm="esc")
+after = plan_cache_stats()
+assert dp2 is dp3
+assert after["misses"] == before["misses"], "repeat replanned something"
+assert after["hits"] >= before["hits"] + 2
+
+# planless entry dispatches through spgemm() with explicit algorithm
+c_pl = unshard_rows(spgemm_1d(mesh, a_sh, b, cap_c=dp2.cap_c,
+                              flop_cap=dp2.flop_cap, algorithm="esc"))
+ref_esc = plan_spgemm(a, b, algorithm="esc").execute(a, b)
+assert np.array_equal(np.asarray(c_pl.to_dense()),
+                      np.asarray(ref_esc.to_dense()))
+
+# rectangular SpMM regression: A (48, 32) with unequal nnz shards --
+# the old code reshaped assuming square A and would mis-assemble here
+rng = np.random.default_rng(0)
+ar = CSR.from_numpy_coo(rng.integers(0, 48, 200),
+                        rng.integers(0, 32, 200),
+                        rng.normal(size=200).astype(np.float32), (48, 32))
+ar_sh = shard_csr_rows(ar, 8)
+x = rng.normal(size=(32, 5)).astype(np.float32)
+y = spmm_1d(mesh, ar_sh, jnp.asarray(x))
+assert y.shape == (48, 5)
+assert np.allclose(np.asarray(y), np.asarray(ar.to_dense()) @ x, atol=1e-4)
+
+# BFS on the (square) graph agrees with a host-side reference
+sq = rmat_csr(6, 4, "G500", seed=2)
+sq_sh = shard_csr_rows(sq, 8)
+sources = [0, 3, 7]
+dist = np.asarray(multi_source_bfs(mesh, sq_sh, jnp.array(sources), 64, 4))
+adj = np.asarray(sq.to_dense()) != 0
+ref_d = np.full((64, len(sources)), -1, np.int32)
+for j, s in enumerate(sources):
+    front = np.zeros(64, bool); front[s] = True; ref_d[s, j] = 0
+    for hop in range(1, 5):
+        front = (adj @ front) & (ref_d[:, j] < 0)   # nxt = A @ frontier
+        ref_d[front, j] = hop
+assert np.array_equal(dist, ref_d)
 print("OK")
-""")
+""", n_dev=8)
+
+
+def test_distributed_summa_matches_single_node_and_honors_k_panels():
+    _run("""
+import numpy as np, jax
+from jax.sharding import Mesh
+from repro.core import CSR, plan_spgemm, plan_cache_stats
+from repro.core.distributed import spgemm_summa, plan_spgemm_summa, \
+    unshard_rows
+def int_csr(m, n, nnz, seed):
+    r = np.random.default_rng(seed)
+    return CSR.from_numpy_coo(r.integers(0, m, nnz), r.integers(0, n, nnz),
+                              r.integers(1, 5, nnz).astype(np.float32),
+                              (m, n))
+# integer values: fp32 panel-sum reassociation is exact, so the SUMMA
+# merge must bit-match the single-node product
+a = int_csr(64, 64, 300, 1)
+b = int_csr(64, 48, 300, 2)
+mesh = Mesh(np.array(jax.devices()), ("data",))
+refd = np.asarray(plan_spgemm(a, b, algorithm="esc").execute(a, b)
+                  .to_dense())
+for kp in (8, 16):
+    c = unshard_rows(spgemm_summa(mesh, a, b, k_panels=kp,
+                                  algorithm="esc"))
+    assert np.array_equal(np.asarray(c.to_dense()), refd), kp
+# boolean semiring via the post-scatter threshold
+refb = np.asarray(plan_spgemm(a, b, algorithm="esc", semiring="boolean")
+                  .execute(a, b).to_dense())
+cb = unshard_rows(spgemm_summa(mesh, a, b, semiring="boolean",
+                               algorithm="esc"))
+assert np.array_equal(np.asarray(cb.to_dense()), refb)
+# min_plus has no dense add-identity: refuse instead of corrupting
+try:
+    spgemm_summa(mesh, a, b, semiring="min_plus")
+except NotImplementedError:
+    pass
+else:
+    raise AssertionError("min_plus SUMMA must raise")
+# invalid panel counts fail loudly (dead-arg regression)
+for bad in (3, 7, 128):
+    try:
+        spgemm_summa(mesh, a, b, k_panels=bad)
+    except ValueError:
+        pass
+    else:
+        raise AssertionError(f"k_panels={bad} must raise")
+# repeat product hits the summa plan cache
+before = plan_cache_stats()
+c2 = unshard_rows(spgemm_summa(mesh, a, b, k_panels=8, algorithm="esc"))
+after = plan_cache_stats()
+assert after["misses"] == before["misses"]
+assert np.array_equal(np.asarray(c2.to_dense()), refd)
+# values stay out of the frozen panel structure: a reweighted operand
+# reuses the cached plan and execute re-gathers the new values
+import dataclasses as dc
+a3 = dc.replace(a, data=a.data * 3.0)
+c3 = unshard_rows(spgemm_summa(mesh, a3, b, k_panels=8, algorithm="esc"))
+assert np.array_equal(np.asarray(c3.to_dense()), 3.0 * refd)
+assert plan_cache_stats()["misses"] == after["misses"]
+print("OK")
+""", n_dev=8)
 
 
 def test_moe_ep_matches_dense():
