@@ -23,7 +23,6 @@ smoke step.
 from __future__ import annotations
 
 import argparse
-import importlib
 import os
 import sys
 
@@ -51,19 +50,9 @@ from repro.core.distributed import (plan_spgemm_1d, plan_spgemm_summa,  # noqa: 
 from repro.core.spgemm import symbolic_flops  # noqa: E402
 from repro.data.rmat import rmat_csr  # noqa: E402
 
-from benchmarks.common import bench, emit  # noqa: E402
+from benchmarks.common import bench, counted, emit  # noqa: E402
 
 
-def _counted(module_name: str, attr: str, counter: dict):
-    mod = importlib.import_module(module_name)
-    orig = getattr(mod, attr)
-
-    def wrapper(*a, **kw):
-        counter[attr] = counter.get(attr, 0) + 1
-        return orig(*a, **kw)
-
-    setattr(mod, attr, wrapper)
-    return lambda: setattr(mod, attr, orig)
 
 
 def _mesh():
@@ -153,11 +142,11 @@ def smoke():
     # repeat execute: zero re-inspection (no schedule / symbolic work)
     counter: dict = {}
     restore = [
-        _counted("repro.core.schedule", "make_schedule", counter),
-        _counted("repro.core.schedule", "make_schedule_eager", counter),
-        _counted("repro.core.schedule", "rows_to_bins", counter),
-        _counted("repro.core.schedule", "flops_per_row", counter),
-        _counted("repro.core.spgemm", "symbolic", counter),
+        counted("repro.core.schedule", "make_schedule", counter),
+        counted("repro.core.schedule", "make_schedule_eager", counter),
+        counted("repro.core.schedule", "rows_to_bins", counter),
+        counted("repro.core.schedule", "flops_per_row", counter),
+        counted("repro.core.spgemm", "symbolic", counter),
     ]
     try:
         c2 = plan.execute(mesh, a_sh, b)
@@ -172,8 +161,8 @@ def smoke():
     before = plan_cache_stats()
     counter2: dict = {}
     restore = [
-        _counted("repro.core.schedule", "make_schedule_eager", counter2),
-        _counted("repro.core.spgemm", "symbolic", counter2),
+        counted("repro.core.schedule", "make_schedule_eager", counter2),
+        counted("repro.core.spgemm", "symbolic", counter2),
     ]
     try:
         plan_again = plan_spgemm_1d(a_sh, b, algorithm="esc")

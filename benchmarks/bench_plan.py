@@ -21,7 +21,6 @@ smoke step.
 from __future__ import annotations
 
 import argparse
-import importlib
 import sys
 
 import jax.numpy as jnp
@@ -35,20 +34,9 @@ from repro.core.spgemm import symbolic_flops
 from repro.data.rmat import rmat_csr
 from repro.kernels.spgemm_hash import ops as hash_ops
 
-from benchmarks.common import bench, emit, flops_rate
+from benchmarks.common import bench, counted, emit, flops_rate
 
 
-def _counted(module_name: str, attr: str, counter: dict):
-    """Swap ``module.attr`` for a counting wrapper; return the restorer."""
-    mod = importlib.import_module(module_name)
-    orig = getattr(mod, attr)
-
-    def wrapper(*a, **kw):
-        counter[attr] = counter.get(attr, 0) + 1
-        return orig(*a, **kw)
-
-    setattr(mod, attr, wrapper)
-    return lambda: setattr(mod, attr, orig)
 
 
 def planned_vs_unplanned(a, tag: str, iters: int):
@@ -110,9 +98,9 @@ def smoke():
     # no schedule / symbolic-kernel work inside execute
     counter: dict = {}
     restore = [
-        _counted("repro.core.schedule", "make_schedule", counter),
-        _counted("repro.core.schedule", "rows_to_bins", counter),
-        _counted("repro.kernels.spgemm_hash.kernel", "symbolic_call",
+        counted("repro.core.schedule", "make_schedule", counter),
+        counted("repro.core.schedule", "rows_to_bins", counter),
+        counted("repro.kernels.spgemm_hash.kernel", "symbolic_call",
                  counter),
     ]
     try:

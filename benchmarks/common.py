@@ -37,3 +37,23 @@ def emit(name: str, seconds: float, derived: str = ""):
 
 def flops_rate(flop: float, seconds: float) -> str:
     return f"{2.0 * flop / seconds / 1e6:.1f}MFLOPS"
+
+
+def counted(module_name: str, attr: str, counter: dict):
+    """Swap ``module.attr`` for a call-counting wrapper; return a restorer.
+
+    The zero-re-inspection assertion helper shared by the plan /
+    distributed / chain smoke suites: wrap the inspection entry points
+    (``rows_to_bins``, ``make_schedule_eager``, the symbolic kernel, ...)
+    around an ``execute`` and assert the counter stayed empty.
+    """
+    import importlib
+    mod = importlib.import_module(module_name)
+    orig = getattr(mod, attr)
+
+    def wrapper(*a, **kw):
+        counter[attr] = counter.get(attr, 0) + 1
+        return orig(*a, **kw)
+
+    setattr(mod, attr, wrapper)
+    return lambda: setattr(mod, attr, orig)

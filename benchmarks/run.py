@@ -17,6 +17,7 @@ from . import bench_micro as micro
 from . import bench_moe_dispatch as moe_bench
 from . import bench_plan as plan_bench
 from . import bench_distributed as dist_bench
+from . import bench_chain as chain_bench
 
 
 SUITES = [
@@ -36,6 +37,7 @@ SUITES = [
     ("moe_dispatch", lambda q: moe_bench.run(q)),
     ("plan", lambda q: plan_bench.run(q)),
     ("distributed", lambda q: dist_bench.run(q)),
+    ("chain", lambda q: chain_bench.run(q)),
 ]
 
 

@@ -1,0 +1,166 @@
+"""Markov clustering (MCL, van Dongen 2000) on the planned SpGEMM engine.
+
+MCL finds graph clusters by iterating a row-stochastic flow matrix M:
+
+  * **expand**  -- M <- M @ M: a planned SpGEMM (``plan_spgemm``; the A^2
+    shape of ``core.chain.plan_power``).  Flow spreads along paths;
+  * **inflate** -- M <- row_normalize(M ** r): a jitted elementwise kernel
+    that sharpens strong flows and starves weak ones;
+  * **prune**   -- drop entries below a threshold and renormalize: a
+    jitted compaction, keeping the matrix sparse as it converges.
+
+The loop is the *structure-drift* serving shape (DESIGN.md sections 10 &
+12): every iteration's M has a different sparsity pattern, so exact-
+capacity plans would compile a fresh numeric program per iteration.
+``plan_spgemm(..., bucket_caps=True)`` p2-rounds the static capacities
+(``cap_c``/``flop_cap``) instead, so successive iterations whose bucketed
+sizes coincide share compiled programs -- the example prints the jit
+program count next to the iteration count to show the sharing.  Expansion
+products run the hash family unsorted (nothing downstream needs sorted
+rows -- the C8 finding applied to an iterative workload).
+
+    PYTHONPATH=src python examples/mcl.py
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CSR, plan_cache_stats, plan_spgemm, spgemm_hash_jnp
+from repro.core.schedule import prefix_sum
+
+
+def clustered_graph(n_clusters: int = 3, size: int = 12, p_in: float = 0.6,
+                    p_out: float = 0.02, seed: int = 0) -> CSR:
+    """Planted-partition graph: dense blocks, sparse inter-block noise.
+
+    The clustered analogue of the R-MAT inputs used elsewhere: each block
+    is an Erdos-Renyi community at ``p_in``, cross edges appear at
+    ``p_out``; symmetric, no self loops (MCL adds its own).
+    """
+    n = n_clusters * size
+    rng = np.random.default_rng(seed)
+    dense = rng.random((n, n))
+    labels = np.repeat(np.arange(n_clusters), size)
+    same = labels[:, None] == labels[None, :]
+    adj = np.where(same, dense < p_in, dense < p_out)
+    adj = np.triu(adj, k=1)
+    adj = (adj | adj.T).astype(np.float32)
+    return CSR.from_dense(jnp.asarray(adj))
+
+
+@jax.jit
+def row_normalize(c: CSR) -> CSR:
+    """Make each row of ``c`` sum to 1 (rows with no mass stay zero)."""
+    v = jnp.where(c.valid_mask(), c.data, 0)
+    s = jax.ops.segment_sum(v, c.row_ids(), num_segments=c.n_rows)
+    s = jnp.where(s == 0, 1.0, s)
+    return dataclasses.replace(c, data=v / s[c.row_ids()])
+
+
+@jax.jit
+def inflate(c: CSR, power) -> CSR:
+    """MCL inflation: elementwise power then row renormalization."""
+    v = jnp.where(c.valid_mask(), c.data, 0) ** power
+    return row_normalize(dataclasses.replace(c, data=v))
+
+
+@partial(jax.jit, static_argnames=("cap_out",))
+def prune(c: CSR, threshold, cap_out: int) -> CSR:
+    """Drop entries below ``threshold``, compact to ``cap_out`` slots,
+    renormalize rows.
+
+    Stable compaction (argsort of the drop mask) preserves within-row
+    entry order, so an unsorted hash-family expansion stays a valid
+    unsorted CSR.  ``cap_out`` is static; pruning only removes entries, so
+    the input's capacity is always a safe choice.
+    """
+    keep = c.valid_mask() & (c.data >= threshold)
+    order = jnp.argsort(~keep, stable=True)
+    lane = jnp.arange(cap_out, dtype=jnp.int32)
+    src = order[jnp.minimum(lane, c.cap - 1)]       # pad or truncate
+    nnz = jnp.minimum(keep.sum(), cap_out).astype(jnp.int32)
+    valid = lane < nnz
+    indices = jnp.where(valid, c.indices[src], 0)
+    data = jnp.where(valid, c.data[src], 0)
+    row_nnz = jax.ops.segment_sum(keep.astype(jnp.int32), c.row_ids(),
+                                  num_segments=c.n_rows)
+    indptr = prefix_sum(row_nnz).astype(jnp.int32)
+    out = CSR(indptr, indices, data, nnz, c.shape,
+              sorted_cols=c.sorted_cols)
+    return row_normalize(out)
+
+
+def _with_self_loops(a: CSR) -> CSR:
+    d = np.array(a.to_dense())
+    np.fill_diagonal(d, 1.0)
+    return CSR.from_dense(jnp.asarray(d))
+
+
+def mcl(a: CSR, inflation: float = 1.5, threshold: float = 1e-3,
+        max_iters: int = 40, tol: float = 1e-5):
+    """Run MCL to convergence; returns ``(labels, n_iters)``.
+
+    ``labels[i]`` is the cluster id of vertex ``i``: in the converged
+    row-stochastic limit, row i's mass sits on i's attractor set, so the
+    argmax column identifies the cluster (canonicalized to 0..k-1).
+    """
+    from repro.core import lowest_p2
+
+    m = row_normalize(_with_self_loops(a))
+    n_iters = 0
+    buf_cap = None
+    for n_iters in range(1, max_iters + 1):
+        # expand: planned A^2 with bucketed (p2) capacities -- iterations
+        # with the same bucketed sizes share one compiled numeric program
+        plan = plan_spgemm(m, m, algorithm="hash_jnp", bucket_caps=True)
+        nxt = plan.execute(m, m)
+        nxt = inflate(nxt, jnp.float32(inflation))
+        # the flow matrix lives in a fixed-cap buffer: static input shapes
+        # are half of program sharing (the other half is the plan's p2
+        # capacities); grow only if pruning would drop live entries
+        kept = int(jnp.sum(nxt.valid_mask() & (nxt.data >= threshold)))
+        if buf_cap is None or kept > buf_cap:
+            buf_cap = lowest_p2(max(kept, 1))
+        nxt = prune(nxt, jnp.float32(threshold), buf_cap)
+        delta = float(jnp.abs(nxt.to_dense() - m.to_dense()).max())
+        m = nxt
+        if delta < tol:
+            break
+    md = np.asarray(m.to_dense())
+    attractor = md.argmax(axis=1)
+    _, labels = np.unique(attractor, return_inverse=True)
+    return labels, n_iters
+
+
+def main():
+    n_clusters, size = 3, 12
+    a = clustered_graph(n_clusters, size, seed=0)
+    print(f"graph: {a.n_rows} vertices, {int(a.nnz)} edges, "
+          f"{n_clusters} planted clusters")
+
+    labels, n_iters = mcl(a)
+    truth = np.repeat(np.arange(n_clusters), size)
+    # same partition iff labels are constant within each planted block and
+    # distinct across blocks
+    blocks = [set(labels[truth == k]) for k in range(n_clusters)]
+    assert all(len(s) == 1 for s in blocks), blocks
+    assert len({next(iter(s)) for s in blocks}) == n_clusters, blocks
+    print(f"MCL converged in {n_iters} iterations; "
+          f"recovered all {n_clusters} planted clusters")
+
+    stats = plan_cache_stats()
+    programs = spgemm_hash_jnp._cache_size()
+    print(f"plan cache: {stats['misses']} inspections for {n_iters} "
+          f"drifting structures; {programs} compiled expansion program(s) "
+          f"(bucket_caps p2 sharing)")
+    assert programs < n_iters or n_iters <= 2, \
+        "bucketed capacities should let drifting iterations share programs"
+
+
+if __name__ == "__main__":
+    main()

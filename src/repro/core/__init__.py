@@ -1,12 +1,14 @@
 """Core sparse engine: the paper's contribution as composable JAX modules."""
-from .formats import CSR, BCSR, ELL, csr_to_bcsr, bcsr_to_csr
+from .formats import CSR, BCSR, ELL, csr_to_bcsr, bcsr_to_csr, csr_transpose
 from .semiring import (Semiring, SEMIRINGS, resolve_semiring, PLUS_TIMES,
                        BOOLEAN, MIN_PLUS, PLUS_FIRST)
 from .spgemm import (spgemm, spgemm_dense, spgemm_esc, spgemm_heap,
-                     spgemm_hash_jnp, spmm, symbolic, symbolic_flops)
+                     spgemm_hash_jnp, spmm, symbolic, symbolic_flops,
+                     finalize)
 from .schedule import (flops_per_row, rows_to_bins, bin_flop, make_schedule,
                        lowbnd, lowest_p2, lowest_p2_arr, bin_table_sizes,
-                       max_flop_per_bin_row, masked_row_bound, guard_i32_flop)
+                       max_flop_per_bin_row, masked_row_bound, guard_i32_flop,
+                       chained_flop_bound)
 from .recipe import (SpGEMMStats, measure_stats, model_costs, recommend,
                      choose_algorithm, choose_algorithm_from_stats)
 from .plan import (SpGEMMPlan, plan_spgemm, structure_key, plan_cache_stats,
@@ -16,16 +18,19 @@ from .distributed import (ShardedCSR, shard_csr_rows, reshard_rows,
                           spgemm_1d, spmm_1d, SummaPlan, plan_spgemm_summa,
                           spgemm_summa, summa_panel_bounds, multi_source_bfs
                           as multi_source_bfs_1d)
+from .chain import (ChainPlan, plan_chain, plan_galerkin, galerkin,
+                    plan_power, GramPlan, plan_gram, gram,
+                    DistributedChainPlan, plan_chain_1d)
 
 __all__ = [
-    "CSR", "BCSR", "ELL", "csr_to_bcsr", "bcsr_to_csr",
+    "CSR", "BCSR", "ELL", "csr_to_bcsr", "bcsr_to_csr", "csr_transpose",
     "Semiring", "SEMIRINGS", "resolve_semiring", "PLUS_TIMES", "BOOLEAN",
     "MIN_PLUS", "PLUS_FIRST",
     "spgemm", "spgemm_dense", "spgemm_esc", "spgemm_heap", "spgemm_hash_jnp",
-    "spmm", "symbolic", "symbolic_flops",
+    "spmm", "symbolic", "symbolic_flops", "finalize",
     "flops_per_row", "rows_to_bins", "bin_flop", "make_schedule", "lowbnd",
     "lowest_p2", "lowest_p2_arr", "bin_table_sizes", "max_flop_per_bin_row",
-    "masked_row_bound", "guard_i32_flop",
+    "masked_row_bound", "guard_i32_flop", "chained_flop_bound",
     "SpGEMMStats", "measure_stats", "model_costs", "recommend",
     "choose_algorithm", "choose_algorithm_from_stats",
     "SpGEMMPlan", "plan_spgemm", "structure_key", "plan_cache_stats",
@@ -34,4 +39,6 @@ __all__ = [
     "DistributedPlan", "plan_spgemm_1d", "spgemm_1d", "spmm_1d",
     "SummaPlan", "plan_spgemm_summa", "spgemm_summa", "summa_panel_bounds",
     "multi_source_bfs_1d",
+    "ChainPlan", "plan_chain", "plan_galerkin", "galerkin", "plan_power",
+    "GramPlan", "plan_gram", "gram", "DistributedChainPlan", "plan_chain_1d",
 ]

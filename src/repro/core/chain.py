@@ -1,0 +1,470 @@
+"""Plan-composed SpGEMM chains (DESIGN.md section 12).
+
+The paper's real workloads are not single products but *chains*: squaring
+A.A for triangle counting, the Gram product A^T.A, and Galerkin-style
+triple products R.A.P in multigrid / graph-coarsening pipelines.  DBCSR's
+CP2K driver iterates products in sign-matrix chains (arXiv:1708.03604) and
+KokkosKernels motivates its symbolic/numeric split precisely so repeated
+same-structure multiplies amortize inspection (arXiv:1801.03065) -- which
+is what our single-product planner (``core.plan``) does for one product
+and this module does for whole chains.
+
+:func:`plan_chain` runs symbolic inspection left-to-right **once**: stage
+``k`` is a full :func:`repro.core.plan.plan_spgemm` inspection whose
+A-operand is the materialized intermediate of stage ``k-1`` (the
+materialization *is* the inspection -- intermediate structure is a
+deterministic function of operand structures).  Every stage's frozen
+capacities, per-bin table sizes, and recorded algorithm ride in one cached
+:class:`ChainPlan` under the same blake2b-keyed LRU as single products.
+
+``chain.execute(...)`` then runs numeric-only end to end and keeps
+intermediates **unsorted** between stages (sorting only the final output,
+on request): the hash family's select-order output feeds the next stage
+directly, so the paper's C8 unsorted-output win applies at every internal
+hop, not just the last (``finalize`` is the single sort site).  Mid-chain
+algorithm choice is exact: stage ``k``'s recipe receives the previous
+stage's recorded ``row_nnz_c`` (``recommend(a_row_nnz=...)``) because an
+intermediate's compression factor and skew differ from the user matrices
+that produced it.
+
+On top of the chain plan ride the chain-shaped workloads:
+
+  * :func:`galerkin` -- the AMG / graph-coarsening triple product R.A.P;
+  * :func:`gram` -- A^T.A via a transpose-aware :class:`GramPlan` that
+    freezes the transpose *structure* (gather permutation) so repeat
+    executes re-gather values only;
+  * :func:`plan_power` -- A^k chains (triangle counting, MCL expansion;
+    see ``examples/mcl.py`` for the full Markov-clustering loop);
+  * :func:`plan_chain_1d` -- the same composition over row-sharded
+    operands on a device mesh (``core.distributed``), where every stage is
+    a frozen :class:`repro.core.distributed.DistributedPlan` and the
+    intermediate stays sharded (and unsorted) between stages.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from .formats import CSR, csr_transpose
+from .plan import (SpGEMMPlan, cache_lookup, cache_store, plan_spgemm,
+                   structure_key)
+from .semiring import Semiring, resolve_semiring
+
+
+def _check_chain_shapes(mats: Sequence[CSR], mask: Optional[CSR]) -> None:
+    assert len(mats) >= 2, "a chain needs at least two operands"
+    for k in range(len(mats) - 1):
+        assert mats[k].n_cols == mats[k + 1].n_rows, \
+            f"chain stage {k}: {mats[k].shape} @ {mats[k + 1].shape} " \
+            f"shapes do not compose"
+    if mask is not None:
+        out_shape = (mats[0].n_rows, mats[-1].n_cols)
+        assert mask.shape == out_shape, \
+            f"mask shape {mask.shape} != chain output shape {out_shape}"
+
+
+def _concrete_nnz(op: CSR) -> Optional[int]:
+    return None if isinstance(op.nnz, jax.core.Tracer) else int(op.nnz)
+
+
+# ----------------------------------------------------------------------------
+# ChainPlan: composed single-node plans
+# ----------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ChainPlan:
+    """Frozen inspection of a whole product chain ``mats[0] @ ... @ mats[-1]``.
+
+    ``stages[k]`` is the :class:`SpGEMMPlan` for product ``k``; its
+    A-operand structure for ``k >= 1`` is the intermediate materialized at
+    plan time, which :meth:`execute` reproduces exactly (structure is a
+    deterministic function of structure).  Intermediates stay unsorted
+    unless ``sort_intermediates`` was set; the final output's sortedness
+    is the plan's ``sorted_output``, overridable per call.
+    """
+    key: tuple = dataclasses.field(repr=False)
+    stages: Tuple[SpGEMMPlan, ...] = dataclasses.field(repr=False)
+    semiring: str
+    complement_mask: bool
+    sorted_output: bool
+    sort_intermediates: bool
+    shapes: Tuple[Tuple[int, int], ...]   # operand shapes, left to right
+    caps: Tuple[int, ...]
+    nnzs: Tuple[int, ...]
+    nnz_c: int                            # exact nnz of the final output
+    total_flop: int                       # summed over every stage
+
+    @property
+    def n_stages(self) -> int:
+        return len(self.stages)
+
+    @property
+    def algorithms(self) -> Tuple[str, ...]:
+        """Per-stage recorded algorithm choices (recipe-resolved)."""
+        return tuple(p.algorithm for p in self.stages)
+
+    def check_structure(self, mats: Sequence[CSR]) -> None:
+        """Cheap shapes/caps/nnz check of every operand against the plan."""
+        assert len(mats) == len(self.shapes), \
+            f"plan composes {len(self.shapes)} operands, got {len(mats)}"
+        for k, op in enumerate(mats):
+            assert op.shape == self.shapes[k] and op.cap == self.caps[k], \
+                f"chain operand {k}: planned {self.shapes[k]}/cap " \
+                f"{self.caps[k]}, got {op.shape}/cap {op.cap}"
+            nnz = _concrete_nnz(op)
+            if nnz is not None:
+                assert nnz == self.nnzs[k], \
+                    f"chain operand {k} nnz differs from the planned " \
+                    f"structure (replan or clear_plan_cache)"
+
+    def execute(self, *mats: CSR,
+                sorted_output: Optional[bool] = None) -> CSR:
+        """Numeric phase only, end to end: zero re-inspection.
+
+        Accepts the operands positionally or as one sequence.  Each
+        internal hop executes with the planned intermediate sortedness
+        (unsorted by default -- the C8 win at every hop); only the final
+        stage pays the sort epilogue, and only when ``sorted_output``
+        (argument, else the plan's recorded flag) asks for it.
+        """
+        if len(mats) == 1 and not isinstance(mats[0], CSR):
+            mats = tuple(mats[0])
+        self.check_structure(mats)
+        so = self.sorted_output if sorted_output is None else sorted_output
+        cur = mats[0]
+        for k, stage in enumerate(self.stages):
+            last = k == len(self.stages) - 1
+            cur = stage.execute(cur, mats[k + 1],
+                                sorted_output=so if last
+                                else self.sort_intermediates)
+        return cur
+
+    __call__ = execute
+
+
+def plan_chain(mats: Sequence[CSR], *,
+               algorithm: Union[str, Sequence[str]] = "auto",
+               semiring: str | Semiring = "plus_times",
+               mask: Optional[CSR] = None, complement_mask: bool = False,
+               sorted_output: bool = False, sort_intermediates: bool = False,
+               use_case: Optional[str] = None, n_bins: int = 8,
+               cache: bool = True, bucket_caps: bool = False) -> ChainPlan:
+    """Inspect a product chain left-to-right once; freeze a :class:`ChainPlan`.
+
+    ``mats`` is the operand sequence (>= 2); the chain computes
+    ``mats[0] @ mats[1] @ ... @ mats[-1]`` left to right.  ``algorithm``
+    is one name applied to every stage or a per-stage sequence of
+    ``len(mats) - 1`` names; ``"auto"`` lets each stage's recipe decide --
+    with the previous stage's recorded ``row_nnz_c`` as the A-side
+    statistics (``recommend(a_row_nnz=...)``), so mid-chain choices key on
+    the real intermediate structure.  The ``mask`` (output coordinates of
+    the *final* product) and the requested ``sorted_output`` apply to the
+    last stage only; intermediates are planned unsorted unless
+    ``sort_intermediates`` (the measured-slower control -- kept for
+    ``bench_chain.py``'s sorted-vs-unsorted comparison).
+
+    ``bucket_caps`` p2-rounds every stage's static capacities, so chains
+    whose structures drift between calls (MCL iterations) share compiled
+    numeric programs.  Cached under a ``("chain", ...)`` key in the shared
+    plan LRU; stage plans are independently cached too.  Stage 0's plan is
+    the same cache entry a manual ``plan_spgemm(mats[0], mats[1])`` with
+    matching flags would hit; stages >= 1 carry the ``a_row_nnz`` recipe
+    context in their keys, so a manual per-product composition *matches
+    them bitwise on execute* (asserted by ``bench_chain.py --smoke``) but
+    does not share their cache entries.
+    """
+    mats = list(mats)
+    _check_chain_shapes(mats, mask)
+    sr = resolve_semiring(semiring)
+    n_stages = len(mats) - 1
+    algos = tuple(algorithm) if not isinstance(algorithm, str) \
+        else (algorithm,) * n_stages
+    assert len(algos) == n_stages, \
+        f"algorithm must be one name or {n_stages} per-stage names"
+    key = ("chain", tuple(structure_key(m) for m in mats),
+           None if mask is None else structure_key(mask), sr.name,
+           complement_mask, sorted_output, sort_intermediates, algos,
+           use_case, n_bins, bucket_caps)
+    if cache:
+        hit = cache_lookup(key)
+        if hit is not None:
+            return hit
+
+    stages = []
+    cur = mats[0]
+    prev: Optional[SpGEMMPlan] = None
+    for k in range(n_stages):
+        last = k == n_stages - 1
+        stage = plan_spgemm(
+            cur, mats[k + 1], algorithm=algos[k], semiring=sr.name,
+            mask=mask if last else None,
+            complement_mask=complement_mask if last else False,
+            sorted_output=sorted_output if last else sort_intermediates,
+            use_case=use_case, n_bins=n_bins, cache=cache,
+            bucket_caps=bucket_caps,
+            a_row_nnz=None if prev is None else prev.row_nnz_c)
+        stages.append(stage)
+        if not last:
+            # materialize the intermediate: this *is* the inspection of
+            # stage k+1's A-operand (values ride along but only the
+            # structure is consumed; execute reproduces it exactly)
+            cur = stage.execute(cur, mats[k + 1])
+        prev = stage
+
+    plan = ChainPlan(
+        key=key, stages=tuple(stages), semiring=sr.name,
+        complement_mask=complement_mask, sorted_output=sorted_output,
+        sort_intermediates=sort_intermediates,
+        shapes=tuple(m.shape for m in mats),
+        caps=tuple(m.cap for m in mats),
+        nnzs=tuple(int(m.nnz) for m in mats),
+        nnz_c=stages[-1].nnz_c,
+        total_flop=sum(p.total_flop for p in stages))
+    if cache:
+        cache_store(key, plan)
+    return plan
+
+
+# ----------------------------------------------------------------------------
+# Chain-shaped workloads: Galerkin triple product, A^k powers
+# ----------------------------------------------------------------------------
+
+def plan_galerkin(r: CSR, a: CSR, p: CSR, **kw) -> ChainPlan:
+    """Plan the Galerkin triple product ``R @ A @ P`` (AMG / coarsening).
+
+    The multigrid restriction of a fine-grid operator A onto the coarse
+    space spanned by P (with R typically P^T, see
+    :func:`repro.core.formats.csr_transpose`): the intermediate R.A is
+    consumed directly -- unsorted -- by the P product.  Keyword arguments
+    are :func:`plan_chain`'s.
+    """
+    return plan_chain([r, a, p], **kw)
+
+
+def galerkin(r: CSR, a: CSR, p: CSR, *, sorted_output: bool = False,
+             **kw) -> CSR:
+    """One-shot planned ``R @ A @ P``.
+
+    Plans (or pulls from the shared cache -- repeat calls on the same
+    structures, e.g. re-weighted fine operators under a fixed hierarchy,
+    run numeric-only) and executes.  See :func:`plan_galerkin` for the
+    planning knobs.
+    """
+    plan = plan_galerkin(r, a, p, sorted_output=sorted_output, **kw)
+    return plan.execute(r, a, p)
+
+
+def plan_power(a: CSR, k: int, **kw) -> ChainPlan:
+    """Plan ``A^k`` (k >= 2) as a left-to-right chain of k-1 products.
+
+    The triangle-counting / MCL-expansion shape: every stage shares A's
+    structure key, so the stage-0 plan is one cached inspection and each
+    further stage inspects only its (new-structure) intermediate.
+    """
+    assert k >= 2, "plan_power needs k >= 2 (k == 1 is the identity plan)"
+    return plan_chain([a] * k, **kw)
+
+
+# ----------------------------------------------------------------------------
+# Gram product: A^T A via a transpose-aware plan
+# ----------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class GramPlan:
+    """Frozen ``A^T @ A`` recipe: transpose structure + product plan.
+
+    The transpose's *structure* -- its indptr/indices and the entry-gather
+    permutation ``t_perm`` with ``A^T.data == A.data[t_perm]`` -- is
+    computed once on the host and frozen with zeroed data (values stay out
+    of plans, like every other plan kind), so :meth:`execute` rebuilds
+    A^T with one device gather and runs the planned product: a re-weighted
+    A reuses everything.
+    """
+    key: tuple = dataclasses.field(repr=False)
+    product: SpGEMMPlan = dataclasses.field(repr=False)
+    t_struct: CSR = dataclasses.field(repr=False)     # data zeroed
+    t_perm: jax.Array = dataclasses.field(repr=False)
+    shape_a: Tuple[int, int]
+    cap_a: int
+    nnz_a: int
+
+    @property
+    def nnz_c(self) -> int:
+        return self.product.nnz_c
+
+    @property
+    def algorithm(self) -> str:
+        return self.product.algorithm
+
+    def check_structure(self, a: CSR) -> None:
+        assert a.shape == self.shape_a and a.cap == self.cap_a, \
+            f"plan is for {self.shape_a}/cap {self.cap_a}, " \
+            f"got {a.shape}/cap {a.cap}"
+        nnz = _concrete_nnz(a)
+        if nnz is not None:
+            assert nnz == self.nnz_a, \
+                "operand nnz differs from the planned structure"
+
+    def execute(self, a: CSR, sorted_output: Optional[bool] = None) -> CSR:
+        """Numeric phase only: gather A's values through the frozen
+        transpose permutation, then run the planned ``A^T @ A``."""
+        self.check_structure(a)
+        live = jnp.arange(self.t_struct.cap,
+                          dtype=jnp.int32) < self.t_struct.nnz
+        vals = jnp.where(live, a.data[self.t_perm], 0).astype(a.dtype)
+        t = dataclasses.replace(self.t_struct, data=vals)
+        return self.product.execute(t, a, sorted_output=sorted_output)
+
+    __call__ = execute
+
+
+def plan_gram(a: CSR, *, algorithm: str = "auto",
+              semiring: str | Semiring = "plus_times",
+              sorted_output: bool = False, n_bins: int = 8,
+              cache: bool = True, bucket_caps: bool = False) -> GramPlan:
+    """Inspect ``A^T @ A`` once -- transpose included -- and freeze it.
+
+    The host-side transpose (:func:`repro.core.formats.csr_transpose`)
+    runs at plan time only; its gather permutation is part of the frozen
+    structure.  Cached under a ``("gram", ...)`` key in the shared LRU.
+    """
+    sr = resolve_semiring(semiring)
+    key = ("gram", structure_key(a), sr.name, sorted_output, algorithm,
+           n_bins, bucket_caps)
+    if cache:
+        hit = cache_lookup(key)
+        if hit is not None:
+            return hit
+    t, perm = csr_transpose(a, return_perm=True)
+    product = plan_spgemm(t, a, algorithm=algorithm, semiring=sr.name,
+                          sorted_output=sorted_output, n_bins=n_bins,
+                          cache=cache, bucket_caps=bucket_caps)
+    plan = GramPlan(
+        key=key, product=product,
+        t_struct=dataclasses.replace(t, data=jnp.zeros_like(t.data)),
+        t_perm=perm, shape_a=a.shape, cap_a=a.cap, nnz_a=int(a.nnz))
+    if cache:
+        cache_store(key, plan)
+    return plan
+
+
+def gram(a: CSR, *, sorted_output: bool = False, **kw) -> CSR:
+    """One-shot planned ``A^T @ A`` (cached; repeat calls on the same
+    structure -- e.g. re-weighted design matrices -- run numeric-only)."""
+    return plan_gram(a, sorted_output=sorted_output, **kw).execute(a)
+
+
+# ----------------------------------------------------------------------------
+# Distributed chains: ChainPlan over spgemm_1d shards
+# ----------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class DistributedChainPlan:
+    """A chain whose every stage is a frozen 1D distributed product.
+
+    Stage ``k`` is a :class:`repro.core.distributed.DistributedPlan`
+    multiplying the row-sharded intermediate by the replicated operand
+    ``rest[k]``; the row partition is invariant down the chain (a 1D
+    product's output inherits its A-operand's partition), so the
+    intermediate never crosses chips and stays unsorted between stages,
+    exactly like the single-node chain.
+    """
+    key: tuple = dataclasses.field(repr=False)
+    stages: Tuple = dataclasses.field(repr=False)   # DistributedPlans
+    semiring: str
+    sorted_output: bool
+    sort_intermediates: bool
+    row_starts: Tuple[int, ...]
+    shapes: Tuple[Tuple[int, int], ...]   # a_sh.shape, then rest shapes
+    nnz_c: int
+
+    @property
+    def n_stages(self) -> int:
+        return len(self.stages)
+
+    @property
+    def algorithms(self) -> Tuple[str, ...]:
+        return tuple(p.algorithm for p in self.stages)
+
+    def execute(self, mesh, a_sh, *rest, axis: str = "data",
+                sorted_output: Optional[bool] = None):
+        """Numeric phase only on the mesh; returns the row-sharded result
+        (``repro.core.distributed.unshard_rows`` assembles it)."""
+        if len(rest) == 1 and not isinstance(rest[0], CSR):
+            rest = tuple(rest[0])
+        assert len(rest) == len(self.stages), \
+            f"plan composes {len(self.stages)} products, got {len(rest)} " \
+            f"replicated operands"
+        so = self.sorted_output if sorted_output is None else sorted_output
+        cur = a_sh
+        for k, stage in enumerate(self.stages):
+            last = k == len(self.stages) - 1
+            cur = stage.execute(mesh, cur, rest[k], axis=axis,
+                                sorted_output=so if last
+                                else self.sort_intermediates)
+        return cur
+
+    __call__ = execute
+
+
+def plan_chain_1d(a_sh, rest: Sequence[CSR], *, algorithm: str = "auto",
+                  semiring: str | Semiring = "plus_times",
+                  mask=None, complement_mask: bool = False,
+                  sorted_output: bool = False,
+                  sort_intermediates: bool = False, n_bins: int = 8,
+                  cache: bool = True) -> DistributedChainPlan:
+    """Inspect a distributed chain once: ``a_sh @ rest[0] @ ... @ rest[-1]``.
+
+    ``a_sh`` is a row-sharded :class:`repro.core.distributed.ShardedCSR`;
+    every ``rest`` operand is replicated (the ``spgemm_1d`` contract).
+    Stage ``k+1``'s sharded A-structure is materialized at plan time with
+    the mesh-free executor twin
+    (:meth:`repro.core.distributed.DistributedPlan.execute_shards_host`),
+    so planning needs no mesh -- only :meth:`DistributedChainPlan.execute`
+    does.  The ``mask`` (global output coordinates, co-sharded with the
+    row partition) applies to the final stage only.  Cached under a
+    ``("chain_1d", ...)`` key in the shared LRU.
+    """
+    from .distributed import plan_spgemm_1d, sharded_structure_key
+    rest = list(rest)
+    assert rest, "a distributed chain needs at least one replicated operand"
+    sr = resolve_semiring(semiring)
+    key = ("chain_1d", sharded_structure_key(a_sh),
+           tuple(structure_key(b) for b in rest),
+           None if mask is None else
+           (sharded_structure_key(mask) if hasattr(mask, "row_starts")
+            else structure_key(mask)),
+           sr.name, complement_mask, sorted_output, sort_intermediates,
+           algorithm, n_bins)
+    if cache:
+        hit = cache_lookup(key)
+        if hit is not None:
+            return hit
+
+    stages = []
+    cur = a_sh
+    for k, b in enumerate(rest):
+        last = k == len(rest) - 1
+        stage = plan_spgemm_1d(
+            cur, b, algorithm=algorithm, semiring=sr.name,
+            mask=mask if last else None,
+            complement_mask=complement_mask if last else False,
+            sorted_output=sorted_output if last else sort_intermediates,
+            n_bins=n_bins, cache=cache)
+        stages.append(stage)
+        if not last:
+            cur = stage.execute_shards_host(cur, b)
+
+    plan = DistributedChainPlan(
+        key=key, stages=tuple(stages), semiring=sr.name,
+        sorted_output=sorted_output, sort_intermediates=sort_intermediates,
+        row_starts=a_sh.row_starts,
+        shapes=(a_sh.shape,) + tuple(b.shape for b in rest),
+        nnz_c=stages[-1].nnz_c)
+    if cache:
+        cache_store(key, plan)
+    return plan

@@ -285,41 +285,78 @@ class DistributedPlan:
             assert int(b.nnz) == self.nnz_b, \
                 "B nnz differs from the planned structure (replan)"
 
-    def _executor(self, mesh: Mesh, axis: str):
-        statics = dict(algorithm=self.algorithm, semiring=self.semiring,
-                       complement_mask=self.complement_mask,
-                       sorted_output=self.sorted_output,
-                       cap_c=self.cap_c, flop_cap=self.flop_cap,
-                       row_cap=self.row_cap, k_width=self.k_width)
+    def _statics(self, sorted_output: Optional[bool]) -> dict:
+        so = self.sorted_output if sorted_output is None else sorted_output
+        return dict(algorithm=self.algorithm, semiring=self.semiring,
+                    complement_mask=self.complement_mask,
+                    sorted_output=so, cap_c=self.cap_c,
+                    flop_cap=self.flop_cap, row_cap=self.row_cap,
+                    k_width=self.k_width)
+
+    def _executor(self, mesh: Mesh, axis: str,
+                  sorted_output: Optional[bool] = None):
+        statics = self._statics(sorted_output)
         return _memoized_executor(
-            self, mesh, axis,
+            self, (mesh, axis, statics["sorted_output"]),
             lambda: _build_1d_fn(mesh, axis, self.mask_sh is not None,
                                  statics))
 
     def execute(self, mesh: Mesh, a_sh: ShardedCSR, b: CSR,
-                axis: str = "data") -> ShardedCSR:
-        """Numeric phase only: zero re-inspection, uniform static caps."""
+                axis: str = "data",
+                sorted_output: Optional[bool] = None) -> ShardedCSR:
+        """Numeric phase only: zero re-inspection, uniform static caps.
+
+        ``sorted_output`` overrides the plan's recorded sortedness for
+        this call (``None`` keeps it) -- a pure per-shard sort epilogue,
+        exactly like :meth:`repro.core.plan.SpGEMMPlan.execute`, so one
+        cached distributed plan serves sorted and unsorted consumers (the
+        distributed chain keeps intermediates unsorted this way)."""
         self.check_structure(a_sh, b)
         args = (a_sh.parts, b)
         if self.mask_sh is not None:
             args = args + (self.mask_sh.parts,)
-        out = self._executor(mesh, axis)(*args)
+        out = self._executor(mesh, axis, sorted_output)(*args)
         return ShardedCSR(out, self.row_starts, self.shape_a[0])
 
     __call__ = execute
 
+    def execute_shards_host(self, a_sh: ShardedCSR, b: CSR,
+                            sorted_output: Optional[bool] = None
+                            ) -> ShardedCSR:
+        """Mesh-free executor twin: every shard's local product, eagerly.
 
-def _memoized_executor(plan, mesh: Mesh, axis: str, build):
-    """Per-(mesh, axis) jitted executor cache on a frozen plan dataclass
-    (shared by the 1D and SUMMA plans)."""
+        Runs the exact ``_local_spgemm`` body the shard_map executor runs
+        -- same algorithm substitutions, same uniform static capacities --
+        shard by shard on the host's default device, and restacks the
+        results.  Structure- and value-identical to :meth:`execute` on a
+        mesh (the SPMD body is deterministic given structure), which is
+        what lets the chain planner (``core.chain.plan_chain_1d``)
+        materialize intermediate *sharded* structure at plan time without
+        owning a mesh; also a single-process debugging aid.
+        """
+        self.check_structure(a_sh, b)
+        statics = self._statics(sorted_output)
+        outs = []
+        for s in range(len(self.row_starts) - 1):
+            m_loc = self.mask_sh.local(s) if self.mask_sh is not None \
+                else None
+            outs.append(_local_spgemm(a_sh.local(s), b, m_loc, **statics))
+        parts = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        return ShardedCSR(parts, self.row_starts, self.shape_a[0])
+
+
+def _memoized_executor(plan, cache_key, build):
+    """Jitted executor cache on a frozen plan dataclass, keyed by whatever
+    static context the executor was built for -- (mesh, axis) for SUMMA,
+    (mesh, axis, sorted_output) for the 1D plan (shared by both)."""
     cache = plan.__dict__.get("_executors")
     if cache is None:
         cache = {}
         object.__setattr__(plan, "_executors", cache)
-    fn = cache.get((mesh, axis))
+    fn = cache.get(cache_key)
     if fn is None:
         fn = jax.jit(build())
-        cache[(mesh, axis)] = fn
+        cache[cache_key] = fn
     return fn
 
 
@@ -653,7 +690,7 @@ class SummaPlan:
         """Numeric phase only: gather current values into the frozen panel
         structure (device-side), run the panel loop + reduce-scatter."""
         self.check_structure(a, b)
-        fn = _memoized_executor(self, mesh, axis,
+        fn = _memoized_executor(self, (mesh, axis),
                                 lambda: _build_summa_fn(self, mesh, axis))
         out = fn(self.a_struct, self.a_take, a.data,
                  self.b_struct, self.b_take, b.data)

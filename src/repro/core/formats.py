@@ -162,7 +162,9 @@ class CSR:
         """Sort column ids within each row (the paper's optional epilogue).
 
         Cost model: this is exactly the ``sum nnz(c_i*) log nnz(c_i*)`` term
-        of Eq. (2); `bench_compression.py` measures what skipping it saves.
+        of Eq. (2); the ``sorted_vs_unsorted`` rows of `bench_graph.py` and
+        the per-hop comparison in `bench_chain.py` measure what skipping
+        it saves.
         """
         # lexicographic (row, col) sort of the live prefix; padded slots sort
         # to the end via a sentinel row id.
@@ -173,7 +175,51 @@ class CSR:
                    self.nnz, self.shape, sorted_cols=True)
 
     def with_unsorted_flag(self) -> "CSR":
+        """Same arrays, ``sorted_cols=False``: the static-metadata
+        downgrade used to *request* select-order handling (e.g. to route
+        a product away from the heap path in tests/benchmarks)."""
         return dataclasses.replace(self, sorted_cols=False)
+
+
+def csr_transpose(a: CSR, cap: int | None = None,
+                  return_perm: bool = False):
+    """Host-side CSR transpose (numpy; not jittable): returns ``A^T`` as a
+    sorted row-major CSR of shape ``(n_cols, n_rows)``.
+
+    With ``return_perm=True`` also returns the int32 gather ``perm`` of
+    shape ``(cap,)`` satisfying ``A^T.data == A.data[perm]`` over the live
+    prefix (padded tail gathers slot 0 and must be masked by the caller).
+    ``perm`` is the *structural* part of the transpose: it depends only on
+    A's pattern, which is what lets transpose-aware plans
+    (:func:`repro.core.chain.plan_gram`) freeze it once and re-gather only
+    values on repeat executes -- one device gather instead of a host pass.
+    """
+    m, n = a.shape
+    nnz = int(a.nnz)
+    ip = np.asarray(a.indptr, np.int64)
+    rows = np.repeat(np.arange(m, dtype=np.int64), np.diff(ip))
+    cols = np.asarray(a.indices, np.int64)[:nnz]
+    vals = np.asarray(a.data)[:nnz]
+    # stable (col, row) sort: within each T row the original row ids come
+    # out ascending, so the result is sorted_cols by construction
+    perm = np.lexsort((rows, cols)).astype(np.int32)
+    if cap is None:
+        cap = max(a.cap, 1)
+    assert nnz <= cap, f"transpose nnz {nnz} exceeds capacity {cap}"
+    indices = np.zeros(cap, np.int32)
+    data = np.zeros(cap, vals.dtype if vals.size else np.float32)
+    indices[:nnz] = rows[perm]
+    data[:nnz] = vals[perm]
+    counts = np.bincount(cols, minlength=n)
+    indptr = np.zeros(n + 1, np.int32)
+    np.cumsum(counts, out=indptr[1:])
+    t = CSR(jnp.asarray(indptr), jnp.asarray(indices), jnp.asarray(data),
+            jnp.asarray(nnz, jnp.int32), (n, m), sorted_cols=True)
+    if not return_perm:
+        return t
+    perm_full = np.zeros(cap, np.int32)
+    perm_full[:nnz] = perm
+    return t, jnp.asarray(perm_full)
 
 
 def csr_sorted_keys(a: CSR) -> jax.Array:
@@ -307,8 +353,11 @@ _register(ELL, ("indices", "data", "row_nnz"), ("shape",))
 
 
 def csr_to_bcsr(a: CSR, block: Tuple[int, int], bcap: int | None = None) -> BCSR:
+    """Re-tile a scalar CSR into block CSR (via dense staging; format
+    conversion is data-pipeline work, not a jit-hot path)."""
     return BCSR.from_dense(a.to_dense(), block, bcap)
 
 
 def bcsr_to_csr(a: BCSR, cap: int | None = None) -> CSR:
+    """Flatten a block CSR back to scalar CSR (sorted, via dense staging)."""
     return CSR.from_dense(a.to_dense(), cap)

@@ -22,7 +22,11 @@ semantic fields (semiring, mask structure, complement flag, sortedness,
 algorithm, use case, n_bins).  Values deliberately do not enter the key --
 a re-weighted graph with the same adjacency hits the cached plan.
 Invalidation is by construction: a structural change produces a different
-key, and :func:`clear_plan_cache` empties the table wholesale.
+key, and :func:`clear_plan_cache` empties the table wholesale.  Every key
+leads with a string **kind** namespace -- ``"spgemm"`` here; the
+distributed plans (``"dist_1d"``/``"summa"``) and chain plans
+(``"chain"``/``"chain_1d"``/``"gram"``) share the same LRU under their
+own kinds (:func:`plan_cache_stats` reports per-kind occupancy).
 
 Planning is a host-side (eager) operation: the exact capacities must be
 concrete Python ints to become static shapes.  ``execute`` is jit-friendly
@@ -42,8 +46,8 @@ import numpy as np
 from .formats import CSR
 from .semiring import Semiring, resolve_semiring
 from . import schedule as sched
-from .spgemm import (_canon_mask, _check_mask, spgemm_dense, spgemm_esc,
-                     spgemm_hash_jnp, spgemm_heap, symbolic)
+from .spgemm import (_canon_mask, _check_mask, finalize, spgemm_dense,
+                     spgemm_esc, spgemm_hash_jnp, spgemm_heap, symbolic)
 
 
 def structure_key(a: CSR) -> bytes:
@@ -80,11 +84,25 @@ PLAN_CACHE_CAPACITY = 256
 
 
 def plan_cache_stats() -> dict:
-    """Copy of the cache counters: {'hits', 'misses', 'size'}."""
-    return {**_STATS, "size": len(_CACHE)}
+    """Copy of the cache counters: ``{'hits', 'misses', 'size', 'kinds'}``.
+
+    ``kinds`` counts live entries per plan *kind* -- the string namespace
+    every key leads with: ``"spgemm"`` (single-node), ``"dist_1d"`` /
+    ``"summa"`` (``core.distributed``), ``"chain"`` / ``"chain_1d"`` /
+    ``"gram"`` (``core.chain``).  All kinds share one LRU, one capacity
+    bound (:data:`PLAN_CACHE_CAPACITY`), and one :func:`clear_plan_cache`.
+    """
+    kinds: dict = {}
+    for key in _CACHE:
+        kind = key[0] if isinstance(key[0], str) else "spgemm"
+        kinds[kind] = kinds.get(kind, 0) + 1
+    return {**_STATS, "size": len(_CACHE), "kinds": kinds}
 
 
 def clear_plan_cache() -> None:
+    """Empty the shared plan LRU (all kinds) and reset the hit/miss
+    counters.  Plans already held by callers stay valid -- the cache only
+    governs lookup, never plan lifetime."""
     _CACHE.clear()
     _STATS["hits"] = _STATS["misses"] = 0
 
@@ -116,7 +134,11 @@ def cache_store(key: tuple, value) -> None:
 def _plan_key(a: CSR, b: CSR, mask: Optional[CSR], sr_name: str,
               complement_mask: bool, sorted_output: bool, algorithm: str,
               use_case: Optional[str], n_bins: int) -> tuple:
-    return (structure_key(a), structure_key(b),
+    # "spgemm" is this key's kind namespace: every plan family in the
+    # shared LRU (dist_1d / summa / chain / chain_1d / gram) leads with a
+    # distinct string, so keys can never collide across kinds and
+    # plan_cache_stats can report per-kind occupancy.
+    return ("spgemm", structure_key(a), structure_key(b),
             None if mask is None else structure_key(mask),
             sr_name, complement_mask, sorted_output, algorithm, use_case,
             n_bins)
@@ -182,12 +204,22 @@ class SpGEMMPlan:
                     "operand nnz differs from the planned structure " \
                     "(replan or clear_plan_cache)"
         if strict:
-            assert (structure_key(a), structure_key(b)) == self.key[:2], \
+            assert (structure_key(a), structure_key(b)) == self.key[1:3], \
                 "operand structure differs from the planned structure"
 
-    def execute(self, a: CSR, b: CSR) -> CSR:
+    def execute(self, a: CSR, b: CSR,
+                sorted_output: Optional[bool] = None) -> CSR:
         """Numeric phase only: same contract as ``spgemm`` with this plan's
-        recorded algorithm/semiring/mask, zero re-inspection."""
+        recorded algorithm/semiring/mask, zero re-inspection.
+
+        ``sorted_output`` overrides the plan's recorded sortedness for this
+        call (``None`` keeps it).  Sorting is a pure epilogue
+        (:func:`repro.core.spgemm.finalize`) -- it changes no capacity and
+        no accumulator state -- so one cached plan legally serves both the
+        sorted and the unsorted consumer; the chain executor uses this to
+        keep intermediates unsorted under a plan whose final output is
+        sorted on request (DESIGN.md section 12).
+        """
         self.check_structure(a, b)
         sr = resolve_semiring(self.semiring)
         general = sr.name != "plus_times" or self.mask is not None
@@ -220,9 +252,8 @@ class SpGEMMPlan:
                     indptr_c=self.indptr_c)
         else:
             raise ValueError(f"plan holds unknown algorithm {algo!r}")
-        if self.sorted_output and not out.sorted_cols:
-            out = out.sort_rows()
-        return out
+        so = self.sorted_output if sorted_output is None else sorted_output
+        return finalize(out, so)
 
     __call__ = execute
 
@@ -232,7 +263,7 @@ def plan_spgemm(a: CSR, b: CSR, *, algorithm: str = "auto",
                 mask: Optional[CSR] = None, complement_mask: bool = False,
                 sorted_output: bool = False, use_case: Optional[str] = None,
                 n_bins: int = 8, cache: bool = True,
-                bucket_caps: bool = False) -> SpGEMMPlan:
+                bucket_caps: bool = False, a_row_nnz=None) -> SpGEMMPlan:
     """Run the full inspection once and freeze it as a :class:`SpGEMMPlan`.
 
     With ``cache=True`` (default) the structure-keyed cache is consulted
@@ -245,11 +276,23 @@ def plan_spgemm(a: CSR, b: CSR, *, algorithm: str = "auto",
     structure then compiles its own numeric program; bucketing trades a
     <2x allocation slack for program sharing across *similar* structures
     -- the right call inside loops whose structure drifts every iteration
-    (e.g. BFS frontiers) where exactness would retrace each hop.
+    (e.g. BFS frontiers, MCL expansion) where exactness would retrace
+    each hop.
+
+    ``a_row_nnz`` marks A as a chain intermediate: pass the previous
+    stage's recorded ``plan.row_nnz_c`` and the recipe's A-side statistics
+    come from that recorded structure instead of the handed-in buffer
+    (``recipe.recommend``'s mid-chain hook; used by ``core.chain``).
     """
     sr = resolve_semiring(semiring)
+    arn_digest = None
+    if a_row_nnz is not None:
+        # a_row_nnz can steer the recipe's auto choice, so it must reach
+        # the cache key; digest rather than store the array itself.
+        arn_digest = hashlib.blake2b(np.asarray(a_row_nnz).tobytes(),
+                                     digest_size=8).digest()
     key = _plan_key(a, b, mask, sr.name, complement_mask, sorted_output,
-                    algorithm, use_case, n_bins) + (bucket_caps,)
+                    algorithm, use_case, n_bins) + (bucket_caps, arn_digest)
     if cache:
         hit = cache_lookup(key)
         if hit is not None:
@@ -298,7 +341,7 @@ def plan_spgemm(a: CSR, b: CSR, *, algorithm: str = "auto",
         algorithm, _ = recommend(a, b, sorted_output=sorted_output,
                                  use_case=uc, semiring=sr.name, mask=mask,
                                  complement_mask=complement_mask,
-                                 row_nnz_c=row_nnz_c)
+                                 row_nnz_c=row_nnz_c, a_row_nnz=a_row_nnz)
         if algorithm == "heap" and not (a.sorted_cols and b.sorted_cols):
             # recipe picked heap on its merits, but the inputs cannot feed
             # it; hash keeps the unsorted contract

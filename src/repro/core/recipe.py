@@ -89,11 +89,27 @@ def block_density_of(a: CSR, tile=_PROBE_TILE) -> float:
 def measure_stats(a: CSR, b: CSR, row_nnz_c=None,
                   probe_blocks: bool = False,
                   mask: CSR | None = None,
-                  complement_mask: bool = False) -> SpGEMMStats:
-    """Host-side stat collection (concrete values; jittable pieces inside)."""
+                  complement_mask: bool = False,
+                  a_row_nnz=None) -> SpGEMMStats:
+    """Host-side stat collection (concrete values; jittable pieces inside).
+
+    ``a_row_nnz`` takes the *recorded* per-row counts of the A operand when
+    A is a chain intermediate -- the previous stage's ``plan.row_nnz_c``
+    (DESIGN.md section 12).  The recorded counts replace the A-side
+    *count* statistics (``nnz_a``, ``mean_row_nnz_a``, ``density_ef``):
+    unlike ``a.nnz``, they stay exact when the intermediate rides in a
+    bucket-capped (p2-padded) buffer or when its ``nnz`` is a tracer
+    inside a jitted loop.  The flop-side statistics (``flop``,
+    ``max_row_flop``, ``row_skew``) still come from
+    :func:`repro.core.schedule.flops_per_row` on the handed-in
+    (materialized) structure, which needs A's column indices.
+    """
     flop = sched.flops_per_row(a, b)
     total_flop = float(flop.sum())
-    nnz_a = float(a.nnz)
+    if a_row_nnz is not None:
+        nnz_a = float(jnp.asarray(a_row_nnz).sum())
+    else:
+        nnz_a = float(a.nnz)
     if row_nnz_c is None:
         # cheap upper-bound estimate; exact comes from core.spgemm.symbolic
         row_bound = jnp.minimum(flop, b.n_cols)
@@ -144,6 +160,9 @@ def cost_esc(stats: SpGEMMStats) -> float:
 
 
 def model_costs(stats: SpGEMMStats, sorted_output: bool) -> dict:
+    """Eq. 1/Eq. 2 cost-model scores per algorithm family (lower wins);
+    the theoretical ranking `table4_recipe` checks the empirical decision
+    table against."""
     return {"heap": cost_heap(stats),
             "hash": cost_hash(stats, sorted_output),
             "esc": cost_esc(stats)}
@@ -220,17 +239,26 @@ def recommend(a: CSR, b: CSR, sorted_output: bool = False,
               semiring: str = "plus_times",
               mask: CSR | None = None,
               complement_mask: bool = False,
-              row_nnz_c=None) -> tuple[str, SpGEMMStats]:
+              row_nnz_c=None, a_row_nnz=None) -> tuple[str, SpGEMMStats]:
     """Measure stats and choose -- returns ``(algorithm, stats)``.
 
     ``row_nnz_c`` takes the symbolic phase's exact per-row counts when the
     caller already has them (the planner does), replacing the cheap
     upper-bound estimate so compression-ratio decisions are exact; the
     chosen algorithm is what the planner records in the plan.
+
+    ``a_row_nnz`` is the mid-chain hook (DESIGN.md section 12): when the A
+    operand is a chain *intermediate*, pass the previous stage's recorded
+    ``plan.row_nnz_c`` so the A-side statistics come from the real
+    intermediate structure instead of whatever buffer padding or traced
+    ``nnz`` the handed-in CSR carries.  An intermediate's compression
+    factor and skew differ from the user matrices that produced it, so
+    without this the stage-k algorithm choice would key on defaults.
     """
     stats = measure_stats(a, b, row_nnz_c=row_nnz_c,
                           probe_blocks=probe_blocks, mask=mask,
-                          complement_mask=complement_mask)
+                          complement_mask=complement_mask,
+                          a_row_nnz=a_row_nnz)
     return choose_algorithm_from_stats(stats, sorted_output, use_case,
                                        semiring=semiring), stats
 
@@ -241,6 +269,9 @@ def choose_algorithm(a: CSR, b: CSR, sorted_output: bool = False,
                      semiring: str = "plus_times",
                      mask: CSR | None = None,
                      complement_mask: bool = False) -> str:
+    """:func:`recommend` without the stats -- what ``spgemm(algorithm=
+    "auto")`` calls.  ``use_case`` is one of ``"AxA"`` | ``"LxU"`` |
+    ``"tall_skinny"`` | ``"masked"`` (Table 4's columns)."""
     algo, _ = recommend(a, b, sorted_output=sorted_output, use_case=use_case,
                         probe_blocks=probe_blocks, semiring=semiring,
                         mask=mask, complement_mask=complement_mask)

@@ -189,6 +189,29 @@ def equal_weight_partition(weights, n_parts: int) -> np.ndarray:
     return np.minimum(starts, n)
 
 
+def chained_flop_bound(row_nnz_prev: jax.Array, b: CSR) -> jax.Array:
+    """A-priori per-row flop bound for the *next* product of a chain.
+
+    Stage ``k+1`` of a chain multiplies the (not-yet-materialized)
+    intermediate ``C_k`` by the next operand ``B``; before ``C_k``'s column
+    structure exists, the only exact inputs are the previous stage's
+    symbolic counts ``row_nnz_prev = nnz(c_k,i*)``.  Row ``i`` of stage
+    ``k+1`` touches at most one B row per intermediate entry, so
+
+        flop_{k+1}[i] <= nnz(c_k,i*) * max_j nnz(b_j*)
+
+    This is the chained capacity math of DESIGN.md section 12: it bounds
+    the next stage's expansion buffer and hash-table sizes from recorded
+    plan state alone, and it is what :func:`repro.core.recipe.recommend`'s
+    ``a_row_nnz`` hook consumes for mid-chain algorithm choice.  Once the
+    chain planner materializes the intermediate, the exact
+    :func:`flops_per_row` replaces this bound.
+    """
+    bmax = jnp.max(b.row_nnz()).astype(jnp.int32) if b.n_rows else \
+        jnp.int32(0)
+    return row_nnz_prev.astype(jnp.int32) * bmax
+
+
 def lowest_p2(x: int) -> int:
     """Static helper: minimum 2^n >= x (Fig. 7 line 12)."""
     p = 1

@@ -47,7 +47,7 @@ from .semiring import Semiring, resolve_semiring
 from . import schedule as sched
 
 Algorithm = Literal["auto", "dense", "esc", "heap", "hash", "hash_vector",
-                    "hash_jnp"]
+                    "hash_jnp", "bcsr"]
 
 #: hash-order scrambling modulus for the jnp hash fallback (Fig. 8's
 #: multiply hash over a fixed 2^20 table: output order == table-scan order).
@@ -432,8 +432,24 @@ def spmm(a: CSR, x: jax.Array) -> jax.Array:
 
 
 # ----------------------------------------------------------------------------
-# Public dispatcher
+# Sort-on-demand epilogue + public dispatcher
 # ----------------------------------------------------------------------------
+
+def finalize(c: CSR, sorted_output: bool) -> CSR:
+    """Sort-on-demand epilogue: sort ``c``'s rows iff the caller asked for
+    sorted output and the accumulator emitted select (unsorted) order.
+
+    This is the single place the dispatcher, ``SpGEMMPlan.execute``, and
+    the chain executor (``core.chain``) pay the Eq. 2 sort term
+    ``sum_i nnz(c_i*) log nnz(c_i*)`` -- and deliberately *not* paying it
+    between chain stages is the paper's C8 finding applied at every
+    internal hop (DESIGN.md section 12).  A no-op on already-sorted
+    results (``sorted_cols`` is static metadata, so this is a trace-time
+    branch).
+    """
+    if sorted_output and not c.sorted_cols:
+        return c.sort_rows()
+    return c
 
 def spgemm(a: CSR, b: CSR, cap_c: int | None = None,
            algorithm: Algorithm = "auto",
@@ -521,6 +537,4 @@ def spgemm(a: CSR, b: CSR, cap_c: int | None = None,
         out = bcsr_to_csr(cb, cap=cap_c)
     else:
         raise ValueError(f"unknown algorithm {algorithm!r}")
-    if sorted_output and not out.sorted_cols:
-        out = out.sort_rows()
-    return out
+    return finalize(out, bool(sorted_output))

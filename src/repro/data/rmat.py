@@ -80,6 +80,22 @@ def tall_skinny_from(a_rows: np.ndarray, a_cols: np.ndarray, n: int,
     return CSR.from_numpy_coo(rows, cols, vals, (n, k), cap=cap)
 
 
+def aggregation_csr(n: int, coarse: int, seed: int = 0):
+    """AMG-style aggregation pair for Galerkin triple products R·A·P.
+
+    ``P`` is ``(n, coarse)`` with one unit entry per row (each fine
+    vertex assigned to a random aggregate) and ``R = P^T``; returns
+    ``(r, p)``.  Shared by ``benchmarks/bench_chain.py`` and
+    ``tests/test_chain.py`` so both exercise the same coarsening shape.
+    """
+    from repro.core.formats import csr_transpose
+    rng = np.random.default_rng(seed)
+    cols = rng.integers(0, coarse, size=n)
+    p = CSR.from_numpy_coo(np.arange(n), cols, np.ones(n, np.float32),
+                           (n, coarse))
+    return csr_transpose(p), p
+
+
 def symmetrize(a: CSR, cap: int | None = None) -> CSR:
     """Undirected simple graph from a directed pattern: A|A^T, no diagonal.
 

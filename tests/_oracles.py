@@ -1,0 +1,31 @@
+"""Shared independent oracles for the differential suites.
+
+One implementation of the per-semiring reference product, used by both
+``test_differential.py`` (single products) and ``test_chain.py``
+(chains), so a semiring added or a tolerance fixed in the oracle reaches
+every differential suite at once.  ``plus_times``/``boolean`` go through
+scipy.sparse (a genuinely independent sparse engine); callers are
+responsible for skipping when scipy is absent (both suites
+``importorskip`` it at module level).
+"""
+import numpy as np
+
+
+def semiring_oracle(ad: np.ndarray, bd: np.ndarray,
+                    sr_name: str) -> np.ndarray:
+    import scipy.sparse as sp
+    ap, bp = ad != 0, bd != 0
+    if sr_name == "plus_times":
+        return np.asarray((sp.csr_matrix(ad) @ sp.csr_matrix(bd)).todense(),
+                          np.float32)
+    if sr_name == "boolean":
+        return ((sp.csr_matrix(ap) @ sp.csr_matrix(bp)).todense() > 0) \
+            .astype(np.float32)
+    if sr_name == "plus_first":
+        return (ad @ bp.astype(np.float32)).astype(np.float32)
+    if sr_name == "min_plus":
+        s = np.where(ap[:, :, None] & bp[None, :, :],
+                     ad[:, :, None] + bd[None, :, :], np.inf)
+        out = s.min(axis=1)
+        return np.where(np.isinf(out), 0.0, out).astype(np.float32)
+    raise AssertionError(sr_name)

@@ -1,0 +1,316 @@
+"""Chain-composition subsystem (DESIGN.md section 12).
+
+Contracts:
+  * ``ChainPlan.execute`` for R.A.P and A^3 matches an independent
+    scipy/numpy oracle across semirings x masks x sorted/unsorted final
+    output, with intermediates kept unsorted;
+  * a sorted-final chain bit-matches the composed per-product planned
+    path (stage plans are the same frozen inspections);
+  * repeated ``galerkin`` calls hit the chain cache (zero new
+    inspections), including on re-weighted operands;
+  * ``gram`` is a transpose-aware A^T A (values-only regather on repeat);
+  * the distributed chain equals the single-node chain after reassembly;
+  * ``recommend(a_row_nnz=...)`` keys the A-side stats on recorded
+    intermediate structure (the mid-chain recipe hook);
+  * MCL on a planted-partition graph converges and recovers the planted
+    clusters (the structure-drift workload pin).
+"""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+sp = pytest.importorskip("scipy.sparse")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import (CSR, chained_flop_bound, clear_plan_cache,  # noqa: E402
+                        csr_transpose, finalize, flops_per_row, galerkin,
+                        gram, measure_stats, plan_cache_stats, plan_chain,
+                        plan_chain_1d, plan_galerkin, plan_gram, plan_power,
+                        plan_spgemm, recommend, shard_csr_rows, spgemm,
+                        unshard_rows)
+from repro.data.rmat import aggregation_csr, rmat_csr
+
+SEMIRINGS = ("plus_times", "boolean", "min_plus", "plus_first")
+
+
+# ---------------------------------------------------------------------------
+# Oracles and builders
+# ---------------------------------------------------------------------------
+
+from _oracles import semiring_oracle as _oracle_product  # noqa: E402
+
+
+def _oracle_chain(mats, sr_name: str, mask=None, complement=False):
+    cur = np.asarray(mats[0].to_dense())
+    for b in mats[1:]:
+        cur = _oracle_product(cur, np.asarray(b.to_dense()), sr_name)
+    if mask is not None:
+        md = np.asarray(mask.to_dense()) != 0
+        keep = ~md if complement else md
+        cur = np.where(keep, cur, 0)
+    return cur
+
+
+def _rap(seed=3, scale=5, ef=3):
+    a = rmat_csr(scale, ef, "G500", seed=seed)
+    r, p = aggregation_csr(a.n_rows, a.n_rows // 4, seed=seed)
+    return r, a, p
+
+
+def _rand_mask(shape, density=0.4, seed=11):
+    rng = np.random.default_rng(seed)
+    dense = (rng.random(shape) < density).astype(np.float32)
+    return CSR.from_dense(jnp.asarray(dense))
+
+
+# ---------------------------------------------------------------------------
+# Differential grid: R.A.P and A^3
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("semiring", SEMIRINGS)
+@pytest.mark.parametrize("masked", ("none", "mask", "complement"))
+@pytest.mark.parametrize("sorted_output", (False, True))
+def test_rap_differential(semiring, masked, sorted_output):
+    r, a, p = _rap()
+    mask = None if masked == "none" else \
+        _rand_mask((r.n_rows, p.n_cols))
+    complement = masked == "complement"
+    oracle = _oracle_chain([r, a, p], semiring, mask, complement)
+
+    plan = plan_galerkin(r, a, p, semiring=semiring, mask=mask,
+                         complement_mask=complement,
+                         sorted_output=sorted_output, cache=False)
+    c = plan.execute(r, a, p)
+    if sorted_output:
+        assert c.sorted_cols
+    assert np.allclose(np.asarray(c.to_dense()), oracle, atol=1e-3), \
+        (semiring, masked, sorted_output)
+
+
+@pytest.mark.parametrize("semiring", ("plus_times", "boolean"))
+def test_power3_differential(semiring):
+    a = rmat_csr(5, 3, "G500", seed=9)
+    oracle = _oracle_chain([a, a, a], semiring)
+    plan = plan_power(a, 3, semiring=semiring, sorted_output=True,
+                      cache=False)
+    c = plan.execute(a, a, a)
+    assert np.allclose(np.asarray(c.to_dense()), oracle, atol=1e-3)
+    # intermediates were kept unsorted whenever the stage emits select
+    # order (the hash family); the *final* output is sorted on request
+    assert c.sorted_cols
+
+
+def test_sorted_final_bitmatches_composed_per_product_path():
+    r, a, p = _rap(seed=4)
+    chain = plan_galerkin(r, a, p, algorithm="hash_jnp", sorted_output=True,
+                          cache=False)
+    c = chain.execute(r, a, p)
+    p1 = plan_spgemm(r, a, algorithm="hash_jnp", cache=False)
+    c1 = p1.execute(r, a)
+    p2 = plan_spgemm(c1, p, algorithm="hash_jnp", sorted_output=True,
+                     cache=False)
+    c_comp = p2.execute(c1, p)
+    for field in ("indptr", "indices", "data"):
+        assert np.array_equal(np.asarray(getattr(c, field)),
+                              np.asarray(getattr(c_comp, field))), field
+    assert int(c.nnz) == int(c_comp.nnz)
+
+
+def test_chain_execute_rejects_wrong_structure():
+    r, a, p = _rap(seed=5)
+    plan = plan_galerkin(r, a, p, cache=False)
+    with pytest.raises(AssertionError):
+        plan.execute(r, a, a)          # wrong final operand shape
+    with pytest.raises(AssertionError):
+        plan.execute(r, a)             # wrong operand count
+
+
+def test_chain_sorted_output_override():
+    a = rmat_csr(5, 3, "G500", seed=6)
+    plan = plan_power(a, 3, algorithm="hash_jnp", sorted_output=False,
+                      cache=False)
+    c_un = plan.execute(a, a, a)
+    assert not c_un.sorted_cols
+    c_so = plan.execute(a, a, a, sorted_output=True)
+    assert c_so.sorted_cols
+    assert np.allclose(np.asarray(c_un.to_dense()),
+                       np.asarray(c_so.to_dense()))
+
+
+# ---------------------------------------------------------------------------
+# Plan cache behaviour
+# ---------------------------------------------------------------------------
+
+def test_repeat_galerkin_hits_chain_cache():
+    r, a, p = _rap(seed=7)
+    clear_plan_cache()
+    c1 = galerkin(r, a, p, sorted_output=True)
+    stats1 = plan_cache_stats()
+    assert stats1["kinds"].get("chain") == 1
+    c2 = galerkin(r, a, p, sorted_output=True)
+    stats2 = plan_cache_stats()
+    assert stats2["misses"] == stats1["misses"], \
+        "repeat galerkin must replan nothing"
+    assert stats2["hits"] > stats1["hits"]
+    assert np.array_equal(np.asarray(c1.to_dense()),
+                          np.asarray(c2.to_dense()))
+    # a re-weighted A (same adjacency) also reuses the frozen chain
+    a2 = CSR(a.indptr, a.indices, a.data * 3.0, a.nnz, a.shape,
+             a.sorted_cols)
+    before = plan_cache_stats()
+    c3 = galerkin(r, a2, p, sorted_output=True)
+    assert plan_cache_stats()["misses"] == before["misses"]
+    assert np.allclose(np.asarray(c3.to_dense()),
+                       3.0 * np.asarray(c1.to_dense()), atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Transpose + gram
+# ---------------------------------------------------------------------------
+
+def test_csr_transpose_and_perm():
+    a = rmat_csr(5, 3, "G500", seed=8)
+    ad = np.asarray(a.to_dense())
+    t, perm = csr_transpose(a, return_perm=True)
+    assert t.shape == (a.n_cols, a.n_rows) and t.sorted_cols
+    assert np.allclose(np.asarray(t.to_dense()), ad.T)
+    nnz = int(a.nnz)
+    regather = np.asarray(a.data)[np.asarray(perm)][:nnz]
+    assert np.array_equal(regather, np.asarray(t.data)[:nnz])
+    # transpose of an *unsorted* CSR (hash-family output) is still exact
+    u = spgemm(a, a, int((ad @ ad != 0).sum()), algorithm="hash_jnp")
+    assert not u.sorted_cols
+    tu = csr_transpose(u)
+    assert np.allclose(np.asarray(tu.to_dense()),
+                       np.asarray(u.to_dense()).T, atol=1e-3)
+
+
+def test_gram_matches_scipy_and_regathers_values_only():
+    a = rmat_csr(5, 3, "G500", seed=10)
+    ad = np.asarray(a.to_dense())
+    oracle = np.asarray((sp.csr_matrix(ad).T @ sp.csr_matrix(ad)).todense(),
+                        np.float32)
+    clear_plan_cache()
+    g = gram(a, sorted_output=True)
+    assert np.allclose(np.asarray(g.to_dense()), oracle, atol=1e-3)
+    # re-weighted operand: same plan, values regathered through the frozen
+    # transpose permutation
+    a2 = CSR(a.indptr, a.indices, a.data * 2.0, a.nnz, a.shape,
+             a.sorted_cols)
+    before = plan_cache_stats()
+    g2 = plan_gram(a2, sorted_output=True).execute(a2)
+    assert plan_cache_stats()["misses"] == before["misses"]
+    assert np.allclose(np.asarray(g2.to_dense()), 4.0 * oracle, atol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# Distributed chain
+# ---------------------------------------------------------------------------
+
+def test_distributed_chain_matches_single_node():
+    n_dev = len(jax.devices())
+    mesh = jax.sharding.Mesh(np.array(jax.devices()), ("data",))
+    a = rmat_csr(5, 3, "G500", seed=12)
+    b = rmat_csr(5, 3, "ER", seed=13)
+    a_sh = shard_csr_rows(a, n_dev, b=b)
+    clear_plan_cache()
+    dplan = plan_chain_1d(a_sh, [b, a], algorithm="hash",
+                          sorted_output=True)
+    c = unshard_rows(dplan.execute(mesh, a_sh, b, a))
+    single = plan_chain([a, b, a], algorithm="hash_jnp",
+                        sorted_output=True, cache=False)
+    c_ref = single.execute(a, b, a)
+    assert np.allclose(np.asarray(c.to_dense()),
+                       np.asarray(c_ref.to_dense()), atol=1e-3)
+    assert c.sorted_cols
+    # repeat plan is one cache hit, zero new inspections
+    before = plan_cache_stats()
+    dplan2 = plan_chain_1d(a_sh, [b, a], algorithm="hash",
+                           sorted_output=True)
+    after = plan_cache_stats()
+    assert dplan2 is dplan and after["misses"] == before["misses"]
+    assert after["kinds"].get("chain_1d") == 1
+
+
+# ---------------------------------------------------------------------------
+# Mid-chain recipe hook + capacity bound math
+# ---------------------------------------------------------------------------
+
+def test_recommend_a_row_nnz_keys_a_side_stats_on_recorded_structure():
+    a = rmat_csr(5, 3, "G500", seed=14)
+    b = rmat_csr(5, 3, "ER", seed=15)
+    _, stats_default = recommend(a, b)
+    recorded = np.asarray(a.row_nnz()) * 4      # a denser recorded structure
+    _, stats_hook = recommend(a, b, a_row_nnz=recorded)
+    assert stats_hook.nnz_a == pytest.approx(4 * stats_default.nnz_a)
+    assert stats_hook.density_ef == pytest.approx(4 * stats_default.density_ef)
+    assert stats_hook.mean_row_nnz_a == \
+        pytest.approx(4 * stats_default.mean_row_nnz_a)
+    # flop-side stats still come from the real materialized structure
+    assert stats_hook.flop == stats_default.flop
+    # the hook reaches the plan cache key: same structures, different
+    # recorded stats must not collide
+    clear_plan_cache()
+    p1 = plan_spgemm(a, b)
+    p2 = plan_spgemm(a, b, a_row_nnz=jnp.asarray(recorded))
+    assert p1.key != p2.key
+    assert plan_cache_stats()["misses"] == 2
+
+
+def test_chain_stage_recipes_see_intermediate_stats():
+    """Stage >= 1 of an auto chain consumes the previous stage's recorded
+    row_nnz_c -- the recorded choice must match a direct recommend on the
+    materialized intermediate with those stats."""
+    r, a, p = _rap(seed=16)
+    chain = plan_galerkin(r, a, p, algorithm="auto", cache=False)
+    inter = chain.stages[0].execute(r, a)
+    algo, _ = recommend(inter, p, sorted_output=False, use_case="AxA",
+                        row_nnz_c=chain.stages[1].row_nnz_c,
+                        a_row_nnz=chain.stages[0].row_nnz_c)
+    expect = algo
+    if expect == "heap" and not (inter.sorted_cols and p.sorted_cols):
+        expect = "hash"
+    assert chain.stages[1].algorithm == expect
+
+
+def test_chained_flop_bound_dominates_real_flops():
+    a = rmat_csr(5, 3, "G500", seed=17)
+    b = rmat_csr(5, 3, "ER", seed=18)
+    plan = plan_spgemm(a, b, cache=False)
+    inter = plan.execute(a, b)
+    bound = np.asarray(chained_flop_bound(plan.row_nnz_c, a))
+    real = np.asarray(flops_per_row(inter, a))
+    assert (bound >= real).all()
+
+
+def test_finalize_is_the_single_sort_site():
+    a = rmat_csr(5, 3, "G500", seed=19)
+    cd = np.asarray(a.to_dense()) @ np.asarray(a.to_dense())
+    u = spgemm(a, a, int((cd != 0).sum()), algorithm="hash_jnp")
+    assert not u.sorted_cols
+    s = finalize(u, True)
+    assert s.sorted_cols and finalize(s, True) is s
+    assert finalize(u, False) is u
+    assert np.allclose(np.asarray(s.to_dense()), cd, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# MCL convergence pin (examples/mcl.py)
+# ---------------------------------------------------------------------------
+
+def test_mcl_recovers_planted_clusters():
+    from examples.mcl import clustered_graph, mcl
+    n_clusters, size = 3, 12
+    a = clustered_graph(n_clusters, size, seed=0)
+    labels, n_iters = mcl(a, max_iters=40)
+    assert n_iters < 40, "MCL must converge on the planted-partition graph"
+    truth = np.repeat(np.arange(n_clusters), size)
+    blocks = [set(labels[truth == k]) for k in range(n_clusters)]
+    assert all(len(s) == 1 for s in blocks), blocks
+    assert len({next(iter(s)) for s in blocks}) == n_clusters, blocks

@@ -44,23 +44,9 @@ VALS = np.array([0.5, 1.0, 1.5, 2.0], np.float32)
 # Oracles and builders
 # ---------------------------------------------------------------------------
 
-def _oracle(ad: np.ndarray, bd: np.ndarray, sr_name: str) -> np.ndarray:
-    """Independent oracle; plus_times goes through scipy.sparse."""
-    ap, bp = ad != 0, bd != 0
-    if sr_name == "plus_times":
-        return np.asarray((sp.csr_matrix(ad) @ sp.csr_matrix(bd)).todense(),
-                          np.float32)
-    if sr_name == "boolean":
-        return ((sp.csr_matrix(ap) @ sp.csr_matrix(bp)).todense() > 0) \
-            .astype(np.float32)
-    if sr_name == "plus_first":
-        return (ad @ bp.astype(np.float32)).astype(np.float32)
-    if sr_name == "min_plus":
-        s = np.where(ap[:, :, None] & bp[None, :, :],
-                     ad[:, :, None] + bd[None, :, :], np.inf)
-        out = s.min(axis=1)
-        return np.where(np.isinf(out), 0.0, out).astype(np.float32)
-    raise AssertionError(sr_name)
+# Single shared implementation (tests/_oracles.py): plus_times/boolean go
+# through scipy.sparse, the rest are numpy; also used by test_chain.py.
+from _oracles import semiring_oracle as _oracle  # noqa: E402
 
 
 def _mask_after(c: np.ndarray, mask_d: np.ndarray,

@@ -1,0 +1,103 @@
+#!/usr/bin/env python
+"""Execute every fenced ```python block in the given markdown files.
+
+The docs CI job: README.md and docs/API.md promise that their examples
+run, so this script extracts each fenced Python block and executes it in
+a fresh subprocess (blocks are self-contained by convention).  A block
+that exits nonzero fails the job with the file, line number, and output.
+
+Environment per block: ``PYTHONPATH=src`` (src-layout import) and a
+2-device host platform (``--xla_force_host_platform_device_count=2``
+prepended to ``XLA_FLAGS``) so the distributed examples exercise a real
+multi-shard mesh even on CPU CI.
+
+    python tools/run_doc_examples.py [files...]     # default: README.md docs/API.md
+"""
+from __future__ import annotations
+
+import os
+import pathlib
+import re
+import subprocess
+import sys
+import time
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+DEFAULT_FILES = ("README.md", "docs/API.md")
+_FENCE = re.compile(r"^```python\s*$")
+_CLOSE = re.compile(r"^```\s*$")
+
+
+def extract_blocks(path: pathlib.Path):
+    """Yield (start_lineno, code) for every ```python fenced block."""
+    lines = path.read_text().splitlines()
+    block: list[str] | None = None
+    start = 0
+    for i, line in enumerate(lines, 1):
+        if block is None:
+            if _FENCE.match(line):
+                block, start = [], i + 1
+        elif _CLOSE.match(line):
+            yield start, "\n".join(block) + "\n"
+            block = None
+        else:
+            block.append(line)
+    if block is not None:
+        raise SystemExit(f"{path}: unterminated ```python block at "
+                         f"line {start - 1}")
+
+
+def run_block(path: pathlib.Path, lineno: int, code: str) -> bool:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    env["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=2 "
+                        + env.get("XLA_FLAGS", "")).strip()
+    t0 = time.time()
+    tag = f"{path.relative_to(REPO)}:{lineno}"
+    try:
+        proc = subprocess.run([sys.executable, "-c", code], cwd=REPO,
+                              env=env, capture_output=True, text=True,
+                              timeout=600)
+    except subprocess.TimeoutExpired as e:
+        # report a hung block like any other failure and keep going
+        print(f"FAIL {tag} (timeout after {e.timeout:.0f}s)")
+        print("-" * 60)
+        print(code)
+        print("-" * 60)
+        for stream, sink in ((e.stdout, sys.stdout), (e.stderr, sys.stderr)):
+            if stream:
+                sink.write(stream if isinstance(stream, str)
+                           else stream.decode(errors="replace"))
+        return False
+    dt = time.time() - t0
+    if proc.returncode != 0:
+        print(f"FAIL {tag} ({dt:.1f}s)")
+        print("-" * 60)
+        print(code)
+        print("-" * 60)
+        sys.stdout.write(proc.stdout)
+        sys.stderr.write(proc.stderr)
+        return False
+    out = proc.stdout.strip().splitlines()
+    trailer = f"  | {out[-1]}" if out else ""
+    print(f"ok   {tag} ({dt:.1f}s){trailer}")
+    return True
+
+
+def main(argv=None) -> int:
+    files = [pathlib.Path(f) for f in (argv or sys.argv[1:])] or \
+        [REPO / f for f in DEFAULT_FILES]
+    n_blocks = failures = 0
+    for f in files:
+        f = f if f.is_absolute() else REPO / f
+        for lineno, code in extract_blocks(f):
+            n_blocks += 1
+            if not run_block(f, lineno, code):
+                failures += 1
+    print(f"{n_blocks - failures}/{n_blocks} doc examples passed")
+    return 1 if failures or not n_blocks else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
