@@ -39,6 +39,91 @@ def flops_rate(flop: float, seconds: float) -> str:
     return f"{2.0 * flop / seconds / 1e6:.1f}MFLOPS"
 
 
+def assert_bitwise_prefix(c, ref) -> None:
+    """Live-prefix bitwise equality of two CSRs.
+
+    The batched-subsystem contract (DESIGN.md section 13): padding is
+    capacity-only, so ``indptr``, ``nnz``, and the first ``nnz`` entries
+    of ``indices``/``data`` must match bit for bit while the padded tails
+    may differ in length.  Shared by ``tests/test_batch.py`` and the
+    ``bench_batch`` CI smoke so the two enforcement sites cannot drift.
+    """
+    nnz = int(c.nnz)
+    assert nnz == int(ref.nnz)
+    assert np.array_equal(np.asarray(c.indptr), np.asarray(ref.indptr))
+    assert np.array_equal(np.asarray(c.indices)[:nnz],
+                          np.asarray(ref.indices)[:nnz])
+    assert np.array_equal(np.asarray(c.data)[:nnz],
+                          np.asarray(ref.data)[:nnz])
+
+
+def batch_inspection_counters():
+    """Counters over every inspection entry point of the batched
+    subsystem: class-program builds, the symbolic phase, flop counting,
+    and the schedule pipeline.  One definition shared by
+    ``tests/test_batch.py`` and the ``bench_batch`` smoke so "zero
+    re-inspection" means the same thing at both enforcement sites.
+    Returns ``(counter, restore)``.
+    """
+    counter: dict = {}
+    restore = [
+        counted("repro.core.batch", "_build_class_program", counter),
+        counted("repro.core.batch", "symbolic", counter),
+        counted("repro.core.schedule", "flops_per_row", counter),
+        counted("repro.core.schedule", "make_schedule_eager", counter),
+    ]
+    return counter, lambda: [r() for r in restore]
+
+
+def batch_class_bound(pairs) -> int:
+    """The p2 capacity-class bound for a same-shape fleet:
+    ``ceil(log2 (max flop / min flop)) + 1`` (the +1 is the bucket
+    fencepost -- values in [min, max] can straddle that many powers of
+    two).  Shared by ``tests/test_batch.py`` and the ``bench_batch``
+    smoke."""
+    import math
+    from repro.core.schedule import flops_per_row
+    flops = [max(int(np.asarray(flops_per_row(a, b)).sum()), 1)
+             for a, b in pairs]
+    return math.ceil(math.log2(max(flops) / min(flops))) + 1
+
+
+def planned_loop(plan, pairs):
+    """The per-product planned reference path for a ``BatchedPlan`` fleet.
+
+    One ``SpGEMMPlan`` per product with the *class's* algorithm and the
+    batch plan's sortedness pinned -- identical numeric semantics to the
+    batched executor, paid as N dispatches.  Returns a zero-arg runner
+    (plans are built here, outside any timed region).  Shared by
+    ``tests/test_batch.py`` and the ``bench_batch`` smoke so the two
+    reference paths cannot drift.
+    """
+    from repro.core import plan_spgemm
+    plans = [plan_spgemm(a, b, algorithm=plan.algorithms[i],
+                         sorted_output=plan.sorted_output)
+             for i, (a, b) in enumerate(pairs)]
+
+    def run():
+        return [p.execute(a, b) for p, (a, b) in zip(plans, pairs)]
+
+    return run
+
+
+def rmat_fleet(n_products: int, scale: int, seed0: int = 0):
+    """Same-shape fleet with heterogeneous nnz/flop: mixed R-MAT presets
+    and edge factors, the per-expert / per-subgraph serving shape.
+    Shared by ``tests/test_batch.py`` and ``benchmarks/bench_batch.py``.
+    """
+    from repro.data.rmat import rmat_csr
+    pairs = []
+    for i in range(n_products):
+        preset = "G500" if i % 2 else "ER"
+        a = rmat_csr(scale, 1 + (i % 3), preset, seed=seed0 + i)
+        b = rmat_csr(scale, 1 + ((i + 1) % 4), "ER", seed=seed0 + 100 + i)
+        pairs.append((a, b))
+    return pairs
+
+
 def counted(module_name: str, attr: str, counter: dict):
     """Swap ``module.attr`` for a call-counting wrapper; return a restorer.
 

@@ -3,11 +3,19 @@
 Prints ``name,us_per_call,derived`` CSV.  ``--full`` runs the larger sizes;
 the default quick mode fits the single-core container (see
 benchmarks/common.py for the interpret-mode caveat).
+
+``--json PATH`` additionally writes the run as a machine-readable perf
+trajectory (``BENCH_spgemm.json`` by convention): every emitted row plus
+environment provenance, one file per run -- CI produces and uploads it on
+every push so regressions are diffable across commits.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import sys
+import time
 import traceback
 
 from . import common
@@ -18,6 +26,7 @@ from . import bench_moe_dispatch as moe_bench
 from . import bench_plan as plan_bench
 from . import bench_distributed as dist_bench
 from . import bench_chain as chain_bench
+from . import bench_batch as batch_bench
 
 
 SUITES = [
@@ -38,7 +47,31 @@ SUITES = [
     ("plan", lambda q: plan_bench.run(q)),
     ("distributed", lambda q: dist_bench.run(q)),
     ("chain", lambda q: chain_bench.run(q)),
+    ("batch", lambda q: batch_bench.run(q)),
 ]
+
+
+def write_json(path: str, suites_run, failures: int) -> None:
+    """Serialize ``common.ROWS`` + provenance as the perf trajectory."""
+    import jax
+    doc = {
+        "schema": 1,
+        "unix_time": int(time.time()),
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "python": platform.python_version(),
+        "machine": platform.machine(),
+        "suites": list(suites_run),
+        "failures": failures,
+        "rows": [
+            {"name": name, "us_per_call": round(us, 3), "derived": derived}
+            for name, us, derived in common.ROWS
+        ],
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"wrote {path}: {len(doc['rows'])} rows", file=sys.stderr)
 
 
 def main(argv=None) -> None:
@@ -46,19 +79,26 @@ def main(argv=None) -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", type=str, default=None,
                     help="comma-separated suite names")
+    ap.add_argument("--json", type=str, default=None, metavar="PATH",
+                    help="also write results as a machine-readable perf "
+                         "trajectory (e.g. BENCH_spgemm.json)")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")
     failures = 0
+    suites_run = []
     for name, fn in SUITES:
         if only and name not in only:
             continue
+        suites_run.append(name)
         try:
             fn(not args.full)
         except Exception:  # noqa: BLE001 - report and continue
             failures += 1
             print(f"{name},ERROR,", flush=True)
             traceback.print_exc()
+    if args.json:
+        write_json(args.json, suites_run, failures)
     if failures:
         sys.exit(1)
 

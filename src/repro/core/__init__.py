@@ -10,17 +10,20 @@ from .schedule import (flops_per_row, rows_to_bins, bin_flop, make_schedule,
                        max_flop_per_bin_row, masked_row_bound, guard_i32_flop,
                        chained_flop_bound)
 from .recipe import (SpGEMMStats, measure_stats, model_costs, recommend,
-                     choose_algorithm, choose_algorithm_from_stats)
+                     choose_algorithm, choose_algorithm_from_stats,
+                     aggregate_stats)
 from .plan import (SpGEMMPlan, plan_spgemm, structure_key, plan_cache_stats,
-                   clear_plan_cache)
+                   clear_plan_cache, PLAN_KINDS)
 from .distributed import (ShardedCSR, shard_csr_rows, reshard_rows,
                           unshard_rows, DistributedPlan, plan_spgemm_1d,
                           spgemm_1d, spmm_1d, SummaPlan, plan_spgemm_summa,
-                          spgemm_summa, summa_panel_bounds, multi_source_bfs
-                          as multi_source_bfs_1d)
+                          spgemm_summa, summa_panel_bounds, shard_batch,
+                          multi_source_bfs as multi_source_bfs_1d)
 from .chain import (ChainPlan, plan_chain, plan_galerkin, galerkin,
                     plan_power, GramPlan, plan_gram, gram,
-                    DistributedChainPlan, plan_chain_1d)
+                    DistributedChainPlan, plan_chain_1d,
+                    BatchedPowerPlan, plan_batch_power)
+from .batch import BatchClass, BatchedPlan, plan_batch, spgemm_batch
 
 __all__ = [
     "CSR", "BCSR", "ELL", "csr_to_bcsr", "bcsr_to_csr", "csr_transpose",
@@ -32,13 +35,15 @@ __all__ = [
     "lowest_p2", "lowest_p2_arr", "bin_table_sizes", "max_flop_per_bin_row",
     "masked_row_bound", "guard_i32_flop", "chained_flop_bound",
     "SpGEMMStats", "measure_stats", "model_costs", "recommend",
-    "choose_algorithm", "choose_algorithm_from_stats",
+    "choose_algorithm", "choose_algorithm_from_stats", "aggregate_stats",
     "SpGEMMPlan", "plan_spgemm", "structure_key", "plan_cache_stats",
-    "clear_plan_cache",
+    "clear_plan_cache", "PLAN_KINDS",
     "ShardedCSR", "shard_csr_rows", "reshard_rows", "unshard_rows",
     "DistributedPlan", "plan_spgemm_1d", "spgemm_1d", "spmm_1d",
     "SummaPlan", "plan_spgemm_summa", "spgemm_summa", "summa_panel_bounds",
-    "multi_source_bfs_1d",
+    "shard_batch", "multi_source_bfs_1d",
     "ChainPlan", "plan_chain", "plan_galerkin", "galerkin", "plan_power",
     "GramPlan", "plan_gram", "gram", "DistributedChainPlan", "plan_chain_1d",
+    "BatchedPowerPlan", "plan_batch_power",
+    "BatchClass", "BatchedPlan", "plan_batch", "spgemm_batch",
 ]

@@ -1,0 +1,530 @@
+"""Batched SpGEMM: plan and execute *fleets* of small products (DESIGN.md
+section 13).
+
+The paper's recipe assumes one large product per call, but serving-shaped
+traffic is fleets of small independent products: DBCSR-style batches of
+block multiplications in quantum chemistry (Bethune et al., the DBCSR
+Xeon-Phi port), per-expert MoE dispatch products, per-query masked
+products in graph serving.  Calling :func:`repro.core.plan.plan_spgemm`
+per product pays one inspection *and one compiled program* per member --
+a fleet of 64 slightly-different structures compiles 64 numeric programs
+and dispatches 64 times per step.
+
+:func:`plan_batch` inspects the whole fleet in one pass and groups the
+members into **p2-bucketed capacity classes** -- the same
+``bucket_caps=True`` power-of-two rounding :func:`plan_spgemm` uses for
+structure-drifting loops, applied across fleet members instead of across
+iterations.  A class is keyed by the p2-rounded shapes, mask presence,
+and the p2 bucket of the member's total flop (the dominant capacity;
+every other static cap correlates with it): within each same-shape,
+uniformly-masked subfleet whose flop spans a factor of ``R``, at most
+``ceil(log2 R) + 1`` numeric programs compile, not one per member
+(heterogeneous shapes add their own classes on top -- shapes cannot
+share a ``vmap``).
+Each class pads its members to the common static shape, stacks them, and
+executes one ``vmap``-ed numeric-only program with intermediates kept
+**unsorted** (the C8 finding, per batch element); the Pallas hash kernels
+cannot trace under ``vmap``, so the hash family runs its contract-
+equivalent jnp twin, exactly as inside ``shard_map``
+(``core.distributed``).
+
+Padding is *capacity-only*: the padded tail of a CSR is structurally
+empty (``nnz`` marks the live prefix), so the live prefix of every class
+member's output is bitwise-identical to what the exact-capacity
+per-product planned path produces -- asserted by ``tests/test_batch.py``
+and ``benchmarks/bench_batch.py --smoke``.
+
+Algorithm choice is per *class*, from the class's aggregate statistics
+(:func:`repro.core.recipe.aggregate_stats` + ``use_case="batch"``): one
+program per class means one algorithm per class, the batched analogue of
+``plan_spgemm_1d`` resolving ``auto`` once for the whole SPMD mesh.
+
+Plans are cached under a ``("batch", ...)`` kind in the shared plan LRU
+(per-kind occupancy in ``plan_cache_stats()["kinds"]``); a structure-
+identical fleet replans nothing, and repeat executes re-dispatch the
+already-compiled class programs with zero re-inspection.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .formats import CSR
+from .plan import cache_lookup, cache_store, structure_key
+from .recipe import aggregate_stats, choose_algorithm_from_stats, \
+    measure_stats
+from .semiring import Semiring, resolve_semiring
+from . import schedule as sched
+from .spgemm import (_canon_mask, _check_mask, finalize, spgemm_esc,
+                     spgemm_hash_jnp, spgemm_heap, symbolic)
+
+#: batched-executor algorithm substitutions, mirroring the shard_map table
+#: in ``core.distributed``: the Pallas hash kernels size their tables by
+#: eager inspection and cannot trace under ``vmap`` -- ``hash_jnp`` keeps
+#: the identical contract (two-phase capacity, unsorted select output).
+#: ``dense`` and ``bcsr`` are rejected outright (explicitly, below) --
+#: the dense oracle's explicit-zero semantics and the bcsr tile path
+#: both have no vmapped twin, and a silent substitution would change
+#: output structure without warning.
+_BATCH_ALGO = {"hash": "hash_jnp", "hash_vector": "hash_jnp"}
+
+
+def _pad_csr(a: CSR, n_rows: int, n_cols: int, cap: int) -> CSR:
+    """Pad a CSR to a class's static shape/capacity (structure-preserving).
+
+    Extra rows are empty (``indptr`` extends flat at its last value), the
+    extra entry capacity is zeros past the live prefix, and extra columns
+    cost nothing at all -- so the padded product's live output prefix is
+    bitwise what the unpadded product computes.  jnp ops throughout: this
+    runs on device at execute time, per member, per call.
+    """
+    assert n_rows >= a.n_rows and n_cols >= a.n_cols and cap >= a.cap, \
+        f"class shape ({n_rows}, {n_cols})/cap {cap} cannot hold " \
+        f"{a.shape}/cap {a.cap}"
+    ip = a.indptr
+    if n_rows > a.n_rows:
+        ip = jnp.concatenate(
+            [ip, jnp.broadcast_to(ip[-1], (n_rows - a.n_rows,))])
+    ind = jnp.pad(a.indices, (0, cap - a.cap))
+    dat = jnp.pad(a.data, (0, cap - a.cap))
+    return CSR(ip, ind, dat, a.nnz, (n_rows, n_cols),
+               sorted_cols=a.sorted_cols)
+
+
+def _stack_csr(mats: Sequence[CSR], sorted_cols: bool) -> CSR:
+    """Stack equal-shape CSRs leaf-wise (leading batch dim on every array).
+
+    ``sorted_cols`` is static metadata and must be uniform across the
+    stack; the class flag is the AND over members (downgrading a sorted
+    member costs nothing -- only the heap path *requires* the flag, and a
+    class only records heap when every member is sorted).
+    """
+    mats = [dataclasses.replace(m, sorted_cols=sorted_cols) for m in mats]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *mats)
+
+
+def _build_class_program(cls: "BatchClass",
+                         shapes_a: Tuple[Tuple[int, int], ...],
+                         shapes_b: Tuple[Tuple[int, int], ...],
+                         semiring: str, complement_mask: bool,
+                         sorted_output: bool, a_shared: bool = False,
+                         b_shared: bool = False):
+    """One jitted program for one capacity class: pad every member to the
+    class's static shape, stack, run the ``vmap``-ed numeric body, unpack
+    back to per-member CSRs -- all inside a single dispatch (padding and
+    slicing as eager per-member ops would cost more than the fleet math).
+
+    ``shapes_a``/``shapes_b`` are the members' *original* shapes (class
+    order), so the unpacked outputs carry exact row counts again.  With
+    ``a_shared``/``b_shared`` the corresponding operand arrives *once*
+    and broadcasts through ``vmap(in_axes=None)`` instead of being
+    stacked -- a fleet of N products against one shared feature matrix
+    reads that matrix once, not N copies (the per-expert MoE dispatch
+    shape).  This builder is the unit the "compiled programs per fleet"
+    accounting counts: the plan memoizes the result per (class,
+    sortedness, sharing), so a fleet compiles exactly ``n_classes``
+    programs and repeat executes build nothing
+    (``benchmarks/bench_batch.py --smoke`` wraps it in a call counter to
+    assert both).
+    """
+    sr = resolve_semiring(semiring)
+    algo = cls.algorithm
+    (M, K), (_, N) = cls.shape_a, cls.shape_b
+
+    def one(a: CSR, b: CSR, mask: Optional[CSR]) -> CSR:
+        if algo == "esc":
+            out = spgemm_esc(a, b, cls.cap_c, flop_cap=cls.flop_cap,
+                             semiring=sr, mask=mask,
+                             complement_mask=complement_mask)
+        elif algo == "hash_jnp":
+            out = spgemm_hash_jnp(a, b, cls.cap_c, flop_cap=cls.flop_cap,
+                                  semiring=sr, mask=mask,
+                                  complement_mask=complement_mask)
+        elif algo == "heap":
+            out = spgemm_heap(a, b, row_cap=cls.row_cap,
+                              k_width=cls.k_width, cap_c=cls.cap_c,
+                              semiring=sr, mask=mask,
+                              complement_mask=complement_mask)
+        else:
+            raise ValueError(f"class holds unknown algorithm {algo!r}")
+        return finalize(out, sorted_output)
+
+    masked = cls.mask_parts is not None
+
+    def prep(ops, shared, rows, cols, cap, flag):
+        if shared:
+            return dataclasses.replace(
+                _pad_csr(ops, rows, cols, cap), sorted_cols=flag)
+        return _stack_csr([_pad_csr(x, rows, cols, cap) for x in ops],
+                          flag)
+
+    def fleet(a_in, b_in, *maybe_mask) -> Tuple[CSR, ...]:
+        a_proc = prep(a_in, a_shared, M, K, cls.cap_a, cls.a_sorted)
+        b_proc = prep(b_in, b_shared, K, N, cls.cap_b, cls.b_sorted)
+        axes = (None if a_shared else 0, None if b_shared else 0)
+        if masked:
+            c_stack = jax.vmap(lambda a, b, m: one(a, b, m),
+                               in_axes=axes + (0,))(
+                a_proc, b_proc, maybe_mask[0])
+        else:
+            c_stack = jax.vmap(lambda a, b: one(a, b, None),
+                               in_axes=axes)(a_proc, b_proc)
+        outs = []
+        for j in range(len(shapes_a)):
+            m_j, n_j = shapes_a[j][0], shapes_b[j][1]
+            outs.append(CSR(c_stack.indptr[j, :m_j + 1],
+                            c_stack.indices[j], c_stack.data[j],
+                            c_stack.nnz[j], (m_j, n_j),
+                            sorted_cols=c_stack.sorted_cols))
+        return tuple(outs)
+
+    return jax.jit(fleet)
+
+
+@dataclass(frozen=True)
+class BatchClass:
+    """One capacity class: members that share a compiled numeric program.
+
+    All static shapes/capacities are the p2-rounded class maxima; the
+    per-member exact numbers live on the owning :class:`BatchedPlan`.
+    ``mask_parts`` holds the members' canonicalized masks, padded to the
+    class shape and stacked (structure frozen with the plan, like the
+    mask on a ``SpGEMMPlan``).
+    """
+    members: Tuple[int, ...]
+    algorithm: str
+    shape_a: Tuple[int, int]      # padded (M, K)
+    shape_b: Tuple[int, int]      # padded (K, N)
+    cap_a: int
+    cap_b: int
+    cap_c: int
+    flop_cap: int
+    row_cap: int
+    k_width: int
+    a_sorted: bool
+    b_sorted: bool
+    mask_parts: Optional[CSR] = dataclasses.field(repr=False)
+    total_flop: int = 0
+    #: all members held the *same object* for this operand at plan time:
+    #: the executor may broadcast it (vmap in_axes=None) instead of
+    #: stacking N copies -- re-verified by identity at execute time, so a
+    #: caller legally substituting per-member values falls back to the
+    #: stacked program.
+    a_shared: bool = False
+    b_shared: bool = False
+
+    @property
+    def n_members(self) -> int:
+        return len(self.members)
+
+
+@dataclass(frozen=True)
+class BatchedPlan:
+    """Frozen inspection of a fleet of products ``[(A_i, B_i), ...]``.
+
+    ``classes[class_of[i]]`` is product ``i``'s capacity class;
+    :meth:`execute` pads/stacks each class's operands, runs the class's
+    single vmapped numeric program, and returns per-product CSRs in input
+    order (original shapes, class capacity, exact ``nnz``).
+    """
+    key: tuple = dataclasses.field(repr=False)
+    classes: Tuple[BatchClass, ...] = dataclasses.field(repr=False)
+    class_of: Tuple[int, ...]
+    semiring: str
+    complement_mask: bool
+    sorted_output: bool
+    shapes_a: Tuple[Tuple[int, int], ...]
+    shapes_b: Tuple[Tuple[int, int], ...]
+    caps_a: Tuple[int, ...]
+    caps_b: Tuple[int, ...]
+    nnzs_a: Tuple[int, ...]
+    nnzs_b: Tuple[int, ...]
+    nnz_cs: Tuple[int, ...]       # exact per-product nnz(C_i)
+    total_flop: int
+
+    @property
+    def n_products(self) -> int:
+        return len(self.class_of)
+
+    @property
+    def n_classes(self) -> int:
+        return len(self.classes)
+
+    @property
+    def algorithms(self) -> Tuple[str, ...]:
+        """Per-product resolved algorithm (its class's choice)."""
+        return tuple(self.classes[c].algorithm for c in self.class_of)
+
+    @property
+    def nnz_c(self) -> int:
+        return sum(self.nnz_cs)
+
+    def check_structure(self, pairs: Sequence[Tuple[CSR, CSR]]) -> None:
+        """Cheap shapes/caps/nnz check of every member against the plan.
+
+        Shapes/caps are static Python and cost nothing.  The per-member
+        ``int(op.nnz)`` looks like O(2N) device round-trips on the hot
+        dispatch path, but jax memoizes the host value on the array
+        itself, so a serving loop re-executing the same fleet objects
+        pays each transfer once per operand lifetime, not per call
+        (stacking the scalars into one transfer was measured *slower* --
+        the eager concatenate dispatch costs more than the amortized
+        reads).
+        """
+        assert len(pairs) == self.n_products, \
+            f"plan is for {self.n_products} products, got {len(pairs)}"
+        for i, (a, b) in enumerate(pairs):
+            assert a.shape == self.shapes_a[i] and \
+                b.shape == self.shapes_b[i], \
+                f"product {i}: planned {self.shapes_a[i]}x" \
+                f"{self.shapes_b[i]}, got {a.shape}x{b.shape}"
+            assert a.cap == self.caps_a[i] and b.cap == self.caps_b[i], \
+                f"product {i}: operand capacities differ from the " \
+                f"planned structure"
+            for op, planned in ((a, self.nnzs_a[i]), (b, self.nnzs_b[i])):
+                if not isinstance(op.nnz, jax.core.Tracer):
+                    assert int(op.nnz) == planned, \
+                        f"product {i} nnz differs from the planned " \
+                        f"structure (replan or clear_plan_cache)"
+
+    def _class_executor(self, ci: int, sorted_output: bool,
+                        a_shared: bool, b_shared: bool):
+        cache = self.__dict__.get("_executors")
+        if cache is None:
+            cache = {}
+            object.__setattr__(self, "_executors", cache)
+        key = (ci, sorted_output, a_shared, b_shared)
+        fn = cache.get(key)
+        if fn is None:
+            cls = self.classes[ci]
+            fn = _build_class_program(
+                cls, tuple(self.shapes_a[i] for i in cls.members),
+                tuple(self.shapes_b[i] for i in cls.members),
+                self.semiring, self.complement_mask, sorted_output,
+                a_shared=a_shared, b_shared=b_shared)
+            cache[key] = fn
+        return fn
+
+    def execute(self, pairs: Sequence[Tuple[CSR, CSR]],
+                sorted_output: Optional[bool] = None) -> List[CSR]:
+        """Numeric phase only, whole fleet: zero re-inspection.
+
+        One jitted dispatch per capacity class (pad + stack + vmapped
+        numeric body + unpack all live inside the class program); results
+        come back in input order with each product's original shape
+        (capacity is the class's static ``cap_c``; ``nnz`` is exact).
+        ``sorted_output`` overrides the plan's recorded sortedness for
+        this call -- a pure epilogue, exactly like ``SpGEMMPlan.execute``.
+        """
+        pairs = [tuple(p) for p in pairs]
+        self.check_structure(pairs)
+        so = self.sorted_output if sorted_output is None else sorted_output
+        outs: List[Optional[CSR]] = [None] * len(pairs)
+        for ci, cls in enumerate(self.classes):
+            a_ops = tuple(pairs[i][0] for i in cls.members)
+            b_ops = tuple(pairs[i][1] for i in cls.members)
+            if cls.algorithm == "heap":
+                # the class program force-stamps the plan-time sorted
+                # flags before vmapping, so an operand downgraded to
+                # unsorted since plan time would silently feed the heap
+                # merge out of order -- fail loudly instead (static
+                # metadata, costs nothing)
+                assert all(a.sorted_cols for a in a_ops) and \
+                    all(b.sorted_cols for b in b_ops), \
+                    "heap class executed with an unsorted operand " \
+                    "(structure drifted since plan time; replan)"
+            # broadcast an operand only when the caller actually passed
+            # one object for the whole class this call (values included);
+            # a vmap needs at least one mapped axis, so when everything
+            # is shared and unmasked the A side stays stacked
+            b_shared = cls.b_shared and len(b_ops) > 1 and \
+                all(b is b_ops[0] for b in b_ops)
+            a_shared = cls.a_shared and len(a_ops) > 1 and \
+                all(a is a_ops[0] for a in a_ops) and \
+                (b_shared is False or cls.mask_parts is not None)
+            args = ((a_ops[0] if a_shared else a_ops),
+                    (b_ops[0] if b_shared else b_ops))
+            if cls.mask_parts is not None:
+                args = args + (cls.mask_parts,)
+            c_list = self._class_executor(ci, so, a_shared, b_shared)(*args)
+            for j, i in enumerate(cls.members):
+                outs[i] = c_list[j]
+        return outs
+
+    __call__ = execute
+
+
+def plan_batch(pairs: Sequence[Tuple[CSR, CSR]], *,
+               algorithm: str = "auto",
+               semiring: str | Semiring = "plus_times",
+               masks: Optional[Sequence[Optional[CSR]]] = None,
+               complement_mask: bool = False, sorted_output: bool = False,
+               cache: bool = True) -> BatchedPlan:
+    """Inspect a fleet of products once; freeze a :class:`BatchedPlan`.
+
+    ``pairs`` is a sequence of ``(A_i, B_i)`` CSRs -- repeat the same
+    object to share one A or one B across the fleet (per-expert dispatch
+    against one feature matrix, one graph against per-query frontiers);
+    structure digests are memoized on the instance, so sharing also makes
+    the cache key cheap.  ``masks`` optionally gives one structural mask
+    per product (``None`` entries allowed); masked and unmasked members
+    never share a class.
+
+    Inspection is one pass: per-member flop profile + exact symbolic
+    counts, then p2 capacity-class grouping, then one recipe choice per
+    class from the class's aggregate statistics
+    (``use_case="batch"``).  ``algorithm`` other than ``"auto"`` pins
+    every class (with the hash family running its jnp twin, like the
+    distributed executor).  Cached under a ``("batch", ...)`` key in the
+    shared plan LRU.
+    """
+    pairs = [tuple(p) for p in pairs]
+    assert pairs, "a batch needs at least one product"
+    n = len(pairs)
+    for i, (a, b) in enumerate(pairs):
+        # fail loudly like _check_chain_shapes: a silent mismatch would
+        # gather B row lengths at clamped out-of-range indices and
+        # produce plausible wrong numerics
+        assert a.n_cols == b.n_rows, \
+            f"batch member {i}: {a.shape} @ {b.shape} shapes do not compose"
+    masks = list(masks) if masks is not None else [None] * n
+    assert len(masks) == n, \
+        f"masks must align with pairs: {len(masks)} != {n}"
+    sr = resolve_semiring(semiring)
+    if algorithm == "heap":
+        for i, (a, b) in enumerate(pairs):
+            if not (a.sorted_cols and b.sorted_cols):
+                raise AssertionError("heap path requires sorted inputs")
+    if algorithm in ("bcsr", "dense"):
+        raise NotImplementedError(
+            f"the {algorithm} path cannot run under the batched (vmapped) "
+            f"executor; pick esc/heap/hash")
+
+    key = ("batch",
+           tuple((structure_key(a), structure_key(b),
+                  None if m is None else structure_key(m))
+                 for (a, b), m in zip(pairs, masks)),
+           sr.name, complement_mask, sorted_output, algorithm)
+    if cache:
+        hit = cache_lookup(key)
+        if hit is not None:
+            return hit
+
+    # --- one inspection pass over the fleet ----------------------------
+    infos = []
+    for (a, b), m in zip(pairs, masks):
+        _check_mask(a, b, m)
+        m = _canon_mask(m)
+        flop = sched.flops_per_row(a, b)
+        total_flop = int(jnp.sum(flop)) if flop.size else 0
+        # p2-bucketed expansion bound: exact counts either way, but the
+        # jitted symbolic phase then compiles one program per flop bucket
+        # instead of one per member (inspection cost scales with classes)
+        row_nnz_c, _, _, _ = symbolic(
+            a, b, mask=m, complement_mask=complement_mask,
+            flop_cap=sched.lowest_p2(max(total_flop, 1)))
+        stats = measure_stats(a, b, row_nnz_c=row_nnz_c, mask=m,
+                              complement_mask=complement_mask)
+        infos.append(dict(
+            mask=m, total_flop=total_flop, stats=stats,
+            nnz_c=int(jnp.sum(row_nnz_c)),
+            row_cap=max(int(jnp.max(row_nnz_c)) if row_nnz_c.size else 0,
+                        1),
+            k_width=max(int(jnp.max(a.row_nnz())) if a.n_rows else 0, 1)))
+
+    # --- p2 capacity-class grouping ------------------------------------
+    # The class key buckets shapes and the member's total flop (the
+    # dominant capacity -- cap_c/row_cap/k_width correlate with it), so a
+    # fleet with flop spread R lands in <= ceil(log2 R) + 1 classes; all
+    # other class capacities are the p2-rounded class maxima.
+    p2 = sched.lowest_p2
+    groups: dict = {}
+    for i, ((a, b), info) in enumerate(zip(pairs, infos)):
+        gk = (p2(max(a.n_rows, 1)), p2(max(a.n_cols, 1)),
+              p2(max(b.n_cols, 1)), info["mask"] is not None,
+              p2(max(info["total_flop"], 1)))
+        groups.setdefault(gk, []).append(i)
+
+    classes: List[BatchClass] = []
+    class_of = [0] * n
+    for gk in sorted(groups):
+        idxs = groups[gk]
+        M, K, N = gk[0], gk[1], gk[2]
+        masked = gk[3]
+        a_sorted = all(pairs[i][0].sorted_cols for i in idxs)
+        b_sorted = all(pairs[i][1].sorted_cols for i in idxs)
+        algo = algorithm
+        if algo == "auto":
+            agg = aggregate_stats([infos[i]["stats"] for i in idxs])
+            algo = choose_algorithm_from_stats(
+                agg, sorted_output, use_case="batch", semiring=sr.name)
+        algo = _BATCH_ALGO.get(algo, algo)
+        if algo == "heap" and not (a_sorted and b_sorted):
+            # recipe picked heap on its merits, but a member cannot feed
+            # it; hash keeps the unsorted contract (same fallback as
+            # plan_spgemm)
+            algo = "hash_jnp"
+        mask_parts = None
+        if masked:
+            mcap = p2(max(max(infos[i]["mask"].cap for i in idxs), 1))
+            mask_parts = _stack_csr(
+                [_pad_csr(infos[i]["mask"], M, N, mcap) for i in idxs],
+                True)
+        cls = BatchClass(
+            members=tuple(idxs), algorithm=algo, shape_a=(M, K),
+            shape_b=(K, N),
+            a_shared=all(pairs[i][0] is pairs[idxs[0]][0] for i in idxs),
+            b_shared=all(pairs[i][1] is pairs[idxs[0]][1] for i in idxs),
+            cap_a=p2(max(max(pairs[i][0].cap for i in idxs), 1)),
+            cap_b=p2(max(max(pairs[i][1].cap for i in idxs), 1)),
+            cap_c=p2(max(max(infos[i]["nnz_c"] for i in idxs), 1)),
+            flop_cap=p2(max(max(infos[i]["total_flop"] for i in idxs), 1)),
+            row_cap=p2(max(infos[i]["row_cap"] for i in idxs)),
+            k_width=p2(max(infos[i]["k_width"] for i in idxs)),
+            a_sorted=a_sorted, b_sorted=b_sorted, mask_parts=mask_parts,
+            total_flop=sum(infos[i]["total_flop"] for i in idxs))
+        for i in idxs:
+            class_of[i] = len(classes)
+        classes.append(cls)
+
+    plan = BatchedPlan(
+        key=key, classes=tuple(classes), class_of=tuple(class_of),
+        semiring=sr.name, complement_mask=complement_mask,
+        sorted_output=sorted_output,
+        shapes_a=tuple(a.shape for a, _ in pairs),
+        shapes_b=tuple(b.shape for _, b in pairs),
+        caps_a=tuple(a.cap for a, _ in pairs),
+        caps_b=tuple(b.cap for _, b in pairs),
+        nnzs_a=tuple(int(a.nnz) for a, _ in pairs),
+        nnzs_b=tuple(int(b.nnz) for _, b in pairs),
+        nnz_cs=tuple(info["nnz_c"] for info in infos),
+        total_flop=sum(info["total_flop"] for info in infos))
+    if cache:
+        cache_store(key, plan)
+    return plan
+
+
+def spgemm_batch(pairs: Sequence[Tuple[CSR, CSR]], *,
+                 algorithm: str = "auto",
+                 semiring: str | Semiring = "plus_times",
+                 masks: Optional[Sequence[Optional[CSR]]] = None,
+                 complement_mask: bool = False,
+                 sorted_output: bool = False,
+                 plan: Optional[BatchedPlan] = None,
+                 cache: bool = True) -> List[CSR]:
+    """One-shot planned fleet product: ``[A_i @ B_i for i in fleet]``.
+
+    Plans (or pulls from the shared cache -- a repeat fleet on the same
+    structures runs numeric-only) and executes.  With ``plan=`` every
+    other argument except ``pairs`` is ignored, mirroring
+    ``spgemm(plan=)``.
+    """
+    if plan is None:
+        plan = plan_batch(pairs, algorithm=algorithm, semiring=semiring,
+                          masks=masks, complement_mask=complement_mask,
+                          sorted_output=sorted_output, cache=cache)
+    return plan.execute(pairs)

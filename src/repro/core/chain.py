@@ -270,6 +270,112 @@ def plan_power(a: CSR, k: int, **kw) -> ChainPlan:
 
 
 # ----------------------------------------------------------------------------
+# Batched powers: A_i^k over a fleet of subgraphs (core.batch x core.chain)
+# ----------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class BatchedPowerPlan:
+    """Frozen ``[A_i^k for i in fleet]``: one :class:`repro.core.batch.
+    BatchedPlan` per chain stage, intermediates unsorted between stages.
+
+    The MCL-over-many-subgraphs shape: stage ``j`` multiplies the fleet's
+    (not-yet-sorted) intermediates by the original operands in one batched
+    program per capacity class, so drifting per-subgraph structures share
+    compiled programs along *both* axes -- across the fleet (p2 capacity
+    classes) and across stages (the batch planner's built-in p2 rounding,
+    the same program-sharing ``bucket_caps=True`` buys single products).
+    """
+    key: tuple = dataclasses.field(repr=False)
+    stages: Tuple = dataclasses.field(repr=False)    # BatchedPlans
+    semiring: str
+    sorted_output: bool
+    n_products: int
+    shapes: Tuple[Tuple[int, int], ...]
+    nnz_cs: Tuple[int, ...]        # final stage, per product
+
+    @property
+    def n_stages(self) -> int:
+        return len(self.stages)
+
+    @property
+    def n_classes(self) -> int:
+        """Compiled numeric programs across the whole plan."""
+        return sum(p.n_classes for p in self.stages)
+
+    def execute(self, mats: Sequence[CSR],
+                sorted_output: Optional[bool] = None) -> list:
+        """Numeric phase only, fleet x stages; returns per-product CSRs.
+
+        Intermediates stay unsorted between stages (C8 at every hop, per
+        batch element); only the final stage pays the sort epilogue, and
+        only when asked.
+        """
+        mats = list(mats)
+        assert len(mats) == self.n_products, \
+            f"plan is for {self.n_products} products, got {len(mats)}"
+        so = self.sorted_output if sorted_output is None else sorted_output
+        cur = mats
+        for j, stage in enumerate(self.stages):
+            last = j == len(self.stages) - 1
+            cur = stage.execute(list(zip(cur, mats)),
+                                sorted_output=so if last else False)
+        return cur
+
+    __call__ = execute
+
+
+def plan_batch_power(mats: Sequence[CSR], k: int, *,
+                     algorithm: str = "auto",
+                     semiring: str | Semiring = "plus_times",
+                     sorted_output: bool = False,
+                     cache: bool = True) -> BatchedPowerPlan:
+    """Inspect ``[A_i^k for i in fleet]`` once; freeze the staged batch.
+
+    Stage ``j``'s fleet pairs the stage ``j-1`` intermediates (materialized
+    at plan time, exactly like :func:`plan_chain`) with the original
+    operands; every stage is a :func:`repro.core.batch.plan_batch` whose
+    p2 capacity classes are shared through the plan LRU, so MCL-style
+    iterations whose subgraph structures drift re-plan only the members
+    whose flop bucket actually moved.  Cached under ``("batch_power",
+    ...)`` in the shared LRU.
+    """
+    from .batch import plan_batch
+    mats = list(mats)
+    assert mats, "a batched power needs at least one operand"
+    assert k >= 2, "plan_batch_power needs k >= 2"
+    for m in mats:
+        assert m.n_rows == m.n_cols, \
+            f"powers need square operands; got {m.shape}"
+    sr = resolve_semiring(semiring)
+    key = ("batch_power", tuple(structure_key(m) for m in mats), k,
+           sr.name, sorted_output, algorithm)
+    if cache:
+        hit = cache_lookup(key)
+        if hit is not None:
+            return hit
+
+    stages = []
+    cur = mats
+    for j in range(k - 1):
+        last = j == k - 2
+        stage = plan_batch(list(zip(cur, mats)), algorithm=algorithm,
+                           semiring=sr.name,
+                           sorted_output=sorted_output if last else False,
+                           cache=cache)
+        stages.append(stage)
+        if not last:
+            cur = stage.execute(list(zip(cur, mats)))
+
+    plan = BatchedPowerPlan(
+        key=key, stages=tuple(stages), semiring=sr.name,
+        sorted_output=sorted_output, n_products=len(mats),
+        shapes=tuple(m.shape for m in mats), nnz_cs=stages[-1].nnz_cs)
+    if cache:
+        cache_store(key, plan)
+    return plan
+
+
+# ----------------------------------------------------------------------------
 # Gram product: A^T A via a transpose-aware plan
 # ----------------------------------------------------------------------------
 

@@ -444,6 +444,40 @@ def plan_spgemm_1d(a_sh: ShardedCSR, b: CSR, *, algorithm: str = "auto",
     return plan
 
 
+def shard_batch(pairs, n_shards: int, weights=None
+                ) -> Tuple[Tuple[int, ...], ...]:
+    """Round-robin *whole products* of a fleet across mesh chips.
+
+    The batched subsystem's unit of distribution is the product, not the
+    row: a fleet of small independent products (``core.batch``) has no
+    cross-product reduction, so each chip simply owns a sub-fleet and
+    runs its own :func:`repro.core.batch.plan_batch` -- embarrassingly
+    parallel, zero collectives (the DBCSR batched-multiply distribution
+    shape, vs the row partition ``shard_csr_rows`` uses for one large
+    product).
+
+    ``pairs`` is the fleet (only its length is read) or an int count.
+    Plain round-robin by default; with ``weights`` (e.g. each product's
+    ``total_flop`` from a plan, or ``nnz``) the round-robin visits
+    products in descending weight order, so consecutive heavy products
+    land on different chips -- the fleet analogue of the equal-flop row
+    partition.  Returns ``n_shards`` tuples of product indices; every
+    index appears exactly once.
+    """
+    n = pairs if isinstance(pairs, int) else len(pairs)
+    assert n_shards >= 1, n_shards
+    if weights is None:
+        order = range(n)
+    else:
+        w = np.asarray(weights)
+        assert w.shape == (n,), (w.shape, n)
+        order = np.argsort(-w, kind="stable")
+    assign: list = [[] for _ in range(n_shards)]
+    for pos, i in enumerate(order):
+        assign[pos % n_shards].append(int(i))
+    return tuple(tuple(s) for s in assign)
+
+
 # ----------------------------------------------------------------------------
 # 1D row-partitioned products
 # ----------------------------------------------------------------------------

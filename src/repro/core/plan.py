@@ -82,6 +82,13 @@ _STATS = {"hits": 0, "misses": 0}
 #: maximum cached plans; oldest-used evicted first.
 PLAN_CACHE_CAPACITY = 256
 
+#: every plan-kind namespace that may appear as a cache key's leading
+#: string.  ``plan_cache_stats()["kinds"]`` reports a zero entry for each
+#: registered kind even on a cold cache, so dashboards can key on a kind
+#: unconditionally; new plan families register here when they add a kind.
+PLAN_KINDS = ("spgemm", "dist_1d", "summa", "chain", "chain_1d", "gram",
+              "batch", "batch_power")
+
 
 def plan_cache_stats() -> dict:
     """Copy of the cache counters: ``{'hits', 'misses', 'size', 'kinds'}``.
@@ -89,10 +96,13 @@ def plan_cache_stats() -> dict:
     ``kinds`` counts live entries per plan *kind* -- the string namespace
     every key leads with: ``"spgemm"`` (single-node), ``"dist_1d"`` /
     ``"summa"`` (``core.distributed``), ``"chain"`` / ``"chain_1d"`` /
-    ``"gram"`` (``core.chain``).  All kinds share one LRU, one capacity
-    bound (:data:`PLAN_CACHE_CAPACITY`), and one :func:`clear_plan_cache`.
+    ``"gram"`` (``core.chain``), ``"batch"`` / ``"batch_power"``
+    (``core.batch``).  Every kind in :data:`PLAN_KINDS` is present in the
+    dict -- zero when it has no live entries -- so a cold cache never
+    KeyErrors a dashboard.  All kinds share one LRU, one capacity bound
+    (:data:`PLAN_CACHE_CAPACITY`), and one :func:`clear_plan_cache`.
     """
-    kinds: dict = {}
+    kinds: dict = {kind: 0 for kind in PLAN_KINDS}
     for key in _CACHE:
         kind = key[0] if isinstance(key[0], str) else "spgemm"
         kinds[kind] = kinds.get(kind, 0) + 1

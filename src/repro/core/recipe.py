@@ -138,6 +138,42 @@ def measure_stats(a: CSR, b: CSR, row_nnz_c=None,
         mask_density=mask_density, has_mask=mask is not None)
 
 
+def aggregate_stats(stats_list) -> SpGEMMStats:
+    """Fleet-level statistics for a *batch* of products (``core.batch``).
+
+    Count-like fields (``n_rows``, ``nnz_a``, ``flop``, ``nnz_c_est``)
+    sum across the fleet -- the batched executor runs the fleet as
+    stacked rows of one logical product, which is what the Eq. 1 / Eq. 2
+    terms then describe; bound-like fields (``max_row_flop``, ``n_cols``)
+    take the max; the derived ratios (``row_skew``,
+    ``compression_ratio``, ``density_ef``) are recomputed from the
+    aggregates rather than averaged, so one heavy product dominates
+    exactly as one heavy row dominates within a product.  ``has_mask`` is true if *any* member is masked
+    (a masked member forces the generalized accumulators on its class);
+    ``mask_density`` is the member mean.  ``block_density`` stays 0 -- the
+    bcsr tile path cannot run under the batched (vmapped) executor.
+    """
+    stats_list = list(stats_list)
+    assert stats_list, "aggregate_stats needs at least one member"
+    n_rows = sum(s.n_rows for s in stats_list)
+    nnz_a = sum(s.nnz_a for s in stats_list)
+    flop = sum(s.flop for s in stats_list)
+    nnz_c = sum(s.nnz_c_est for s in stats_list)
+    max_row_flop = max(s.max_row_flop for s in stats_list)
+    mean_flop = flop / max(n_rows, 1)
+    return SpGEMMStats(
+        n_rows=n_rows, n_cols=max(s.n_cols for s in stats_list),
+        nnz_a=nnz_a, flop=flop, nnz_c_est=max(nnz_c, 1.0),
+        max_row_flop=max_row_flop,
+        mean_row_nnz_a=nnz_a / max(n_rows, 1),
+        row_skew=max_row_flop / max(mean_flop, 1e-9),
+        compression_ratio=flop / max(nnz_c, 1.0),
+        density_ef=nnz_a / max(n_rows, 1), block_density=0.0,
+        mask_density=(sum(s.mask_density for s in stats_list)
+                      / len(stats_list)),
+        has_mask=any(s.has_mask for s in stats_list))
+
+
 # ---------------------------------------------------------------------------
 # Theoretical cost model (Eq. 1 / Eq. 2)
 # ---------------------------------------------------------------------------
@@ -177,7 +213,7 @@ def choose_algorithm_from_stats(stats: SpGEMMStats, sorted_output: bool,
                                 semiring: str = "plus_times") -> str:
     """Reproduction of Table 4 (+ section 4.2.4 reasoning).
 
-    use_case: "AxA" | "LxU" | "tall_skinny" | "masked".
+    use_case: "AxA" | "LxU" | "tall_skinny" | "masked" | "batch".
 
     Extensions beyond Table 4 (DESIGN.md section 7):
       * unsorted boolean/any_pair products route to the hash family: the
@@ -191,6 +227,22 @@ def choose_algorithm_from_stats(stats: SpGEMMStats, sorted_output: bool,
     high_cr = stats.compression_ratio > 2.0
     dense_ef = stats.density_ef > 8.0
     skewed = stats.row_skew > 8.0
+
+    if use_case == "batch":
+        # Fleet of small products fused into one vmapped program
+        # (core.batch): the Pallas kernels cannot run under vmap, so the
+        # families on offer are esc / heap / hash_jnp -- and the stats are
+        # the *aggregate* of a capacity class (recipe.aggregate_stats).
+        # Unsorted output keeps the C8 default for every semiring: the
+        # hash family's select order costs nothing extra and skips every
+        # sort (for boolean/any_pair it is also the Table-4 row).  Sorted
+        # requests split on compression ratio exactly like L x U: heap's
+        # one-phase merge wins while outputs stay sparse (Eq. 1's log
+        # factor is per a-row nnz), esc amortizes its single big sort
+        # once the fleet's expansion is compressible.
+        if sorted_output:
+            return "esc" if high_cr else "heap"
+        return "hash"
 
     # TPU extension: clustered nonzeros -> MXU block kernel regardless of
     # the scalar-regime columns (the tile product amortizes everything).

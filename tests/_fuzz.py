@@ -1,0 +1,168 @@
+"""Reusable structure generators + property-based strategies for the
+differential SpGEMM suites.
+
+One home for the CSR/product generators that used to live inline in
+``test_differential.py``, so every fuzz layer (single products, batched
+fleets, future suites) draws from the same structure space: rectangular
+shapes, empty rows/columns, empty matrices, duplicate-free sorted and
+*unsorted* CSRs, dyadic values.
+
+The pure-numpy helpers in the first half (``VALS``, :func:`rand_dense`,
+:func:`csr_of`, :func:`scramble_rows`) import unconditionally -- the
+deterministic grids of ``test_differential.py`` / ``test_batch.py`` /
+``test_hash_saturation.py`` share them with no optional dependency.  The
+hypothesis *strategies* in the second half exist only when the optional
+``hypothesis`` extra is installed; consumers guard exactly like the old
+inline layers did::
+
+    try:
+        from _fuzz import product_case      # ImportError without the extra
+        HAVE_HYPOTHESIS = True
+    except ImportError:
+        HAVE_HYPOTHESIS = False
+
+Values are drawn from dyadic rationals ({0.5, 1.0, 1.5, 2.0}) so fp32
+products and sums are exact and every comparison can be bitwise; they are
+also strictly positive, which sidesteps the dense-oracle explicit-zero
+caveat documented on ``repro.core.spgemm.spgemm_dense``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import CSR
+
+#: dyadic, strictly positive: exact fp32 arithmetic, no explicit zeros.
+VALS = np.array([0.5, 1.0, 1.5, 2.0], np.float32)
+
+SEMIRINGS = ("plus_times", "boolean", "min_plus", "plus_first")
+ALGOS = ("esc", "heap", "hash", "hash_jnp")
+
+
+def rand_dense(m: int, n: int, density: float, seed: int) -> np.ndarray:
+    """Dense dyadic-valued matrix with the given fill fraction."""
+    rng = np.random.default_rng(seed)
+    d = rng.choice(VALS, size=(m, n))
+    return np.where(rng.random((m, n)) < density, d, 0.0).astype(np.float32)
+
+
+def csr_of(d: np.ndarray, cap: int | None = None) -> CSR:
+    """Sorted, duplicate-free CSR of a dense matrix."""
+    r, c = np.nonzero(d)
+    return CSR.from_numpy_coo(r, c, d[r, c], d.shape, cap=cap)
+
+
+def scramble_rows(a: CSR) -> CSR:
+    """Unsorted twin: reverse each row's entries, flag ``sorted_cols=False``.
+
+    Deterministic (no RNG), duplicate-free by construction, and the dense
+    view is unchanged -- the canonical way every suite builds the
+    "Table 1 unsorted input" case.
+    """
+    ip = np.asarray(a.indptr)
+    ind = np.asarray(a.indices).copy()
+    dat = np.asarray(a.data).copy()
+    for i in range(a.n_rows):
+        ind[ip[i]:ip[i + 1]] = ind[ip[i]:ip[i + 1]][::-1]
+        dat[ip[i]:ip[i + 1]] = dat[ip[i]:ip[i + 1]][::-1]
+    return CSR(jnp.asarray(ip), jnp.asarray(ind), jnp.asarray(dat),
+               a.nnz, a.shape, sorted_cols=False)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis strategies (optional extra; absent => the names don't exist
+# and `from _fuzz import product_case` raises ImportError, which is the
+# guard every consumer already uses)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    #: dims drawn from a tiny fixed set so examples share compiled programs.
+    DIMS = st.sampled_from((3, 5, 8))
+    DENSITIES = st.sampled_from((0.0, 0.2, 0.5, 0.9))
+
+    @st.composite
+    def dense_with_structure(draw, m: int, n: int, seed: int) -> np.ndarray:
+        """Dense matrix with optionally-forced empty rows/columns."""
+        d = rand_dense(m, n, draw(DENSITIES), seed)
+        if draw(st.booleans()) and m > 1:      # force some empty rows
+            kill = draw(st.sets(st.integers(0, m - 1), max_size=m // 2))
+            for i in kill:
+                d[i, :] = 0.0
+        if draw(st.booleans()) and n > 1:      # force some empty columns
+            kill = draw(st.sets(st.integers(0, n - 1), max_size=n // 2))
+            for j in kill:
+                d[:, j] = 0.0
+        return d
+
+    @st.composite
+    def csr_case(draw, m: int | None = None, n: int | None = None,
+                 allow_unsorted: bool = True):
+        """One CSR plus its dense view: ``(a, ad)``.
+
+        Rectangular by default (independent row/col dims), possibly with
+        empty rows/cols or fully empty, possibly row-scrambled unsorted.
+        """
+        m = draw(DIMS) if m is None else m
+        n = draw(DIMS) if n is None else n
+        seed = draw(st.integers(0, 2**16))
+        ad = draw(dense_with_structure(m, n, seed))
+        a = csr_of(ad)
+        if allow_unsorted and draw(st.booleans()):
+            a = scramble_rows(a)
+        return a, ad
+
+    @st.composite
+    def product_case(draw):
+        """One product request: ``(ad, bd, md, complement, semiring, algo)``.
+
+        The single-product differential layer's case shape (dense operands
+        + optional dense mask + semantic fields); the consumer builds CSRs
+        and compares against its oracle.
+        """
+        m, k, n = draw(DIMS), draw(DIMS), draw(DIMS)
+        seed = draw(st.integers(0, 2**16))
+        density = draw(DENSITIES)
+        ad = rand_dense(m, k, density, seed)
+        bd = rand_dense(k, n, density, seed + 1)
+        masked = draw(st.booleans())
+        md = rand_dense(m, n, 0.5, seed + 2) if masked else None
+        complement = draw(st.booleans()) if masked else False
+        semiring = draw(st.sampled_from(SEMIRINGS))
+        algo = draw(st.sampled_from(ALGOS))
+        return ad, bd, md, complement, semiring, algo
+
+    @st.composite
+    def batch_case(draw, min_products: int = 2, max_products: int = 6):
+        """A fleet of CSR products for ``spgemm_batch`` fuzzing.
+
+        Returns ``(pairs, semiring)`` where ``pairs`` is a list of
+        ``(A_i, B_i)`` CSRs: heterogeneous rectangular shapes and
+        densities, empty rows/cols, sorted/unsorted members -- optionally
+        all sharing one B (the shared-operand fleet shape, e.g.
+        per-expert dispatch against one feature matrix).
+        """
+        n_products = draw(st.integers(min_products, max_products))
+        semiring = draw(st.sampled_from(SEMIRINGS))
+        share_b = draw(st.booleans())
+        pairs = []
+        if share_b:
+            k, n = draw(DIMS), draw(DIMS)
+            b, _ = draw(csr_case(m=k, n=n))
+            for _ in range(n_products):
+                a, _ = draw(csr_case(n=k))
+                pairs.append((a, b))
+        else:
+            for _ in range(n_products):
+                k = draw(DIMS)
+                a, _ = draw(csr_case(n=k))
+                b, _ = draw(csr_case(m=k))
+                pairs.append((a, b))
+        return pairs, semiring

@@ -1,0 +1,304 @@
+"""Batched SpGEMM subsystem (DESIGN.md section 13).
+
+Contracts:
+  * ``spgemm_batch`` over a heterogeneous fleet is **bitwise-equal**, per
+    element, to a loop of single planned products running the same
+    algorithm with exact capacities (padding is capacity-only);
+  * a fleet whose total-flop spread is R compiles at most
+    ``ceil(log2 R) + 1`` capacity-class programs (p2 bucketing), counted
+    via the class-program builder;
+  * repeat execution does zero re-inspection (flop counting / symbolic /
+    program builds all stay at zero);
+  * plans are cached under the ``("batch", ...)`` kind with per-kind
+    stats, and ``plan_cache_stats()["kinds"]`` reports zero entries for
+    registered-but-empty kinds on a cold cache;
+  * ``shard_batch`` round-robins whole products, covering every index
+    exactly once, with weighted balance when weights are given;
+  * ``plan_batch_power`` composes batched stages with unsorted
+    intermediates and matches the per-product chain path.
+
+The deterministic grid runs everywhere; the property layer at the bottom
+fuzzes fleet structures via ``tests/_fuzz.py`` when the optional
+``hypothesis`` extra is installed (absence skips only that layer).
+"""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.core import (CSR, BatchedPlan, clear_plan_cache,  # noqa: E402
+                        plan_batch, plan_batch_power, plan_cache_stats,
+                        plan_power, plan_spgemm, shard_batch, spgemm,
+                        spgemm_batch)
+from repro.data.rmat import rmat_csr  # noqa: E402
+from benchmarks.common import (assert_bitwise_prefix as _assert_bitwise,
+                               batch_class_bound, batch_inspection_counters,
+                               counted, planned_loop,
+                               rmat_fleet as _fleet)  # noqa: E402
+from _fuzz import csr_of as _csr, rand_dense as _rand_dense  # noqa: E402
+
+try:
+    from hypothesis import given, settings
+    from _fuzz import batch_case
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _planned_loop(plan: BatchedPlan, pairs):
+    """The per-product planned path (shared benchmarks.common helper)."""
+    return planned_loop(plan, pairs)()
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: 32 heterogeneous products, bitwise, bounded program count,
+# zero re-inspection on repeat execution
+# ---------------------------------------------------------------------------
+
+def test_batch_32_products_bitwise_and_program_bound():
+    clear_plan_cache()
+    pairs = _fleet(32, scale=4)
+    plan = plan_batch(pairs)
+    assert plan.n_products == 32
+
+    # p2 bucketing: same-shape fleet with flop spread R compiles at most
+    # ceil(log2 R) + 1 class programs (shared bound helper; +1 is the
+    # bucket fencepost)
+    assert plan.n_classes <= batch_class_bound(pairs), plan.n_classes
+
+    # first execute compiles exactly n_classes programs
+    built: dict = {}
+    restore = counted("repro.core.batch", "_build_class_program", built)
+    try:
+        outs = plan.execute(pairs)
+    finally:
+        restore()
+    assert built.get("_build_class_program", 0) == plan.n_classes
+
+    # bitwise equality vs the per-product planned loop, per element
+    refs = _planned_loop(plan, pairs)
+    for c, ref in zip(outs, refs):
+        _assert_bitwise(c, ref)
+
+    # repeat execution: zero re-inspection, zero program builds
+    counter, restore = batch_inspection_counters()
+    try:
+        outs2 = plan.execute(pairs)
+    finally:
+        restore()
+    assert not counter, f"repeat execute re-inspected: {counter}"
+    for c, c2 in zip(outs, outs2):
+        _assert_bitwise(c, c2)
+
+
+def test_batch_heterogeneous_shapes():
+    """Different (m, k, n) members land in different classes and still
+    match the per-product planned path bitwise."""
+    cases = [(5, 7, 9), (8, 3, 4), (16, 16, 16), (5, 7, 9), (2, 11, 6)]
+    pairs = []
+    for i, (m, k, n) in enumerate(cases):
+        pairs.append((_csr(_rand_dense(m, k, 0.4, seed=2 * i)),
+                      _csr(_rand_dense(k, n, 0.4, seed=2 * i + 1))))
+    plan = plan_batch(pairs)
+    outs = plan.execute(pairs)
+    for c, ref in zip(outs, _planned_loop(plan, pairs)):
+        _assert_bitwise(c, ref)
+    for (a, b), c in zip(pairs, outs):
+        assert c.shape == (a.n_rows, b.n_cols)
+        cd = np.asarray(a.to_dense()) @ np.asarray(b.to_dense())
+        assert np.allclose(np.asarray(c.to_dense()), cd, atol=1e-4)
+
+
+@pytest.mark.parametrize("algorithm", ("esc", "heap", "hash_jnp"))
+def test_batch_pinned_algorithm_bitwise(algorithm):
+    pairs = _fleet(6, scale=3, seed0=40)
+    plan = plan_batch(pairs, algorithm=algorithm)
+    assert set(plan.algorithms) == {algorithm}
+    for c, ref in zip(plan.execute(pairs), _planned_loop(plan, pairs)):
+        _assert_bitwise(c, ref)
+
+
+@pytest.mark.parametrize("semiring", ("boolean", "min_plus", "plus_first"))
+def test_batch_semirings_match_single_dispatch(semiring):
+    pairs = _fleet(4, scale=3, seed0=60)
+    outs = spgemm_batch(pairs, semiring=semiring)
+    for (a, b), c in zip(pairs, outs):
+        ref = spgemm(a, b, max(int(c.nnz), 1) + 4, algorithm="esc",
+                     semiring=semiring)
+        assert np.array_equal(np.asarray(c.to_dense()),
+                              np.asarray(ref.to_dense()))
+
+
+def test_batch_masked_members():
+    """Masked and unmasked members split classes; masked results prune."""
+    pairs = _fleet(4, scale=3, seed0=80)
+    masks = [None, None,
+             _csr(_rand_dense(8, 8, 0.5, seed=7)),
+             _csr(_rand_dense(8, 8, 0.5, seed=8))]
+    plan = plan_batch(pairs, masks=masks)
+    outs = plan.execute(pairs)
+    for (a, b), m, c in zip(pairs, masks, outs):
+        ref = spgemm(a, b, 64, algorithm="esc", mask=m)
+        assert np.array_equal(np.asarray(c.to_dense()),
+                              np.asarray(ref.to_dense()))
+    masked_cls = {plan.class_of[2], plan.class_of[3]}
+    unmasked_cls = {plan.class_of[0], plan.class_of[1]}
+    assert not (masked_cls & unmasked_cls)
+
+
+def test_batch_shared_b_and_sorted_output():
+    """Fleet sharing one B; sorted_output as plan flag and per-call
+    override both yield sorted rows."""
+    b = _csr(_rand_dense(8, 8, 0.5, seed=90))
+    pairs = [(_csr(_rand_dense(8, 8, 0.2 + 0.2 * (i % 3), seed=91 + i)), b)
+             for i in range(5)]
+    plan = plan_batch(pairs, sorted_output=True)
+    for c in plan.execute(pairs):
+        assert c.sorted_cols
+        cols, ip = np.asarray(c.indices), np.asarray(c.indptr)
+        for i in range(c.n_rows):
+            assert np.all(np.diff(cols[ip[i]:ip[i + 1]]) > 0)
+    plan_u = plan_batch(pairs)          # unsorted plan, sorted override
+    for c in plan_u.execute(pairs, sorted_output=True):
+        assert c.sorted_cols
+
+
+def test_batch_empty_and_mixed_sortedness_members():
+    """Fully empty members (zero flop buckets) and unsorted members mixed
+    with sorted ones ride the same fleet without special-casing."""
+    empty_a = CSR.from_numpy_coo(np.zeros(0, np.int64),
+                                 np.zeros(0, np.int64),
+                                 np.zeros(0, np.float32), (5, 4), cap=2)
+    empty_b = CSR.from_numpy_coo(np.zeros(0, np.int64),
+                                 np.zeros(0, np.int64),
+                                 np.zeros(0, np.float32), (4, 6), cap=1)
+    b = _csr(_rand_dense(4, 6, 0.5, seed=101))
+    a = _csr(_rand_dense(5, 4, 0.5, seed=102))
+    pairs = [(empty_a, b), (a, b), (empty_a, empty_b),
+             (a.with_unsorted_flag(), b)]
+    plan = plan_batch(pairs)
+    outs = plan.execute(pairs)
+    for i, ((ai, bi), c) in enumerate(zip(pairs, outs)):
+        ref = np.asarray(ai.to_dense()) @ np.asarray(bi.to_dense())
+        assert np.array_equal(np.asarray(c.to_dense()), ref), i
+    assert int(outs[0].nnz) == 0 and int(outs[2].nnz) == 0
+
+
+def test_batch_rejects_heap_on_unsorted_and_bcsr():
+    a = _csr(_rand_dense(6, 6, 0.5, seed=5))
+    au = a.with_unsorted_flag()
+    with pytest.raises(AssertionError, match="sorted inputs"):
+        plan_batch([(au, a)], algorithm="heap", cache=False)
+    with pytest.raises(NotImplementedError):
+        plan_batch([(a, a)], algorithm="bcsr", cache=False)
+    with pytest.raises(NotImplementedError):
+        # dense is the test oracle (explicit-zero semantics); a silent
+        # esc substitution would change output structure
+        plan_batch([(a, a)], algorithm="dense", cache=False)
+    # inner dims must compose, like _check_chain_shapes (a silent
+    # mismatch would clamp gathers and produce plausible wrong numerics)
+    bad = _csr(_rand_dense(5, 6, 0.5, seed=6))
+    with pytest.raises(AssertionError, match="do not compose"):
+        plan_batch([(a, a), (a, bad)], cache=False)
+    # a heap class refuses operands downgraded to unsorted since plan
+    # time (the class program would re-stamp the sorted flag silently)
+    plan_h = plan_batch([(a, a)], algorithm="heap", cache=False)
+    with pytest.raises(AssertionError, match="unsorted operand"):
+        plan_h.execute([(a.with_unsorted_flag(), a)])
+
+
+def test_batch_cache_kind_and_cold_zero_entries():
+    clear_plan_cache()
+    stats = plan_cache_stats()
+    # satellite fix: registered-but-empty kinds report zero, no KeyError
+    for kind in ("spgemm", "dist_1d", "summa", "chain", "chain_1d",
+                 "gram", "batch", "batch_power"):
+        assert stats["kinds"][kind] == 0
+    pairs = _fleet(3, scale=3, seed0=11)
+    plan = plan_batch(pairs)
+    before = plan_cache_stats()
+    assert before["kinds"]["batch"] == 1
+    plan2 = plan_batch(pairs)
+    after = plan_cache_stats()
+    assert plan2 is plan and after["hits"] == before["hits"] + 1
+
+
+def test_batch_structure_check_rejects_drift():
+    pairs = _fleet(2, scale=3, seed0=21)
+    plan = plan_batch(pairs)
+    other = rmat_csr(3, 3, "ER", seed=999)
+    with pytest.raises(AssertionError, match="nnz differs|capacities"):
+        plan.execute([(other, pairs[0][1]), pairs[1]])
+
+
+# ---------------------------------------------------------------------------
+# shard_batch: whole-product round-robin
+# ---------------------------------------------------------------------------
+
+def test_shard_batch_covers_and_round_robins():
+    assign = shard_batch(10, 3)
+    flat = sorted(i for s in assign for i in s)
+    assert flat == list(range(10))
+    assert assign[0] == (0, 3, 6, 9)            # plain round-robin
+    # weighted: heaviest products spread across chips first
+    w = [1, 100, 1, 90, 1, 80]
+    assign_w = shard_batch(6, 3, weights=w)
+    flat = sorted(i for s in assign_w for i in s)
+    assert flat == list(range(6))
+    per_shard = [sum(w[i] for i in s) for s in assign_w]
+    assert max(per_shard) <= 100 + 2            # no chip hoards the heavies
+    pairs = _fleet(4, scale=3, seed0=31)
+    assert sorted(i for s in shard_batch(pairs, 2) for i in s) == [0, 1, 2, 3]
+
+
+# ---------------------------------------------------------------------------
+# plan_batch_power: batched A_i^k chains
+# ---------------------------------------------------------------------------
+
+def test_plan_batch_power_matches_per_product_chain():
+    mats = [rmat_csr(3, 2, "G500", seed=50 + i) for i in range(4)]
+    # same algorithm on both sides: the comparison is then bitwise (auto
+    # may legally pick different per-stage algorithms for the fleet's
+    # aggregate than for one product, changing fp accumulation order)
+    plan = plan_batch_power(mats, 3, algorithm="hash_jnp")
+    outs = plan.execute(mats)
+    for m, c in zip(mats, outs):
+        d = np.asarray(m.to_dense(), np.float64)
+        assert np.allclose(np.asarray(c.to_dense()), d @ d @ d, atol=1e-3)
+        ref = plan_power(m, 3, algorithm="hash_jnp").execute([m, m, m])
+        assert np.array_equal(np.asarray(c.to_dense()),
+                              np.asarray(ref.to_dense()))
+    # program sharing: fleet x stages compiles far fewer programs than
+    # products x stages
+    assert plan.n_classes < plan.n_products * plan.n_stages
+
+
+def test_plan_batch_power_cache_hit():
+    clear_plan_cache()
+    mats = [rmat_csr(3, 2, "ER", seed=70 + i) for i in range(3)]
+    p1 = plan_batch_power(mats, 2)
+    before = plan_cache_stats()
+    p2 = plan_batch_power(mats, 2)
+    after = plan_cache_stats()
+    assert p2 is p1 and after["hits"] == before["hits"] + 1
+    assert plan_cache_stats()["kinds"]["batch_power"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Property-based layer (optional hypothesis extra; strategies in _fuzz.py)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    @given(batch_case())
+    @settings(max_examples=15, deadline=None)
+    def test_property_batch_bitwise_equals_planned_loop(case):
+        pairs, semiring = case
+        plan = plan_batch(pairs, semiring=semiring)
+        outs = plan.execute(pairs)
+        for i, ((a, b), c) in enumerate(zip(pairs, outs)):
+            ref = plan_spgemm(a, b, algorithm=plan.algorithms[i],
+                              semiring=semiring).execute(a, b)
+            _assert_bitwise(c, ref)

@@ -29,15 +29,17 @@ import jax.numpy as jnp  # noqa: E402
 
 from repro.core import CSR, spgemm, spgemm_heap  # noqa: E402
 
+from _fuzz import csr_of as _csr, rand_dense as _rand_dense  # noqa: E402
+
 try:
-    from hypothesis import given, settings, strategies as st
+    from hypothesis import given, settings
+    from _fuzz import product_case
     HAVE_HYPOTHESIS = True
 except ImportError:
     HAVE_HYPOTHESIS = False
 
 ALGOS = ("esc", "heap", "hash", "hash_jnp")
 SEMIRINGS = ("plus_times", "boolean", "min_plus", "plus_first")
-VALS = np.array([0.5, 1.0, 1.5, 2.0], np.float32)
 
 
 # ---------------------------------------------------------------------------
@@ -53,17 +55,6 @@ def _mask_after(c: np.ndarray, mask_d: np.ndarray,
                 complement: bool) -> np.ndarray:
     keep = (mask_d == 0) if complement else (mask_d != 0)
     return np.where(keep, c, 0.0)
-
-
-def _rand_dense(m: int, n: int, density: float, seed: int) -> np.ndarray:
-    rng = np.random.default_rng(seed)
-    d = rng.choice(VALS, size=(m, n))
-    return np.where(rng.random((m, n)) < density, d, 0.0).astype(np.float32)
-
-
-def _csr(d: np.ndarray, cap: int | None = None) -> CSR:
-    r, c = np.nonzero(d)
-    return CSR.from_numpy_coo(r, c, d[r, c], d.shape, cap=cap)
 
 
 def _run(a: CSR, b: CSR, algo: str, cap: int, **kw) -> CSR:
@@ -169,28 +160,12 @@ def test_unsorted_inputs_route_and_heap_refuses():
 
 
 # ---------------------------------------------------------------------------
-# Property-based layer (optional hypothesis extra)
+# Property-based layer (optional hypothesis extra; strategies in _fuzz.py,
+# shared with the batched-fleet fuzz in test_batch.py)
 # ---------------------------------------------------------------------------
 
 if HAVE_HYPOTHESIS:
-    # dims drawn from a tiny fixed set so examples share compiled programs
-    _dims = st.sampled_from((3, 5, 8))
-
-    @st.composite
-    def _product_case(draw):
-        m, k, n = draw(_dims), draw(_dims), draw(_dims)
-        seed = draw(st.integers(0, 2**16))
-        density = draw(st.sampled_from((0.0, 0.2, 0.5, 0.9)))
-        ad = _rand_dense(m, k, density, seed)
-        bd = _rand_dense(k, n, density, seed + 1)
-        masked = draw(st.booleans())
-        md = _rand_dense(m, n, 0.5, seed + 2) if masked else None
-        complement = draw(st.booleans()) if masked else False
-        semiring = draw(st.sampled_from(SEMIRINGS))
-        algo = draw(st.sampled_from(ALGOS))
-        return ad, bd, md, complement, semiring, algo
-
-    @given(_product_case())
+    @given(product_case())
     @settings(max_examples=25, deadline=None)
     def test_property_all_algorithms_match_oracle(case):
         ad, bd, md, complement, semiring, algo = case

@@ -117,12 +117,26 @@ def test_symbolic_flop_cap_equivalence():
 
 
 def test_rows_to_bins_overflow_guard():
+    """int32 mode: the guard raises instead of mis-binning.  x64 mode
+    (the CI leg with JAX_ENABLE_X64=1): accumulation is promoted to
+    int64, the guard stays silent, and the huge input bins *exactly* --
+    the promotion path that is otherwise only exercised implicitly."""
+    import jax
     huge = jnp.full((8,), 2**30, jnp.int32)   # total 2^33 >> int32
-    with pytest.raises(OverflowError, match="overflows the int32"):
-        sched.rows_to_bins(huge, 8)
-    with pytest.raises(OverflowError):
-        sched.guard_i32_flop(huge, 1, "bin_flop")
-    # sane totals stay silent and exact
+    if jax.config.jax_enable_x64:
+        sched.guard_i32_flop(huge, 8, "rows_to_bins")       # no raise
+        off = np.asarray(sched.rows_to_bins(huge, 4))
+        assert off[0] == 0 and off[-1] == 8
+        # uniform rows: the equal-flop partition is exact under int64
+        assert np.array_equal(off, [0, 2, 4, 6, 8])
+        assert np.asarray(sched.bin_flop(huge, jnp.asarray(off))).sum() \
+            == 8 * 2**30
+    else:
+        with pytest.raises(OverflowError, match="overflows the int32"):
+            sched.rows_to_bins(huge, 8)
+        with pytest.raises(OverflowError):
+            sched.guard_i32_flop(huge, 1, "bin_flop")
+    # sane totals stay silent and exact in both modes
     ok = jnp.full((8,), 1000, jnp.int32)
     off = np.asarray(sched.rows_to_bins(ok, 4))
     assert off[0] == 0 and off[-1] == 8
@@ -282,6 +296,22 @@ def test_plan_cache_lru_bound():
         assert plan_spgemm(a, b, semiring="boolean") is not p2  # evicted
     finally:
         plan_mod.PLAN_CACHE_CAPACITY = old_cap
+
+
+def test_plan_cache_stats_reports_zero_for_empty_kinds():
+    """A cold cache reports every registered kind with a zero count --
+    dashboards can index stats['kinds'][kind] unconditionally instead of
+    KeyError-ing until the first plan of that kind lands."""
+    from repro.core import PLAN_KINDS
+    clear_plan_cache()
+    kinds = plan_cache_stats()["kinds"]
+    assert set(PLAN_KINDS) <= set(kinds)
+    assert all(kinds[k] == 0 for k in PLAN_KINDS)
+    a, b, _ = _pair(seed=30)
+    plan_spgemm(a, b)
+    kinds = plan_cache_stats()["kinds"]
+    assert kinds["spgemm"] == 1
+    assert all(kinds[k] == 0 for k in PLAN_KINDS if k != "spgemm")
 
 
 def test_plan_execute_rejects_mismatched_structure():
