@@ -14,9 +14,11 @@ Three questions, on an 8-way host-device mesh (self-provisioned via
 
 ``--smoke`` runs a downscaled version with hard assertions -- sparse-native
 sharding (zero ``to_dense`` calls), distributed == single-node planned
-products (bitwise), zero re-inspection on repeat executes, plan-cache hits
-on re-plans, and an honored ``k_panels`` -- used as the CI multi-device
-smoke step.
+products (bitwise), the planned hash path dispatching the **real Pallas
+kernel inside the shard_map body** (call counters, jnp-twin spy) and
+bit-matching the mesh-free shard executor, zero re-inspection on repeat
+executes, plan-cache hits on re-plans, and an honored ``k_panels`` --
+used as the CI multi-device smoke step.
 
     PYTHONPATH=src python benchmarks/bench_distributed.py [--smoke]
 """
@@ -138,6 +140,28 @@ def smoke():
     c = unshard_rows(plan.execute(mesh, a_sh, b))
     assert np.array_equal(np.asarray(c.to_dense()),
                           np.asarray(ref.to_dense()))
+
+    # planned hash: the real Pallas kernel traces inside the shard_map
+    # body (numeric counter fires per local product; the retired jnp twin
+    # must stay silent) and bit-matches the mesh-free shard executor --
+    # the same program text minus the mesh
+    from repro.kernels.spgemm_hash import ops as hash_ops
+    plan_h = plan_spgemm_1d(a_sh, b, algorithm="hash")
+    twin_calls: dict = {}
+    restore_twin = counted("repro.core.spgemm", "spgemm_hash_jnp",
+                           twin_calls)
+    hash_ops.reset_kernel_calls()
+    try:
+        c_h = plan_h.execute(mesh, a_sh, b)
+    finally:
+        restore_twin()
+    assert hash_ops.kernel_call_counts()["numeric"] > 0, \
+        "Pallas hash kernel never traced inside the shard_map body"
+    assert not twin_calls, f"jnp twin dispatched: {twin_calls}"
+    c_host = plan_h.execute_shards_host(a_sh, b)
+    assert np.array_equal(
+        np.asarray(unshard_rows(c_h).to_dense()),
+        np.asarray(unshard_rows(c_host).to_dense()))
 
     # repeat execute: zero re-inspection (no schedule / symbolic work)
     counter: dict = {}

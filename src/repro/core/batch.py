@@ -23,10 +23,14 @@ uniformly-masked subfleet whose flop spans a factor of ``R``, at most
 share a ``vmap``).
 Each class pads its members to the common static shape, stacks them, and
 executes one ``vmap``-ed numeric-only program with intermediates kept
-**unsorted** (the C8 finding, per batch element); the Pallas hash kernels
-cannot trace under ``vmap``, so the hash family runs its contract-
-equivalent jnp twin, exactly as inside ``shard_map``
-(``core.distributed``).
+**unsorted** (the C8 finding, per batch element); the hash family runs
+the real Pallas kernel here -- the plan freezes each member's schedule
+(bin offsets, per-bin table sizes, ``indptr_c``) as stacked batched
+operands, and a ``custom_vmap`` rule swaps in the natively batched grid
+(``kernels/spgemm_hash``), so every dynamic value traces while the
+scratch table stays static per capacity class.  The jnp twin remains
+only as the reference oracle and as the body for general semirings /
+masked members (mirroring ``SpGEMMPlan.execute``).
 
 Padding is *capacity-only*: the padded tail of a CSR is structurally
 empty (``nnz`` marks the live prefix), so the live prefix of every class
@@ -62,15 +66,17 @@ from . import schedule as sched
 from .spgemm import (_canon_mask, _check_mask, finalize, spgemm_esc,
                      spgemm_hash_jnp, spgemm_heap, symbolic)
 
-#: batched-executor algorithm substitutions, mirroring the shard_map table
-#: in ``core.distributed``: the Pallas hash kernels size their tables by
-#: eager inspection and cannot trace under ``vmap`` -- ``hash_jnp`` keeps
-#: the identical contract (two-phase capacity, unsorted select output).
-#: ``dense`` and ``bcsr`` are rejected outright (explicitly, below) --
-#: the dense oracle's explicit-zero semantics and the bcsr tile path
-#: both have no vmapped twin, and a silent substitution would change
-#: output structure without warning.
-_BATCH_ALGO = {"hash": "hash_jnp", "hash_vector": "hash_jnp"}
+# The hash family runs the real Pallas kernel under the vmapped executor
+# (plan-frozen schedules ride in as batched operands; there is no twin
+# substitution table anymore).  ``dense`` and ``bcsr`` are still rejected
+# outright (explicitly, below) -- the dense oracle's explicit-zero
+# semantics and the bcsr tile path both have no vmapped twin, and a
+# silent substitution would change output structure without warning.
+
+#: Fig. 6 bin count used for the per-member frozen hash schedules -- the
+#: same default ``plan_spgemm`` uses, so a class member's numeric result
+#: is bitwise the per-product planned result.
+_HASH_BINS = 8
 
 
 def _pad_csr(a: CSR, n_rows: int, n_cols: int, cap: int) -> CSR:
@@ -131,19 +137,33 @@ def _build_class_program(cls: "BatchClass",
     (``benchmarks/bench_batch.py --smoke`` wraps it in a call counter to
     assert both).
     """
+    from repro.kernels.spgemm_hash import ops as hash_ops
     sr = resolve_semiring(semiring)
     algo = cls.algorithm
     (M, K), (_, N) = cls.shape_a, cls.shape_b
+    # hash classes carry plan-frozen stacked schedules unless the request
+    # is general (non-plus_times semiring or masked members), where the
+    # jnp twin keeps the contract -- the same split SpGEMMPlan.execute
+    # makes for a single product.
+    pallas_hash = algo in ("hash", "hash_vector") and \
+        cls.hash_sched is not None
 
-    def one(a: CSR, b: CSR, mask: Optional[CSR]) -> CSR:
+    def one(a: CSR, b: CSR, mask: Optional[CSR], hs=None) -> CSR:
         if algo == "esc":
             out = spgemm_esc(a, b, cls.cap_c, flop_cap=cls.flop_cap,
                              semiring=sr, mask=mask,
                              complement_mask=complement_mask)
-        elif algo == "hash_jnp":
-            out = spgemm_hash_jnp(a, b, cls.cap_c, flop_cap=cls.flop_cap,
-                                  semiring=sr, mask=mask,
-                                  complement_mask=complement_mask)
+        elif algo in ("hash", "hash_vector", "hash_jnp"):
+            if hs is None:      # explicit hash_jnp pin, or general request
+                out = spgemm_hash_jnp(a, b, cls.cap_c,
+                                      flop_cap=cls.flop_cap,
+                                      semiring=sr, mask=mask,
+                                      complement_mask=complement_mask)
+            else:
+                out = hash_ops.spgemm_hash(
+                    a, b, cls.cap_c, vector=(algo == "hash_vector"),
+                    table_size=cls.table_size, schedule=(hs[0], hs[1]),
+                    indptr_c=hs[2])
         elif algo == "heap":
             out = spgemm_heap(a, b, row_cap=cls.row_cap,
                               k_width=cls.k_width, cap_c=cls.cap_c,
@@ -162,14 +182,21 @@ def _build_class_program(cls: "BatchClass",
         return _stack_csr([_pad_csr(x, rows, cols, cap) for x in ops],
                           flag)
 
-    def fleet(a_in, b_in, *maybe_mask) -> Tuple[CSR, ...]:
+    def fleet(a_in, b_in, *rest) -> Tuple[CSR, ...]:
+        # rest: (mask_parts,) for masked classes, or the three stacked
+        # hash-schedule operands (offsets, bin_tsize, indptr_c) for
+        # Pallas hash classes (mutually exclusive by construction).
         a_proc = prep(a_in, a_shared, M, K, cls.cap_a, cls.a_sorted)
         b_proc = prep(b_in, b_shared, K, N, cls.cap_b, cls.b_sorted)
         axes = (None if a_shared else 0, None if b_shared else 0)
         if masked:
             c_stack = jax.vmap(lambda a, b, m: one(a, b, m),
                                in_axes=axes + (0,))(
-                a_proc, b_proc, maybe_mask[0])
+                a_proc, b_proc, rest[0])
+        elif pallas_hash:
+            c_stack = jax.vmap(
+                lambda a, b, o, t, ic: one(a, b, None, (o, t, ic)),
+                in_axes=axes + (0, 0, 0))(a_proc, b_proc, *rest)
         else:
             c_stack = jax.vmap(lambda a, b: one(a, b, None),
                                in_axes=axes)(a_proc, b_proc)
@@ -216,6 +243,16 @@ class BatchClass:
     #: stacked program.
     a_shared: bool = False
     b_shared: bool = False
+    #: static Pallas scratch allocation for hash classes: the max over
+    #: the members' own natural table sizes (each member's per-bin sizes
+    #: are clamped against its *own* table at plan time, so the larger
+    #: shared allocation never changes a member's probes or flush order).
+    table_size: int = 0
+    #: plan-frozen stacked hash schedules for the batched-grid kernel:
+    #: ``(offsets (n, n_bins+1), bin_tsize (n, n_bins), indptr_c (n, M+1))``
+    #: in class-member order; ``None`` for non-hash / general classes.
+    hash_sched: Optional[Tuple[jax.Array, jax.Array, jax.Array]] = \
+        dataclasses.field(default=None, repr=False)
 
     @property
     def n_members(self) -> int:
@@ -350,6 +387,9 @@ class BatchedPlan:
                     (b_ops[0] if b_shared else b_ops))
             if cls.mask_parts is not None:
                 args = args + (cls.mask_parts,)
+            elif cls.hash_sched is not None and \
+                    cls.algorithm in ("hash", "hash_vector"):
+                args = args + cls.hash_sched
             c_list = self._class_executor(ci, so, a_shared, b_shared)(*args)
             for j, i in enumerate(cls.members):
                 outs[i] = c_list[j]
@@ -378,9 +418,10 @@ def plan_batch(pairs: Sequence[Tuple[CSR, CSR]], *,
     counts, then p2 capacity-class grouping, then one recipe choice per
     class from the class's aggregate statistics
     (``use_case="batch"``).  ``algorithm`` other than ``"auto"`` pins
-    every class (with the hash family running its jnp twin, like the
-    distributed executor).  Cached under a ``("batch", ...)`` key in the
-    shared plan LRU.
+    every class; the hash family dispatches the real Pallas kernel with
+    plan-frozen stacked schedules (``hash_jnp`` stays available as an
+    explicit reference-oracle pin).  Cached under a ``("batch", ...)``
+    key in the shared plan LRU.
     """
     pairs = [tuple(p) for p in pairs]
     assert pairs, "a batch needs at least one product"
@@ -424,13 +465,14 @@ def plan_batch(pairs: Sequence[Tuple[CSR, CSR]], *,
         # p2-bucketed expansion bound: exact counts either way, but the
         # jitted symbolic phase then compiles one program per flop bucket
         # instead of one per member (inspection cost scales with classes)
-        row_nnz_c, _, _, _ = symbolic(
+        row_nnz_c, indptr_c, _, _ = symbolic(
             a, b, mask=m, complement_mask=complement_mask,
             flop_cap=sched.lowest_p2(max(total_flop, 1)))
         stats = measure_stats(a, b, row_nnz_c=row_nnz_c, mask=m,
                               complement_mask=complement_mask)
         infos.append(dict(
-            mask=m, total_flop=total_flop, stats=stats,
+            mask=m, total_flop=total_flop, stats=stats, flop=flop,
+            indptr_c=indptr_c.astype(jnp.int32),
             nnz_c=int(jnp.sum(row_nnz_c)),
             row_cap=max(int(jnp.max(row_nnz_c)) if row_nnz_c.size else 0,
                         1),
@@ -462,18 +504,55 @@ def plan_batch(pairs: Sequence[Tuple[CSR, CSR]], *,
             agg = aggregate_stats([infos[i]["stats"] for i in idxs])
             algo = choose_algorithm_from_stats(
                 agg, sorted_output, use_case="batch", semiring=sr.name)
-        algo = _BATCH_ALGO.get(algo, algo)
         if algo == "heap" and not (a_sorted and b_sorted):
             # recipe picked heap on its merits, but a member cannot feed
             # it; hash keeps the unsorted contract (same fallback as
             # plan_spgemm)
-            algo = "hash_jnp"
+            algo = "hash"
         mask_parts = None
         if masked:
             mcap = p2(max(max(infos[i]["mask"].cap for i in idxs), 1))
             mask_parts = _stack_csr(
                 [_pad_csr(infos[i]["mask"], M, N, mcap) for i in idxs],
                 True)
+        # Plan-frozen hash schedules (Fig. 6 + Fig. 7 lines 9-12), one per
+        # member over the member's *unpadded* structure, stacked along the
+        # class axis: this is what lets the class program dispatch the
+        # real Pallas kernel under vmap.  Each member's bin sizes clamp
+        # against its own natural table, so the class-max static scratch
+        # is inert and the live output prefix stays bitwise the
+        # per-product planned result.  General requests (non-plus_times
+        # semiring, masks) keep the jnp-twin body instead.
+        table_size = 0
+        hash_sched = None
+        if algo in ("hash", "hash_vector") and not masked and \
+                sr.name == "plus_times":
+            from repro.kernels.spgemm_hash import kernel as HK
+            per_off, per_bts, per_ic = [], [], []
+            tables = []
+            for i in idxs:
+                a_i, b_i = pairs[i]
+                flop_i = infos[i]["flop"]
+                off_i = sched.rows_to_bins(flop_i, _HASH_BINS)
+                tsz_i = jnp.minimum(
+                    sched.max_flop_per_bin_row(flop_i, off_i),
+                    jnp.int32(b_i.n_cols))
+                max_flop = int(jnp.max(flop_i)) if flop_i.size else 0
+                t_i = max(sched.lowest_p2(min(max_flop, b_i.n_cols) + 1),
+                          HK.CHUNK)
+                tables.append(t_i)
+                per_off.append(off_i)
+                per_bts.append(sched.bin_table_sizes(
+                    tsz_i, b_i.n_cols, t_i, floor=HK.CHUNK))
+                ip = infos[i]["indptr_c"]
+                if M + 1 > ip.shape[0]:      # flat-pad to the class rows
+                    ip = jnp.concatenate(
+                        [ip, jnp.broadcast_to(ip[-1],
+                                              (M + 1 - ip.shape[0],))])
+                per_ic.append(ip)
+            table_size = max(tables)
+            hash_sched = (jnp.stack(per_off), jnp.stack(per_bts),
+                          jnp.stack(per_ic))
         cls = BatchClass(
             members=tuple(idxs), algorithm=algo, shape_a=(M, K),
             shape_b=(K, N),
@@ -486,7 +565,8 @@ def plan_batch(pairs: Sequence[Tuple[CSR, CSR]], *,
             row_cap=p2(max(infos[i]["row_cap"] for i in idxs)),
             k_width=p2(max(infos[i]["k_width"] for i in idxs)),
             a_sorted=a_sorted, b_sorted=b_sorted, mask_parts=mask_parts,
-            total_flop=sum(infos[i]["total_flop"] for i in idxs))
+            total_flop=sum(infos[i]["total_flop"] for i in idxs),
+            table_size=table_size, hash_sched=hash_sched)
         for i in idxs:
             class_of[i] = len(classes)
         classes.append(cls)

@@ -39,6 +39,11 @@ On top of the chain plan ride the chain-shaped workloads:
     operands on a device mesh (``core.distributed``), where every stage is
     a frozen :class:`repro.core.distributed.DistributedPlan` and the
     intermediate stays sharded (and unsorted) between stages.
+
+Every stage dispatches through ``SpGEMMPlan.execute``, so a stage whose
+recipe picked the hash family runs the real Pallas kernel -- including
+inside the distributed chain's ``shard_map`` bodies, where the stage's
+frozen schedules ride as sharded array operands (DESIGN.md section 14).
 """
 from __future__ import annotations
 

@@ -29,10 +29,16 @@ reduce-scatter merge sums (its elementwise ``+`` must be the semiring's
 ``add`` with identity 0 -- hence the ``min_plus`` rejection below).
 
 Local products dispatch through :func:`repro.core.spgemm.spgemm`.  The
-hash family runs as ``hash_jnp`` inside ``shard_map``: the Pallas kernel's
-table sizing is eager inspection that cannot trace, while the jnp fallback
-keeps the identical contract (two-phase capacity, unsorted select output)
-and accepts the plan's exact ``flop_cap``.
+*planned* hash family runs the real Pallas kernel inside ``shard_map``:
+``plan_spgemm_1d`` / ``plan_spgemm_summa`` freeze each shard's (or
+panel's) schedule -- bin offsets, per-bin table sizes, ``indptr_c`` -- as
+stacked arrays threaded through the executor with ``P(axis)`` specs, so
+every dynamic value arrives as a traced array while the scratch table
+stays a static per-plan maximum.  Only the *planless* traced path
+(``spgemm_1d`` without a plan, general semirings, masks) still
+substitutes ``hash_jnp``, which keeps the identical contract (two-phase
+capacity, unsorted select output) and doubles as the reference oracle in
+the differential tests.
 """
 from __future__ import annotations
 
@@ -198,24 +204,39 @@ def unshard_rows(c_sh: ShardedCSR) -> CSR:
 # Local product dispatch (shared by the 1D and SUMMA executors)
 # ----------------------------------------------------------------------------
 
-#: shard_map-side algorithm substitutions: the Pallas hash kernels size
-#: their tables by eager inspection (cannot trace); ``hash_jnp`` is the
-#: contract-equivalent fallback.  ``dense`` is the test oracle -- run the
-#: ESC engine instead of densifying per shard.
-_LOCAL_ALGO = {"hash": "hash_jnp", "hash_vector": "hash_jnp",
-               "dense": "esc"}
+#: shard_map-side algorithm substitutions: ``dense`` is the test oracle --
+#: run the ESC engine instead of densifying per shard.  The hash family is
+#: NOT substituted anymore: planned executors thread frozen schedules
+#: through shard_map and run the real Pallas kernel (``_local_spgemm``
+#: falls back to ``hash_jnp`` only when no schedule is available -- the
+#: planless traced path, where eager inspection cannot run).
+_LOCAL_ALGO = {"dense": "esc"}
 
 
 def _local_spgemm(a_loc: CSR, b_loc: CSR, mask_loc: Optional[CSR], *,
                   algorithm: str, semiring: str, complement_mask: bool,
                   sorted_output: bool, cap_c: int,
                   flop_cap: Optional[int], row_cap: Optional[int],
-                  k_width: Optional[int]) -> CSR:
-    """One shard's product, dispatched through the single-node front door."""
+                  k_width: Optional[int], table_size: int = 0,
+                  hash_sched=None) -> CSR:
+    """One shard's product, dispatched through the single-node front door.
+
+    ``hash_sched=(offsets, bin_tsize, indptr_c)`` is this shard's frozen
+    hash schedule (traced arrays are fine -- that is the point); with it
+    the hash family runs the numeric-only Pallas kernel.  Without it a
+    hash request inside a trace would need eager inspection, so the
+    planless path keeps the documented ``hash_jnp`` substitution.
+    """
     algo = _LOCAL_ALGO.get(algorithm, algorithm)
+    if algo in ("hash", "hash_vector") and hash_sched is None:
+        algo = "hash_jnp"
     kw = {}
     if algo in ("esc", "hash_jnp") and flop_cap is not None:
         kw["flop_cap"] = flop_cap
+    if algo in ("hash", "hash_vector"):
+        kw["schedule"] = (hash_sched[0], hash_sched[1])
+        kw["indptr_c"] = hash_sched[2]
+        kw["table_size"] = table_size
     if algo == "heap":
         if row_cap is not None:
             kw["row_cap"] = row_cap
@@ -226,16 +247,25 @@ def _local_spgemm(a_loc: CSR, b_loc: CSR, mask_loc: Optional[CSR], *,
                   sorted_output=sorted_output, **kw)
 
 
-def _build_1d_fn(mesh: Mesh, axis: str, masked: bool, statics: dict):
-    """shard_map'd SPMD body for the 1D row-partitioned product."""
-    def local(a_parts, b_rep, *maybe_mask):
+def _build_1d_fn(mesh: Mesh, axis: str, masked: bool, statics: dict,
+                 with_sched: bool = False):
+    """shard_map'd SPMD body for the 1D row-partitioned product.
+
+    With ``with_sched`` the last three operands are the plan's stacked
+    hash schedules, row-sharded like A (``P(axis)``): each shard slices
+    off its own ``(offsets, bin_tsize, indptr_c)`` and the local product
+    runs the Pallas hash kernel on them.
+    """
+    def local(a_parts, b_rep, *rest):
         a_loc = jax.tree.map(lambda x: x[0], a_parts)
-        m_loc = (jax.tree.map(lambda x: x[0], maybe_mask[0])
-                 if maybe_mask else None)
-        c = _local_spgemm(a_loc, b_rep, m_loc, **statics)
+        m_loc = (jax.tree.map(lambda x: x[0], rest[0])
+                 if masked else None)
+        hs = tuple(r[0] for r in rest[-3:]) if with_sched else None
+        c = _local_spgemm(a_loc, b_rep, m_loc, hash_sched=hs, **statics)
         return jax.tree.map(lambda x: x[None], c)
 
-    in_specs = (P(axis), P()) + ((P(axis),) if masked else ())
+    in_specs = (P(axis), P()) + ((P(axis),) if masked else ()) + \
+        ((P(axis), P(axis), P(axis)) if with_sched else ())
     return shard_map(local, mesh=mesh, in_specs=in_specs,
                      out_specs=P(axis), check_rep=False)
 
@@ -272,6 +302,16 @@ class DistributedPlan:
     row_cap: int
     k_width: int
     nnz_c: int
+    #: static Pallas scratch allocation: max over shards' natural table
+    #: sizes (each shard's per-bin sizes clamp against its own table at
+    #: plan time, so the uniform allocation never changes shard results).
+    table_size: int = 0
+    #: stacked per-shard hash schedules ``(offsets (S, n_bins+1),
+    #: bin_tsize (S, n_bins), indptr_c (S, rows_cap+1))``, threaded
+    #: through shard_map with ``P(axis)`` specs; ``None`` unless the plan
+    #: resolved to the hash family on a plain plus_times product.
+    hash_sched: Optional[Tuple[jax.Array, jax.Array, jax.Array]] = \
+        dataclasses.field(default=None, repr=False)
 
     def check_structure(self, a_sh: ShardedCSR, b: CSR) -> None:
         assert a_sh.row_starts == self.row_starts, \
@@ -291,7 +331,7 @@ class DistributedPlan:
                     complement_mask=self.complement_mask,
                     sorted_output=so, cap_c=self.cap_c,
                     flop_cap=self.flop_cap, row_cap=self.row_cap,
-                    k_width=self.k_width)
+                    k_width=self.k_width, table_size=self.table_size)
 
     def _executor(self, mesh: Mesh, axis: str,
                   sorted_output: Optional[bool] = None):
@@ -299,7 +339,8 @@ class DistributedPlan:
         return _memoized_executor(
             self, (mesh, axis, statics["sorted_output"]),
             lambda: _build_1d_fn(mesh, axis, self.mask_sh is not None,
-                                 statics))
+                                 statics,
+                                 with_sched=self.hash_sched is not None))
 
     def execute(self, mesh: Mesh, a_sh: ShardedCSR, b: CSR,
                 axis: str = "data",
@@ -315,6 +356,8 @@ class DistributedPlan:
         args = (a_sh.parts, b)
         if self.mask_sh is not None:
             args = args + (self.mask_sh.parts,)
+        if self.hash_sched is not None:
+            args = args + self.hash_sched
         out = self._executor(mesh, axis, sorted_output)(*args)
         return ShardedCSR(out, self.row_starts, self.shape_a[0])
 
@@ -340,7 +383,10 @@ class DistributedPlan:
         for s in range(len(self.row_starts) - 1):
             m_loc = self.mask_sh.local(s) if self.mask_sh is not None \
                 else None
-            outs.append(_local_spgemm(a_sh.local(s), b, m_loc, **statics))
+            hs = None if self.hash_sched is None else \
+                tuple(x[s] for x in self.hash_sched)
+            outs.append(_local_spgemm(a_sh.local(s), b, m_loc,
+                                      hash_sched=hs, **statics))
         parts = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
         return ShardedCSR(parts, self.row_starts, self.shape_a[0])
 
@@ -428,6 +474,23 @@ def plan_spgemm_1d(a_sh: ShardedCSR, b: CSR, *, algorithm: str = "auto",
             algo = p.algorithm              # shard 0 resolves; rest uniform
         plans.append(p)
 
+    # Freeze the per-shard hash schedules as stacked arrays: shards are
+    # padded to a uniform ``rows_cap`` (flat trailing indptr) and share
+    # ``n_bins``, so every shard's (offsets, bin_tsize, indptr_c) is
+    # shape-uniform and stacks along the shard axis -- exactly what
+    # ``shard_map`` needs to hand each chip its own schedule.  Each
+    # shard's bin sizes were clamped against its *own* table at plan
+    # time, so the uniform static ``table_size`` (the shard max) is inert
+    # and per-shard results stay bitwise the per-shard planned results.
+    table_size = 0
+    hash_sched = None
+    if algo in ("hash", "hash_vector") and mask_sh is None and \
+            sr.name == "plus_times":
+        table_size = max(p.table_size for p in plans)
+        hash_sched = (jnp.stack([p.offsets for p in plans]),
+                      jnp.stack([p.bin_tsize for p in plans]),
+                      jnp.stack([p.indptr_c for p in plans]))
+
     plan = DistributedPlan(
         key=key, row_starts=a_sh.row_starts, algorithm=algo,
         semiring=sr.name, complement_mask=complement_mask,
@@ -438,7 +501,8 @@ def plan_spgemm_1d(a_sh: ShardedCSR, b: CSR, *, algorithm: str = "auto",
         flop_cap=max(max(p.flop_cap for p in plans), 1),
         row_cap=max(p.row_cap for p in plans),
         k_width=max(p.k_width for p in plans),
-        nnz_c=sum(p.nnz_c for p in plans))
+        nnz_c=sum(p.nnz_c for p in plans),
+        table_size=table_size, hash_sched=hash_sched)
     if cache:
         cache_store(key, plan)
     return plan
@@ -514,6 +578,8 @@ def spgemm_1d(mesh: Mesh, a_sh: ShardedCSR, b: CSR, cap_c: int | None = None,
                    complement_mask=complement_mask,
                    sorted_output=sorted_output, cap_c=cap_c,
                    flop_cap=flop_cap, row_cap=None, k_width=None)
+    # no frozen schedule on the planless path: a hash request falls back
+    # to hash_jnp inside _local_spgemm (use plan_spgemm_1d for Pallas)
     fn = _build_1d_fn(mesh, axis, mask_sh is not None, statics)
     args = (a_sh.parts, b) + ((mask_sh.parts,) if mask_sh else ())
     return ShardedCSR(fn(*args), a_sh.row_starts, a_sh.n_rows_global)
@@ -707,6 +773,13 @@ class SummaPlan:
     out_cap: int             # uniform per-row-shard output capacity
     row_starts_out: Tuple[int, ...]
     nnz_c: int
+    #: static scratch allocation (max over panel plans) and stacked
+    #: per-(chip, panel) hash schedules ``(offsets (S, per, n_bins+1),
+    #: bin_tsize (S, per, n_bins), indptr_c (S, per, m+1))`` -- the SUMMA
+    #: twin of ``DistributedPlan.hash_sched``.
+    table_size: int = 0
+    hash_sched: Optional[Tuple[jax.Array, jax.Array, jax.Array]] = \
+        dataclasses.field(default=None, repr=False)
 
     def check_structure(self, a: CSR, b: CSR) -> None:
         assert a.shape == self.shape_a and b.shape == self.shape_b, \
@@ -726,8 +799,11 @@ class SummaPlan:
         self.check_structure(a, b)
         fn = _memoized_executor(self, (mesh, axis),
                                 lambda: _build_summa_fn(self, mesh, axis))
-        out = fn(self.a_struct, self.a_take, a.data,
-                 self.b_struct, self.b_take, b.data)
+        args = (self.a_struct, self.a_take, a.data,
+                self.b_struct, self.b_take, b.data)
+        if self.hash_sched is not None:
+            args = args + self.hash_sched
+        out = fn(*args)
         return ShardedCSR(out, self.row_starts_out, self.shape_a[0])
 
     __call__ = execute
@@ -742,8 +818,10 @@ def _build_summa_fn(plan: SummaPlan, mesh: Mesh, axis: str):
     statics = dict(algorithm=plan.algorithm, semiring=plan.semiring,
                    complement_mask=False, sorted_output=False,
                    cap_c=plan.cap_c, flop_cap=plan.flop_cap,
-                   row_cap=plan.row_cap, k_width=plan.k_width)
+                   row_cap=plan.row_cap, k_width=plan.k_width,
+                   table_size=plan.table_size)
     boolean = plan.semiring == "boolean"
+    with_sched = plan.hash_sched is not None
 
     def gather(struct, take, data):
         s_loc = jax.tree.map(lambda x: x[0], struct)     # (per, ...) local
@@ -752,14 +830,17 @@ def _build_summa_fn(plan: SummaPlan, mesh: Mesh, axis: str):
         vals = jnp.where(live, data[take[0]], 0).astype(data.dtype)
         return dataclasses.replace(s_loc, data=vals)
 
-    def local(a_struct, a_take, a_data, b_struct, b_take, b_data):
+    def local(a_struct, a_take, a_data, b_struct, b_take, b_data, *sched):
         a_loc = gather(a_struct, a_take, a_data)    # (per, ...) stacked
         b_loc = gather(b_struct, b_take, b_data)
+        # this chip's (per, ...) schedule stack, one slice per K-panel
+        hs_loc = tuple(r[0] for r in sched) if with_sched else None
         acc = jnp.zeros((m, n), a_data.dtype)
         for p in range(per):
             a_p = jax.tree.map(lambda x: x[p], a_loc)
             b_p = jax.tree.map(lambda x: x[p], b_loc)
-            c_p = _local_spgemm(a_p, b_p, None, **statics)
+            hs = tuple(x[p] for x in hs_loc) if with_sched else None
+            c_p = _local_spgemm(a_p, b_p, None, hash_sched=hs, **statics)
             # the reduce-scatter merge is an elementwise +, which is the
             # semiring add for every semiring this path admits (boolean
             # partials are 0/1 counts, thresholded after the scatter)
@@ -771,9 +852,9 @@ def _build_summa_fn(plan: SummaPlan, mesh: Mesh, axis: str):
         c_loc = CSR.from_dense(part, cap=plan.out_cap)
         return jax.tree.map(lambda x: x[None], c_loc)
 
-    return shard_map(local, mesh=mesh,
-                     in_specs=(P(axis), P(axis), P(), P(axis), P(axis),
-                               P()),
+    in_specs = (P(axis), P(axis), P(), P(axis), P(axis), P()) + \
+        ((P(axis), P(axis), P(axis)) if with_sched else ())
+    return shard_map(local, mesh=mesh, in_specs=in_specs,
                      out_specs=P(axis), check_rep=False)
 
 
@@ -841,6 +922,26 @@ def plan_spgemm_summa(a: CSR, b: CSR, n_shards: int,
                                      semiring=sr.name, n_bins=n_bins,
                                      cache=cache))
 
+    # Per-(chip, panel) frozen hash schedules, stacked (S, per, ...):
+    # every panel plan shares n_bins and the global row count m, so the
+    # arrays are shape-uniform.  Boolean is general (post-scatter
+    # threshold notwithstanding, the *local* product is a boolean-semiring
+    # call) and keeps the jnp body, exactly like the 1D path.
+    table_size = 0
+    hash_sched = None
+    if algo in ("hash", "hash_vector") and sr.name == "plus_times":
+        table_size = max(p.table_size for p in plans)
+
+        def stack2(field):
+            rows = [jnp.stack([field(plans[s * per + p])
+                               for p in range(per)])
+                    for s in range(n_shards)]
+            return jnp.stack(rows)
+
+        hash_sched = (stack2(lambda p: p.offsets),
+                      stack2(lambda p: p.bin_tsize),
+                      stack2(lambda p: p.indptr_c))
+
     plan = SummaPlan(
         key=key, n_shards=n_shards, k_panels=k_panels, bounds=bounds,
         algorithm=algo, semiring=sr.name, shape_a=a.shape, shape_b=b.shape,
@@ -856,7 +957,7 @@ def plan_spgemm_summa(a: CSR, b: CSR, n_shards: int,
         row_cap=max(p.row_cap for p in plans),
         k_width=max(p.k_width for p in plans),
         out_cap=out_cap, row_starts_out=row_starts_out,
-        nnz_c=gplan.nnz_c)
+        nnz_c=gplan.nnz_c, table_size=table_size, hash_sched=hash_sched)
     if cache:
         cache_store(key, plan)
     return plan

@@ -29,8 +29,14 @@ distributed plans (``"dist_1d"``/``"summa"``) and chain plans
 own kinds (:func:`plan_cache_stats` reports per-kind occupancy).
 
 Planning is a host-side (eager) operation: the exact capacities must be
-concrete Python ints to become static shapes.  ``execute`` is jit-friendly
--- it only calls the already-specialized numeric primitives.
+concrete Python ints to become static shapes.  ``execute`` is
+trace-friendly -- it only calls the already-specialized numeric
+primitives, and since the plan-frozen hash schedules ride as array
+operands (not static arguments), the planned hash path runs unchanged
+under ``jit``, ``vmap`` (a batched grid over members via the kernels'
+``custom_vmap`` rule), and inside ``shard_map`` bodies (DESIGN.md
+section 14).  ``spgemm_hash_jnp`` survives in the dispatch only as the
+reference oracle and as the body for general semirings.
 """
 from __future__ import annotations
 

@@ -230,9 +230,11 @@ def choose_algorithm_from_stats(stats: SpGEMMStats, sorted_output: bool,
 
     if use_case == "batch":
         # Fleet of small products fused into one vmapped program
-        # (core.batch): the Pallas kernels cannot run under vmap, so the
-        # families on offer are esc / heap / hash_jnp -- and the stats are
-        # the *aggregate* of a capacity class (recipe.aggregate_stats).
+        # (core.batch): the hash kernels run natively under vmap (the
+        # batched grid behind the custom_vmap rule in
+        # repro.kernels.spgemm_hash), so the full esc / heap / hash
+        # families are on offer -- and the stats are the *aggregate* of a
+        # capacity class (recipe.aggregate_stats).
         # Unsorted output keeps the C8 default for every semiring: the
         # hash family's select order costs nothing extra and skips every
         # sort (for boolean/any_pair it is also the Table-4 row).  Sorted

@@ -497,9 +497,14 @@ def spgemm(a: CSR, b: CSR, cap_c: int | None = None,
                           complement_mask=complement_mask)
     elif algorithm == "hash_jnp":
         # Explicit jnp-fallback request: same contract as the hash family
-        # (unsorted select output) with no Pallas dependency.  This is what
-        # the distributed executor runs inside shard_map, where the Pallas
-        # kernel's eager inspection cannot trace (core/distributed.py).
+        # (unsorted select output) with no Pallas dependency.  Its roles
+        # today: the reference oracle in the differential tests, and the
+        # body of *planless* traced hash calls (the planned paths thread
+        # frozen schedules through vmap/shard_map and run the real Pallas
+        # kernel -- core/batch.py, core/distributed.py).
+        kw.pop("schedule", None)
+        kw.pop("indptr_c", None)
+        kw.pop("table_size", None)
         out = spgemm_hash_jnp(a, b, cap_c, semiring=sr, mask=mask,
                               complement_mask=complement_mask, **kw)
     elif algorithm in ("hash", "hash_vector"):
@@ -510,6 +515,8 @@ def spgemm(a: CSR, b: CSR, cap_c: int | None = None,
             kw.pop("table_size", None)
             kw.pop("vector", None)
             kw.pop("interpret", None)
+            kw.pop("schedule", None)
+            kw.pop("indptr_c", None)
             out = spgemm_hash_jnp(a, b, cap_c, semiring=sr, mask=mask,
                                   complement_mask=complement_mask, **kw)
         else:

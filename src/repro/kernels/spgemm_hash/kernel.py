@@ -22,6 +22,16 @@ the row bins stream through double-buffered DMA windows, which changes the
 BlockSpecs but not the kernel body.  Scalar row pointers (A, B, C) and the
 bin offsets ride in SMEM via ``PrefetchScalarGridSpec`` so the control loops
 never touch VMEM.
+
+Batched-grid variants (``batched_symbolic_call`` / ``batched_numeric_call``)
+add a leading grid dimension over fleet members: grid ``(n_members,
+n_bins)``, member operands blocked ``(1, cap)`` by BlockSpec, schedules as
+2-D prefetched scalars indexed ``[member, bin]``.  Scratch stays a single
+unbatched table (static per capacity class) because ``_row_loop``
+reinitializes it per row -- no cross-member state survives.  These are the
+kernels ``ops.py`` swaps in through a ``custom_vmap`` rule so the planned
+hash path traces under ``vmap`` (batched fleets) and ``shard_map``
+(distributed executors) with bitwise-identical per-member results.
 """
 from __future__ import annotations
 
@@ -134,6 +144,13 @@ def _row_loop(i, *, indptr_a_ref, indptr_b_ref, a_idx_ref, a_val_ref,
             is_new = tkey_ref[slot] == EMPTY
             tkey_ref[slot] = c
             if numeric:
+                # NB the backend is free to contract this into an FMA (one
+                # rounding per probe -- the host LLVM backend does, matching
+                # the paper's AVX-512 FMA kernels).  Cross-oracle bitwise
+                # claims therefore hold for exactly-representable arithmetic
+                # (the dyadic fuzz values); against per-product-rounding
+                # references (jnp twin, scipy) real-valued results may
+                # differ by 1 ulp per accumulated product.
                 tval_ref[slot] = tval_ref[slot] + av * b_val_ref[t]
             return inserted + is_new.astype(jnp.int32)
 
@@ -265,4 +282,153 @@ def numeric_call(n_bins: int, m: int, cap_a: int, cap_b: int, cap_c: int,
         interpret=interpret,
         compiler_params=_compat.CompilerParams(
             dimension_semantics=("arbitrary",)),
+    ))
+
+
+# ---------------------------------------------------------------------------
+# batched grid: one extra grid dimension over fleet members / row shards
+# ---------------------------------------------------------------------------
+
+class _View:
+    """1-D view of a ref's row ``lead`` so ``_row_loop`` runs unchanged.
+
+    Member operands arrive as ``(1, cap)`` BlockSpec blocks (lead 0) and
+    schedules as full 2-D prefetched scalars (lead = member id); either way
+    the row/probe loops only ever see ``ref[lead, i]``.
+    """
+
+    def __init__(self, ref, lead):
+        self._ref, self._lead = ref, lead
+
+    def __getitem__(self, i):
+        return self._ref[self._lead, i]
+
+    def __setitem__(self, i, v):
+        self._ref[self._lead, i] = v
+
+
+def _batched_symbolic_kernel(offsets_ref, tsize_ref, indptr_a_ref,
+                             indptr_b_ref, a_idx_ref, a_val_ref, b_idx_ref,
+                             b_val_ref, row_nnz_ref, tkey_ref, *,
+                             table_size, vector):
+    e = pl.program_id(0)                      # fleet member / row shard
+    b = pl.program_id(1)                      # equal-flop row bin
+    tsz = jnp.minimum(tsize_ref[e, b], jnp.int32(table_size))
+    out = _View(row_nnz_ref, 0)
+
+    def do_row(i, _):
+        cnt = _row_loop(
+            i, indptr_a_ref=_View(indptr_a_ref, e),
+            indptr_b_ref=_View(indptr_b_ref, e),
+            a_idx_ref=_View(a_idx_ref, 0), a_val_ref=_View(a_val_ref, 0),
+            b_idx_ref=_View(b_idx_ref, 0), b_val_ref=_View(b_val_ref, 0),
+            tkey_ref=tkey_ref, tval_ref=None, tsize=tsz, vector=vector,
+            numeric=False)
+        out[i] = cnt
+        return 0
+
+    jax.lax.fori_loop(offsets_ref[e, b], offsets_ref[e, b + 1], do_row, 0)
+
+
+def _batched_numeric_kernel(offsets_ref, tsize_ref, indptr_a_ref,
+                            indptr_b_ref, indptr_c_ref, a_idx_ref, a_val_ref,
+                            b_idx_ref, b_val_ref, out_idx_ref, out_val_ref,
+                            tkey_ref, tval_ref, *, table_size, vector):
+    e = pl.program_id(0)
+    b = pl.program_id(1)
+    tsz = jnp.minimum(tsize_ref[e, b], jnp.int32(table_size))
+    ic = _View(indptr_c_ref, e)               # prefetched: full 2-D array
+    oi, ov = _View(out_idx_ref, 0), _View(out_val_ref, 0)
+
+    @pl.when(b == 0)
+    def _init():
+        out_idx_ref[...] = jnp.zeros_like(out_idx_ref)
+        out_val_ref[...] = jnp.zeros_like(out_val_ref)
+
+    def do_row(i, _):
+        _row_loop(
+            i, indptr_a_ref=_View(indptr_a_ref, e),
+            indptr_b_ref=_View(indptr_b_ref, e),
+            a_idx_ref=_View(a_idx_ref, 0), a_val_ref=_View(a_val_ref, 0),
+            b_idx_ref=_View(b_idx_ref, 0), b_val_ref=_View(b_val_ref, 0),
+            tkey_ref=tkey_ref, tval_ref=tval_ref, tsize=tsz, vector=vector,
+            numeric=True)
+        base = ic[i]
+
+        def flush(s, cnt):
+            key = tkey_ref[s]
+            occupied = key != EMPTY
+            pos = base + cnt
+
+            @pl.when(occupied)
+            def _():
+                oi[pos] = key
+                ov[pos] = tval_ref[s]
+            return cnt + occupied.astype(jnp.int32)
+
+        jax.lax.fori_loop(0, tsz, flush, jnp.int32(0))
+        return 0
+
+    jax.lax.fori_loop(offsets_ref[e, b], offsets_ref[e, b + 1], do_row, 0)
+
+
+def _bfull(cap):
+    # one (1, cap) block per member; bins share the member's block.
+    return pl.BlockSpec((1, cap), lambda e, b, *prefetch: (e, 0))
+
+
+@functools.lru_cache(maxsize=256)
+def batched_symbolic_call(n_members: int, n_bins: int, m: int, cap_a: int,
+                          cap_b: int, table_size: int, vector: bool,
+                          interpret: bool):
+    """Batched-grid symbolic phase: grid ``(n_members, n_bins)``.
+
+    Signature of the returned callable mirrors :func:`symbolic_call` with a
+    leading member axis on every operand: schedules ``(n_members, n_bins+1)``
+    / ``(n_members, n_bins)``, CSR payloads ``(n_members, cap)``, output
+    row counts ``(n_members, m)``.  The scratch table is shared across the
+    whole grid -- ``_row_loop`` reinitializes it per row, so member programs
+    cannot observe each other, and the static allocation is the capacity
+    class's bin max (per-member effective sizes still ride in as data).
+    """
+    kernel = functools.partial(_batched_symbolic_kernel,
+                               table_size=table_size, vector=vector)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,           # offsets, bin_tsize, indptr_a/b
+        grid=(n_members, n_bins),
+        in_specs=[_bfull(cap_a), _bfull(cap_a), _bfull(cap_b), _bfull(cap_b)],
+        out_specs=_bfull(m),
+        scratch_shapes=[pltpu.VMEM((table_size,), jnp.int32)],
+    )
+    return jax.jit(pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_members, m), jnp.int32),
+        interpret=interpret,
+        compiler_params=_compat.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+    ))
+
+
+@functools.lru_cache(maxsize=256)
+def batched_numeric_call(n_members: int, n_bins: int, m: int, cap_a: int,
+                         cap_b: int, cap_c: int, table_size: int,
+                         vector: bool, interpret: bool):
+    """Batched-grid numeric phase; see :func:`batched_symbolic_call`."""
+    kernel = functools.partial(_batched_numeric_kernel,
+                               table_size=table_size, vector=vector)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=5,   # offsets, bin_tsize, indptr_a/b, indptr_c
+        grid=(n_members, n_bins),
+        in_specs=[_bfull(cap_a), _bfull(cap_a), _bfull(cap_b), _bfull(cap_b)],
+        out_specs=[_bfull(cap_c), _bfull(cap_c)],
+        scratch_shapes=[pltpu.VMEM((table_size,), jnp.int32),
+                        pltpu.VMEM((table_size,), jnp.float32)],
+    )
+    return jax.jit(pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((n_members, cap_c), jnp.int32),
+                   jax.ShapeDtypeStruct((n_members, cap_c), jnp.float32)],
+        interpret=interpret,
+        compiler_params=_compat.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
     ))

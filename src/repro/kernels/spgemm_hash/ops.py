@@ -24,15 +24,58 @@ Inspector-executor path (``core.plan``): ``schedule=`` takes a precomputed
 ``(offsets, bin_tsize)`` pair and ``indptr_c=`` the symbolic phase's exact
 row pointer, so a structure-identical repeat product runs the numeric
 kernel alone.
+
+Trace contexts: with a plan-frozen schedule (and static ``table_size``)
+every dynamic value is an ordinary traced array, so the planned path runs
+under ``jit``, inside ``shard_map`` bodies, and -- through a ``custom_vmap``
+rule that swaps in the batched-grid kernels of ``kernel.py`` -- under
+``vmap`` over fleet members.  Only the *inspection* (``hash_schedule`` with
+no pinned ``table_size``) needs concrete inputs.  ``spgemm_hash_jnp``
+remains solely as a reference oracle for differential tests and as the
+documented fallback for general semirings / masks and planless traced
+calls.
+
+Rounding contract vs the oracle: the kernel accumulates with the
+backend's fused multiply-add (one rounding per probe; the host LLVM
+backend contracts, matching the paper's AVX-512 FMA kernels), while the
+jnp twin -- like scipy -- rounds every product before summing.  Sparsity
+pattern, row pointers, and output ordering agree bitwise always; values
+agree bitwise whenever the arithmetic is exactly representable (the
+dyadic fuzz values), and to 1 ulp per accumulated product otherwise.
+
+``KERNEL_CALLS`` counts, at trace time, which Pallas entry was
+staged -- tests use it to prove the real kernel (not the jnp twin) is in a
+compiled program.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
+from jax import custom_batching
 
 from repro.core.formats import CSR
 import repro.core.schedule as sched
 from . import kernel as K
+
+#: Trace-time dispatch counters: how many times each Pallas entry point was
+#: staged into a computation (eager call or jit trace; dispatch-cache hits
+#: do not re-count).  Keys: symbolic, numeric, batched_symbolic,
+#: batched_numeric -- the ``batched_*`` entries are the vmap-rule kernels.
+KERNEL_CALLS = {"symbolic": 0, "numeric": 0,
+                "batched_symbolic": 0, "batched_numeric": 0}
+
+
+def reset_kernel_calls() -> None:
+    """Zero the trace-time dispatch counters (test/bench helper)."""
+    for k in KERNEL_CALLS:
+        KERNEL_CALLS[k] = 0
+
+
+def kernel_call_counts() -> dict:
+    """Snapshot of :data:`KERNEL_CALLS`."""
+    return dict(KERNEL_CALLS)
 
 
 def _is_concrete(x) -> bool:
@@ -61,6 +104,69 @@ def hash_schedule(a: CSR, b: CSR, n_bins: int,
     bin_tsize = sched.bin_table_sizes(tsize, b.n_cols, table_size,
                                       floor=K.CHUNK)
     return offsets, bin_tsize, table_size
+
+
+# ---------------------------------------------------------------------------
+# trace-context entry points: the plain kernels, made vmappable
+# ---------------------------------------------------------------------------
+# ``jax.vmap`` has no batching rule for a pallas_call with scalar-prefetch
+# operands whose *schedule semantics* differ per member, so each entry wraps
+# the plain 1-D-grid kernel in a ``custom_vmap`` whose rule dispatches the
+# natively batched grid of ``kernel.py`` (grid (n_members, n_bins)) instead.
+# Unbatched operands (e.g. a shared B, or a schedule override closed over by
+# a vmapped caller) are broadcast along the member axis; BlockSpec blocking
+# keeps the per-program working set at one member regardless.
+
+@functools.lru_cache(maxsize=256)
+def _symbolic_entry(n_bins: int, m: int, cap_a: int, cap_b: int,
+                    table_size: int, vector: bool, interpret: bool):
+    plain = K.symbolic_call(n_bins, m, cap_a, cap_b, table_size, vector,
+                            interpret)
+
+    @custom_batching.custom_vmap
+    def sym(offsets, bin_tsize, indptr_a, indptr_b, a_idx, a_val,
+            b_idx, b_val):
+        KERNEL_CALLS["symbolic"] += 1
+        return plain(offsets, bin_tsize, indptr_a, indptr_b,
+                     a_idx, a_val, b_idx, b_val)
+
+    @sym.def_vmap
+    def _rule(axis_size, in_batched, *args):
+        KERNEL_CALLS["batched_symbolic"] += 1
+        args = [x if bd else jnp.broadcast_to(x, (axis_size,) + x.shape)
+                for x, bd in zip(args, in_batched)]
+        out = K.batched_symbolic_call(axis_size, n_bins, m, cap_a, cap_b,
+                                      table_size, vector, interpret)(*args)
+        return out, True
+
+    return sym
+
+
+@functools.lru_cache(maxsize=256)
+def _numeric_entry(n_bins: int, m: int, cap_a: int, cap_b: int, cap_c: int,
+                   table_size: int, vector: bool, interpret: bool):
+    plain = K.numeric_call(n_bins, m, cap_a, cap_b, cap_c, table_size,
+                           vector, interpret)
+
+    @custom_batching.custom_vmap
+    def num(offsets, bin_tsize, indptr_a, indptr_b, indptr_c,
+            a_idx, a_val, b_idx, b_val):
+        KERNEL_CALLS["numeric"] += 1
+        cols, vals = plain(offsets, bin_tsize, indptr_a, indptr_b, indptr_c,
+                           a_idx, a_val, b_idx, b_val)
+        return cols, vals
+
+    @num.def_vmap
+    def _rule(axis_size, in_batched, *args):
+        KERNEL_CALLS["batched_numeric"] += 1
+        args = [x if bd else jnp.broadcast_to(x, (axis_size,) + x.shape)
+                for x, bd in zip(args, in_batched)]
+        cols, vals = K.batched_numeric_call(
+            axis_size, n_bins, m, cap_a, cap_b, cap_c, table_size, vector,
+            interpret)(*args)
+        return (cols, vals), (True, True)
+
+    return num
 
 
 def spgemm_hash(a: CSR, b: CSR, cap_c: int, *, n_bins: int = 8,
@@ -99,14 +205,14 @@ def spgemm_hash(a: CSR, b: CSR, cap_c: int, *, n_bins: int = 8,
     n_bins = offsets.shape[0] - 1
 
     if indptr_c is None:
-        sym = K.symbolic_call(n_bins, m, a.cap, b.cap, table_size, vector,
+        sym = _symbolic_entry(n_bins, m, a.cap, b.cap, table_size, vector,
                               interpret)
         row_nnz = sym(offsets, bin_tsize, a.indptr, b.indptr,
                       a.indices, a.data.astype(jnp.float32),
                       b.indices, b.data.astype(jnp.float32))
         indptr_c = sched.prefix_sum(row_nnz).astype(jnp.int32)
 
-    num = K.numeric_call(n_bins, m, a.cap, b.cap, cap_c, table_size, vector,
+    num = _numeric_entry(n_bins, m, a.cap, b.cap, cap_c, table_size, vector,
                          interpret)
     cols_c, vals_c = num(offsets, bin_tsize, a.indptr, b.indptr, indptr_c,
                          a.indices, a.data.astype(jnp.float32),
@@ -135,7 +241,7 @@ def spgemm_hash_symbolic(a: CSR, b: CSR, *, n_bins: int = 8,
             "a precomputed schedule needs its static table_size"
         table_size = max(table_size, K.CHUNK)
     n_bins = offsets.shape[0] - 1
-    sym = K.symbolic_call(n_bins, m, a.cap, b.cap, table_size, vector,
+    sym = _symbolic_entry(n_bins, m, a.cap, b.cap, table_size, vector,
                           interpret)
     return sym(offsets, bin_tsize, a.indptr, b.indptr,
                a.indices, a.data.astype(jnp.float32),

@@ -8,9 +8,11 @@ shapes, empty rows/columns, empty matrices, duplicate-free sorted and
 *unsorted* CSRs, dyadic values.
 
 The pure-numpy helpers in the first half (``VALS``, :func:`rand_dense`,
-:func:`csr_of`, :func:`scramble_rows`) import unconditionally -- the
-deterministic grids of ``test_differential.py`` / ``test_batch.py`` /
-``test_hash_saturation.py`` share them with no optional dependency.  The
+:func:`csr_of`, :func:`scramble_rows`, :func:`member_value_fleet`, the
+trace-context runner :func:`run_planned_hash_in_context`) import
+unconditionally -- the deterministic grids of ``test_differential.py`` /
+``test_batch.py`` / ``test_hash_saturation.py`` /
+``test_trace_contexts.py`` share them with no optional dependency.  The
 hypothesis *strategies* in the second half exist only when the optional
 ``hypothesis`` extra is installed; consumers guard exactly like the old
 inline layers did::
@@ -52,6 +54,83 @@ def csr_of(d: np.ndarray, cap: int | None = None) -> CSR:
     """Sorted, duplicate-free CSR of a dense matrix."""
     r, c = np.nonzero(d)
     return CSR.from_numpy_coo(r, c, d[r, c], d.shape, cap=cap)
+
+
+def member_value_fleet(ad: np.ndarray, n_members: int, seed: int) -> np.ndarray:
+    """``(n_members, nnz)`` dyadic value stacks on ``ad``'s fixed pattern.
+
+    The traced-context suites vmap one structure-frozen plan over these
+    per-member values; row 0 is ``ad``'s own values so member 0 doubles
+    as the eager-path case.
+    """
+    rng = np.random.default_rng(seed)
+    nnz = int(np.count_nonzero(ad))
+    vals = rng.choice(VALS, size=(n_members, nnz)).astype(np.float32)
+    if nnz:
+        r, c = np.nonzero(ad)
+        vals[0] = ad[r, c]
+    return vals
+
+
+def run_planned_hash_in_context(a: CSR, b: CSR, member_vals: np.ndarray,
+                                context: str, vector: bool = False):
+    """Execute one structure-frozen hash plan inside a trace context.
+
+    Plans ``a @ b`` once with the real Pallas hash kernel, then executes
+    it over ``member_vals`` -- a ``(E, nnz_a)`` stack of value fleets on
+    A's fixed sparsity pattern -- inside the requested context:
+
+      * ``"vmap"``: ``jax.vmap`` of the plan's execute over member values
+        (dispatches the batched-grid kernel via its ``custom_vmap`` rule);
+      * ``"shard_map"``: a one-device in-process ``shard_map`` whose body
+        runs the plan's execute per member (the plain kernel traces
+        inside the SPMD body);
+      * ``"both"``: the ``shard_map`` body vmaps over the member axis.
+
+    Returns ``(dense, counts)``: the ``(E, m, n)`` dense results and the
+    kernel-call counter delta, so callers can assert the Pallas kernel
+    (not the jnp twin) was staged.  Dyadic values make every comparison
+    against a per-product-rounding oracle bitwise despite the kernel's
+    FMA accumulation (see ``repro.kernels.spgemm_hash.ops``).
+    """
+    import dataclasses
+    import jax
+    from jax.sharding import Mesh, PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+    from repro.core import plan_spgemm
+    from repro.kernels.spgemm_hash import ops as hash_ops
+
+    algorithm = "hash_vector" if vector else "hash"
+    plan = plan_spgemm(a, b, algorithm=algorithm)
+    e = member_vals.shape[0]
+    pad = a.cap - member_vals.shape[1]
+    vals = np.concatenate(
+        [member_vals, np.zeros((e, pad), np.float32)], axis=1) \
+        if pad else member_vals
+    vals = jnp.asarray(vals)
+
+    def one(v):
+        return plan.execute(dataclasses.replace(a, data=v), b).to_dense()
+
+    hash_ops.reset_kernel_calls()
+    before = hash_ops.kernel_call_counts()
+    if context == "vmap":
+        dense = jax.vmap(one)(vals)
+    else:
+        mesh = Mesh(np.array(jax.devices()[:1]), ("x",))
+        if context == "shard_map":
+            body = lambda v: jnp.stack([one(v[i]) for i in range(e)])
+        elif context == "both":
+            body = lambda v: jax.vmap(one)(v)
+        else:
+            raise ValueError(f"unknown trace context {context!r}")
+        # check_rep=False matches the production executors in
+        # core.distributed: custom_vmap_call has no replication rule
+        dense = shard_map(body, mesh=mesh, in_specs=(P(),),
+                          out_specs=P(), check_rep=False)(vals)
+    counts = {k: v - before[k]
+              for k, v in hash_ops.kernel_call_counts().items()}
+    return np.asarray(dense), counts
 
 
 def scramble_rows(a: CSR) -> CSR:
@@ -138,6 +217,27 @@ if HAVE_HYPOTHESIS:
         semiring = draw(st.sampled_from(SEMIRINGS))
         algo = draw(st.sampled_from(ALGOS))
         return ad, bd, md, complement, semiring, algo
+
+    @st.composite
+    def traced_context_case(draw, max_members: int = 3):
+        """A planned-product-under-trace-context case:
+        ``(ad, bd, member_vals, context)``.
+
+        ``ad``/``bd`` fix one product structure; ``member_vals`` is an
+        ``(E, nnz_a)`` dyadic value stack on A's pattern (row 0 = ``ad``'s
+        own values); ``context`` picks where the structure-frozen plan
+        executes: under ``vmap``, inside a ``shard_map`` body, or both
+        nested.  Consumed by :func:`run_planned_hash_in_context`.
+        """
+        m, k, n = draw(DIMS), draw(DIMS), draw(DIMS)
+        seed = draw(st.integers(0, 2**16))
+        ad = draw(dense_with_structure(m, k, seed))
+        bd = rand_dense(k, n, draw(DENSITIES), seed + 1)
+        context = draw(st.sampled_from(("vmap", "shard_map", "both")))
+        e = draw(st.integers(2, max_members))
+        member_vals = member_value_fleet(ad, e, draw(st.integers(0, 2**16)))
+        vector = draw(st.booleans())
+        return ad, bd, member_vals, context, vector
 
     @st.composite
     def batch_case(draw, min_products: int = 2, max_products: int = 6):

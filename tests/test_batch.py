@@ -140,10 +140,17 @@ def test_batch_masked_members():
              _csr(_rand_dense(8, 8, 0.5, seed=8))]
     plan = plan_batch(pairs, masks=masks)
     outs = plan.execute(pairs)
-    for (a, b), m, c in zip(pairs, masks, outs):
-        ref = spgemm(a, b, 64, algorithm="esc", mask=m)
+    for i, ((a, b), m) in enumerate(zip(pairs, masks)):
+        c = outs[i]
+        # bitwise vs a single dispatch of the member's planned algorithm
+        ref = spgemm(a, b, 64, algorithm=plan.algorithms[i], mask=m)
         assert np.array_equal(np.asarray(c.to_dense()),
                               np.asarray(ref.to_dense()))
+        # esc pins the mask-pruning semantics; it rounds every product
+        # while the Pallas hash accumulates with FMA, so allclose here
+        esc = spgemm(a, b, 64, algorithm="esc", mask=m)
+        assert np.allclose(np.asarray(c.to_dense()),
+                           np.asarray(esc.to_dense()), rtol=1e-6)
     masked_cls = {plan.class_of[2], plan.class_of[3]}
     unmasked_cls = {plan.class_of[0], plan.class_of[1]}
     assert not (masked_cls & unmasked_cls)

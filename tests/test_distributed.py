@@ -106,20 +106,22 @@ b = rmat_csr(6, 4, "ER", seed=1)
 a_sh = shard_csr_rows(a, 8, b=b)       # equal-flop boundaries
 assert a_sh.row_starts[0] == 0 and a_sh.row_starts[-1] == 64
 
-# bit-match per algorithm (hash references the contract-equivalent jnp
-# accumulator; the Pallas kernel reassociates sums by ~1 ulp)
-for algo, ref_algo in (("esc", "esc"), ("heap", "heap"),
-                       ("hash", "hash_jnp")):
-    ref = plan_spgemm(a, b, algorithm=ref_algo).execute(a, b)
+# bit-match per algorithm: each planned local product now runs the same
+# kernel the single-node planned path runs -- including the Pallas hash
+# kernel, which traces inside the shard_map body
+for algo in ("esc", "heap", "hash"):
+    ref = plan_spgemm(a, b, algorithm=algo).execute(a, b)
     dp = plan_spgemm_1d(a_sh, b, algorithm=algo)
     c = unshard_rows(dp.execute(mesh, a_sh, b))
     assert np.array_equal(np.asarray(c.to_dense()),
                           np.asarray(ref.to_dense())), algo
-ref_pallas = plan_spgemm(a, b, algorithm="hash").execute(a, b)
+# the jnp twin stays the reference oracle: same accumulation order, but
+# it rounds every product where the kernel fuses multiply-add (~1 ulp)
+ref_twin = plan_spgemm(a, b, algorithm="hash_jnp").execute(a, b)
 c_hash = unshard_rows(plan_spgemm_1d(a_sh, b, algorithm="hash")
                       .execute(mesh, a_sh, b))
 assert np.allclose(np.asarray(c_hash.to_dense()),
-                   np.asarray(ref_pallas.to_dense()), atol=1e-5)
+                   np.asarray(ref_twin.to_dense()), atol=1e-5)
 
 # masked boolean product bit-matches too
 mask = rmat_csr(6, 3, "ER", seed=7)

@@ -13,7 +13,10 @@ must double the table.
 Covered for the Pallas kernels (``spgemm_hash``, scalar and vectorized
 probing -- at table size == CHUNK the vector path degenerates to a single
 chunk, its own edge) and the jnp fallback (``spgemm_hash_jnp``), sorted
-and unsorted output, plus the planner path that freezes per-bin sizes.
+and unsorted output, plus the planner path that freezes per-bin sizes --
+and, under ``jax.vmap`` over a two-member value fleet, the batched-grid
+twins of both kernels at the same boundaries (the saturated table is
+per-program scratch: members must not observe each other's slots).
 
 Values are dyadic so every comparison is exact (bitwise on the dense
 view).
@@ -105,6 +108,73 @@ def test_pallas_hash_one_past_fill_doubles_table(vector, sorted_output):
     if sorted_output:
         c = c.sort_rows()
     _check(c, cd, sorted_output)
+
+
+def _vmap_saturation_fleet(a, b, d, vector, table_size, schedule):
+    """Run a two-member value fleet on the saturating structure under
+    ``jax.vmap`` and return per-member ``(indptr, dense)`` stacks plus the
+    kernel-counter delta.  The schedule override closes over the vmapped
+    call, so the ``custom_vmap`` rule must broadcast it onto the batched
+    grid; the unplanned entry also exercises the batched *symbolic*
+    kernel counting a saturated table."""
+    import dataclasses
+
+    import jax
+
+    member_vals = jnp.stack([a.data, a.data * jnp.float32(2.0)])
+
+    def one(v):
+        c = hash_ops.spgemm_hash(dataclasses.replace(a, data=v), b,
+                                 cap_c=2 * d, vector=vector,
+                                 table_size=table_size, schedule=schedule)
+        return c.indptr, c.to_dense()
+
+    hash_ops.reset_kernel_calls()
+    ips, denses = jax.vmap(one)(member_vals)
+    return member_vals, np.asarray(ips), np.asarray(denses), \
+        hash_ops.kernel_call_counts()
+
+
+@pytest.mark.parametrize("vector", (False, True))
+def test_batched_grid_load_factor_one_under_vmap(vector):
+    """The load-factor-1.0 pin lifted onto the batched-grid kernel: every
+    vmapped member runs row 0 at a completely full table and row 1
+    re-probing it for each duplicate, and must flush exactly ``d`` slots
+    with exact values -- per member."""
+    d = CHUNK
+    a, b = _pair_with_row_flop(d)
+    offsets = jnp.asarray([0, 2], jnp.int32)
+    bin_tsize = jnp.asarray([d], jnp.int32)
+    member_vals, ips, denses, counts = _vmap_saturation_fleet(
+        a, b, d, vector, table_size=d, schedule=(offsets, bin_tsize))
+    assert counts["batched_symbolic"] > 0 and counts["batched_numeric"] > 0
+    for e in range(2):
+        assert ips[e, 1] - ips[e, 0] == d and ips[e, 2] - ips[e, 1] == d
+        a_e = CSR(a.indptr, a.indices, member_vals[e], a.nnz, a.shape,
+                  sorted_cols=a.sorted_cols)
+        assert np.array_equal(denses[e].astype(np.float64),
+                              _oracle(a_e, b)), e
+
+
+@pytest.mark.parametrize("vector", (False, True))
+def test_batched_grid_one_past_fill_doubles_table_under_vmap(vector):
+    """One past exact fill under ``vmap``: the natural sizing's doubled
+    table (2 * CHUNK) rides into the batched grid as data and every
+    member stays exact."""
+    d = CHUNK + 1
+    a, b = _pair_with_row_flop(d)
+    offsets, bin_tsize, table_size = hash_ops.hash_schedule(a, b, n_bins=1)
+    assert table_size == 2 * CHUNK                 # doubled, not saturated
+    member_vals, ips, denses, counts = _vmap_saturation_fleet(
+        a, b, d, vector, table_size=table_size,
+        schedule=(offsets, bin_tsize))
+    assert counts["batched_symbolic"] > 0 and counts["batched_numeric"] > 0
+    for e in range(2):
+        assert ips[e, 1] - ips[e, 0] == d and ips[e, 2] - ips[e, 1] == d
+        a_e = CSR(a.indptr, a.indices, member_vals[e], a.nnz, a.shape,
+                  sorted_cols=a.sorted_cols)
+        assert np.array_equal(denses[e].astype(np.float64),
+                              _oracle(a_e, b)), e
 
 
 @pytest.mark.parametrize("sorted_output", (False, True))
