@@ -38,7 +38,6 @@ if "jax" not in sys.modules and \
                                " --xla_force_host_platform_device_count=8")
 
 import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 from jax.sharding import Mesh  # noqa: E402
 

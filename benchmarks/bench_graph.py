@@ -18,9 +18,8 @@ All rows go through ``benchmarks.common.emit`` (name,us_per_call,derived).
 from __future__ import annotations
 
 import numpy as np
-import jax.numpy as jnp
 
-from repro.core import (CSR, spgemm_esc, spgemm_heap, spgemm_hash_jnp, spmm,
+from repro.core import (spgemm_esc, spgemm_heap, spgemm_hash_jnp,
                         symbolic)
 from repro.core.spgemm import symbolic_flops
 from repro.data.rmat import rmat_csr, symmetrize, triangular_split

@@ -1,0 +1,39 @@
+"""Perf rows for the static contract checker itself.
+
+The verifier traces every planned executor to a jaxpr and walks it with
+the interval engine, so its runtime is a real cost worth tracking: a
+regression here means plan verification got slower (more eqns staged,
+deeper descents), which usually mirrors a regression in trace time of
+the executors themselves.
+
+Quick mode proves the single-product plan kinds only; ``--full`` sweeps
+all layer-1 kinds (batch/dist/summa/chain included).  The layer-2 lint
+row doubles as a live gate: a nonzero violation count in the derived
+column means the tree would fail CI's static-analysis job.
+"""
+from __future__ import annotations
+
+import pathlib
+import time
+
+from . import common
+
+
+def run(quick: bool) -> None:
+    from repro.verify import run_layer1, run_layer2
+
+    kinds = ["spgemm"] if quick else None
+    t0 = time.perf_counter()
+    cases = run_layer1(kinds)
+    dt = time.perf_counter() - t0
+    n_ok = sum(1 for c in cases if c.ok)
+    proved = sum(c.site_counts.get("proved", 0) for c in cases)
+    common.emit("verify_layer1" + ("_quick" if quick else "_full"), dt,
+                f"{n_ok}/{len(cases)}ok;{proved}proved")
+
+    root = pathlib.Path(__file__).resolve().parents[1]
+    t0 = time.perf_counter()
+    violations, waivers, n_files = run_layer2(str(root))
+    dt = time.perf_counter() - t0
+    common.emit("verify_layer2", dt,
+                f"{n_files}files;{len(violations)}viol;{len(waivers)}waived")

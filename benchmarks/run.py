@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import pathlib
 import platform
 import sys
 import time
@@ -27,6 +28,7 @@ from . import bench_plan as plan_bench
 from . import bench_distributed as dist_bench
 from . import bench_chain as chain_bench
 from . import bench_batch as batch_bench
+from . import bench_verify as verify_bench
 
 
 SUITES = [
@@ -48,7 +50,29 @@ SUITES = [
     ("distributed", lambda q: dist_bench.run(q)),
     ("chain", lambda q: chain_bench.run(q)),
     ("batch", lambda q: batch_bench.run(q)),
+    ("verify", lambda q: verify_bench.run(q)),
 ]
+
+
+def _git_sha() -> str:
+    """Current commit (best effort; benchmarks also run from tarballs)."""
+    import subprocess
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=pathlib.Path(__file__).resolve().parent, timeout=10)
+        sha = out.stdout.strip()
+        return sha if out.returncode == 0 and sha else "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
+def _jaxlib_version() -> str:
+    try:
+        import jaxlib
+        return getattr(jaxlib, "__version__", "unknown")
+    except ImportError:
+        return "unknown"
 
 
 def write_json(path: str, suites_run, failures: int) -> None:
@@ -57,7 +81,9 @@ def write_json(path: str, suites_run, failures: int) -> None:
     doc = {
         "schema": 1,
         "unix_time": int(time.time()),
+        "git_sha": _git_sha(),
         "jax": jax.__version__,
+        "jaxlib": _jaxlib_version(),
         "backend": jax.default_backend(),
         "device_count": jax.device_count(),
         "python": platform.python_version(),

@@ -13,8 +13,7 @@ O(n_layers)), with any remainder layers unrolled.
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 Plan = Tuple[Tuple[str, str], ...]

@@ -8,7 +8,6 @@ accumulation -- the standard mixed-precision recipe.
 from __future__ import annotations
 
 from functools import partial
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -21,8 +21,6 @@ oracle for the distributed path (tested in tests/test_moe.py).
 """
 from __future__ import annotations
 
-import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -13,8 +13,7 @@ Entry points (all pure; pctx carries mesh/sharding context):
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Tuple
+from typing import Any
 
 from jax.ad_checkpoint import checkpoint_name as _checkpoint_name
 

@@ -19,11 +19,10 @@ sequence sharding automatically).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass
 from typing import Any, Optional, Sequence, Tuple
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 AxisT = Optional[Any]   # None | str | tuple[str, ...]

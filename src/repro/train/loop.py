@@ -15,11 +15,10 @@ Fault-tolerance contract (DESIGN.md section 6):
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Any, Callable, Optional
+from dataclasses import dataclass
+from typing import Callable, Optional
 
 import jax
-import numpy as np
 
 from repro.checkpoint import Checkpointer
 from repro.data.lm_synthetic import DataPipeline

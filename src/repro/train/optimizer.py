@@ -10,9 +10,7 @@ Distributed-optimization features (DESIGN.md section 6):
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from functools import partial
 from typing import Any, NamedTuple
 
 import jax

@@ -1,0 +1,36 @@
+"""Static contract checker for the SpGEMM subsystems (two layers).
+
+Layer 1 (:mod:`repro.verify.bounds`) traces every planned executor to a
+jaxpr and walks it with an interval/bounds domain
+(:mod:`repro.verify.intervals`) seeded from the plan's frozen schedule:
+store/slice indices are proved within the planned capacities and p2
+table sizes, int32 prefix sums are proved unable to overflow given
+``schedule.guard_i32_flop``'s admitted range, and the jaxpr's primitive
+census is checked against the algorithm's budget (zero inspection
+primitives -- no symbolic Pallas kernel, no unbudgeted ``sort``, no
+``dot_general`` densify).
+
+Layer 2 (:mod:`repro.verify.lint` + :mod:`repro.verify.rules`) is an AST
+repo-rule linter over ``src/repro/`` enforcing source-level contracts
+(no densify in core execute paths, deterministic plan keys, static
+Pallas scratch shapes, counter hygiene, frozen-plan immutability, no
+Python branches on traced values, no dead imports).
+
+Both layers run as ``python -m repro.verify --all`` (the CI
+``static-analysis`` job) and are importable as test helpers -- see
+``tests/test_verify.py`` and DESIGN.md section 15.
+"""
+from .intervals import Ival, JaxprAnalyzer, Site, TOP
+from .bounds import (check_plan_vcs, verify_batch, verify_chain,
+                     verify_dist_1d, verify_spgemm, verify_summa,
+                     run_layer1)
+from .lint import LintViolation, lint_paths, run_layer2
+from .report import Report, layer1_to_dict, layer2_to_dict
+
+__all__ = [
+    "Ival", "JaxprAnalyzer", "Site", "TOP",
+    "check_plan_vcs", "verify_spgemm", "verify_batch", "verify_dist_1d",
+    "verify_summa", "verify_chain", "run_layer1",
+    "LintViolation", "lint_paths", "run_layer2",
+    "Report", "layer1_to_dict", "layer2_to_dict",
+]

@@ -1,0 +1,305 @@
+"""The repo-rule set: one AST visitor per codebase contract.
+
+Every rule here is demonstrated by a seeded violation in
+``tests/_bad_kernels.py`` (pinned by ``tests/test_verify.py``), and the
+clean run over the live tree gates CI.  Scoping lives *in* the rule --
+each knows which part of the repo owns its contract -- so the runner
+can hand every rule every file.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Tuple
+
+from .lint import rule
+
+Findings = List[Tuple[int, str]]
+
+
+def _func_root(node: ast.AST):
+    """Leftmost name of a (possibly dotted) call target, plus leaf attr."""
+    leaf = None
+    while isinstance(node, ast.Attribute):
+        leaf = leaf or node.attr
+        node = node.value
+    if isinstance(node, ast.Name):
+        return node.id, leaf or node.id
+    return None, leaf
+
+
+def _in_core(path: str) -> bool:
+    return "/core/" in path.replace("\\", "/")
+
+
+def _in_kernels(path: str) -> bool:
+    return "/kernels/" in path.replace("\\", "/")
+
+
+# ---------------------------------------------------------------------------
+@rule("no-densify",
+      "core/ execute paths must stay sparse: no to_dense()/todense() "
+      "calls outside explicitly waived sites (the dense oracle, the "
+      "SUMMA partial accumulator)")
+def no_densify(tree: ast.AST, src: str, path: str) -> Findings:
+    if not _in_core(path):
+        return []
+    out: Findings = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and \
+                isinstance(node.func, ast.Attribute) and \
+                node.func.attr in ("to_dense", "todense"):
+            out.append((node.lineno,
+                        f"densify call .{node.func.attr}() in core/"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+_NONDET_ROOTS = {"time", "random", "uuid", "datetime", "secrets"}
+_NONDET_BUILTINS = {"hash", "id"}
+
+
+@rule("plan-key-determinism",
+      "plan keys and cache lookups must be deterministic functions of "
+      "structure: no wall-clock, RNG, uuid, or PYTHONHASHSEED-dependent "
+      "builtins anywhere in core/")
+def plan_key_determinism(tree: ast.AST, src: str, path: str) -> Findings:
+    if not _in_core(path):
+        return []
+    out: Findings = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        root, leaf = _func_root(node.func)
+        if root in _NONDET_ROOTS:
+            out.append((node.lineno,
+                        f"nondeterministic source {root}.{leaf}() in core/"))
+        elif isinstance(node.func, ast.Name) and \
+                node.func.id in _NONDET_BUILTINS:
+            out.append((node.lineno,
+                        f"builtin {node.func.id}() is run-dependent "
+                        "(PYTHONHASHSEED / address); use a content digest"))
+        elif root in ("np", "numpy") and leaf is not None and \
+                isinstance(node.func, ast.Attribute) and \
+                isinstance(node.func.value, ast.Attribute) and \
+                node.func.value.attr == "random":
+            out.append((node.lineno, "np.random.* in core/"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+_SCRATCH_TYPES = {"VMEM", "SMEM", "ANY", "SemaphoreType", "MemorySpace"}
+
+
+@rule("pallas-static-shapes",
+      "every pallas_call declares out_shape, a grid (grid= or "
+      "grid_spec=), and inline scratch allocations with explicit "
+      "pltpu memory spaces and static shapes")
+def pallas_static_shapes(tree: ast.AST, src: str, path: str) -> Findings:
+    out: Findings = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        _, leaf = _func_root(node.func)
+        if leaf != "pallas_call":
+            continue
+        kw = {k.arg for k in node.keywords if k.arg}
+        if "out_shape" not in kw:
+            out.append((node.lineno, "pallas_call without out_shape"))
+        if not ({"grid", "grid_spec"} & kw):
+            out.append((node.lineno,
+                        "pallas_call without grid= or grid_spec="))
+        # scratch_shapes may ride on the call or inside its grid spec
+        for inner in ast.walk(node):
+            if not isinstance(inner, ast.Call):
+                continue
+            for k in inner.keywords:
+                if k.arg != "scratch_shapes":
+                    continue
+                if not isinstance(k.value, (ast.List, ast.Tuple)):
+                    out.append((k.value.lineno,
+                                "scratch_shapes must be an inline "
+                                "list/tuple of static allocations"))
+                    continue
+                for elt in k.value.elts:
+                    _, sleaf = _func_root(
+                        elt.func) if isinstance(elt, ast.Call) else (None,
+                                                                     None)
+                    if sleaf not in _SCRATCH_TYPES:
+                        out.append((elt.lineno,
+                                    "scratch allocation without an "
+                                    "explicit pltpu memory space"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+@rule("counter-reset",
+      "KERNEL_CALLS assertions must observe a well-defined window: any "
+      "function reading kernel_call_counts() calls reset_kernel_calls() "
+      "first (or snapshots a before-value ahead of the dispatch)")
+def counter_reset(tree: ast.AST, src: str, path: str) -> Findings:
+    out: Findings = []
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        reads: List[int] = []
+        resets: List[int] = []
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                _, leaf = _func_root(node.func)
+                if leaf == "kernel_call_counts":
+                    reads.append(node.lineno)
+                elif leaf == "reset_kernel_calls":
+                    resets.append(node.lineno)
+        if reads and not resets:
+            out.append((min(reads),
+                        f"{fn.name}() reads kernel_call_counts() without "
+                        "reset_kernel_calls(): the counter window is "
+                        "whatever ran before"))
+        elif reads and resets and min(resets) > min(reads):
+            # a pre-reset read is fine only as a before-snapshot that is
+            # actually assigned; a bare expression read is a lost window
+            first = min(reads)
+            assigned = any(isinstance(node, ast.Assign)
+                           and node.lineno == first
+                           for node in ast.walk(fn))
+            if not assigned:
+                out.append((first,
+                            f"{fn.name}() reads kernel_call_counts() "
+                            "before reset_kernel_calls() without "
+                            "snapshotting it"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+@rule("frozen-plan-immutability",
+      "frozen plan dataclasses are never mutated after construction: "
+      "object.__setattr__/setattr escape hatches may only touch "
+      "underscore-prefixed memoization slots")
+def frozen_plan_immutability(tree: ast.AST, src: str, path: str) -> Findings:
+    if "src/repro" not in path.replace("\\", "/"):
+        return []
+    out: Findings = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        is_obj_setattr = (isinstance(node.func, ast.Attribute)
+                          and node.func.attr == "__setattr__")
+        is_setattr = (isinstance(node.func, ast.Name)
+                      and node.func.id == "setattr")
+        if not (is_obj_setattr or is_setattr):
+            continue
+        attr_arg = node.args[1] if len(node.args) > 1 else None
+        if isinstance(attr_arg, ast.Constant) and \
+                isinstance(attr_arg.value, str):
+            if not attr_arg.value.startswith("_"):
+                out.append((node.lineno,
+                            f"setattr of public field "
+                            f"{attr_arg.value!r} on a (frozen) object"))
+        else:
+            out.append((node.lineno,
+                        "setattr with a computed attribute name defeats "
+                        "the frozen-plan contract"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+@rule("no-traced-branch",
+      "kernel bodies must not branch Python control flow on values "
+      "read from refs (trace-time if/while on traced data); use "
+      "lax.cond / pl.when")
+def no_traced_branch(tree: ast.AST, src: str, path: str) -> Findings:
+    if not _in_kernels(path):
+        return []
+    out: Findings = []
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        args = [a.arg for a in (fn.args.posonlyargs + fn.args.args
+                                + fn.args.kwonlyargs)]
+        if not any(a.endswith("_ref") for a in args):
+            continue
+        tainted = set()
+
+        def expr_tainted(node: ast.AST) -> bool:
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Name) and sub.id in tainted:
+                    return True
+                if isinstance(sub, ast.Subscript):
+                    root, _ = _func_root(sub.value)
+                    if root is not None and root.endswith("_ref"):
+                        return True
+                if isinstance(sub, ast.Call):
+                    _, leaf = _func_root(sub.func)
+                    if leaf == "load":
+                        return True
+            return False
+
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and expr_tainted(node.value):
+                for tgt in node.targets:
+                    for sub in ast.walk(tgt):
+                        if isinstance(sub, ast.Name):
+                            tainted.add(sub.id)
+            elif isinstance(node, ast.AugAssign) and \
+                    expr_tainted(node.value) and \
+                    isinstance(node.target, ast.Name):
+                tainted.add(node.target.id)
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.If, ast.While)) and \
+                    expr_tainted(node.test):
+                kind = "if" if isinstance(node, ast.If) else "while"
+                out.append((node.lineno,
+                            f"Python `{kind}` on a ref-read value in "
+                            f"kernel body {fn.name}()"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+@rule("dead-import",
+      "module-level imports must be used (or re-exported); stale seed "
+      "imports hide dead entry points")
+def dead_import(tree: ast.AST, src: str, path: str) -> Findings:
+    posix = path.replace("\\", "/")
+    if posix.endswith("__init__.py"):
+        return []          # re-export surface: unused-at-module is the point
+    imported: List[Tuple[int, str]] = []
+    for node in tree.body if isinstance(tree, ast.Module) else []:
+        stmts = [node]
+        if isinstance(node, ast.Try):
+            stmts = node.body + [s for h in node.handlers for s in h.body]
+        if isinstance(node, ast.If):    # TYPE_CHECKING / platform guards
+            stmts = node.body + node.orelse
+        for stmt in stmts:
+            if isinstance(stmt, ast.Import):
+                for alias in stmt.names:
+                    name = alias.asname or alias.name.split(".")[0]
+                    imported.append((stmt.lineno, name))
+            elif isinstance(stmt, ast.ImportFrom):
+                if stmt.module == "__future__":
+                    continue
+                for alias in stmt.names:
+                    if alias.name == "*":
+                        continue
+                    name = alias.asname or alias.name
+                    imported.append((stmt.lineno, name))
+    if not imported:
+        return []
+    used = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Name):
+            used.add(node.id)
+        elif isinstance(node, ast.Attribute):
+            root, _ = _func_root(node)
+            if root:
+                used.add(root)
+    # names re-exported via __all__ strings count as used
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name) and tgt.id == "__all__" and \
+                        isinstance(node.value, (ast.List, ast.Tuple)):
+                    for elt in node.value.elts:
+                        if isinstance(elt, ast.Constant):
+                            used.add(str(elt.value))
+    return [(lineno, f"unused module-level import {name!r}")
+            for lineno, name in imported if name not in used]

@@ -1,0 +1,53 @@
+"""Deliberately-broken code: one seeded violation per layer-2 lint rule.
+
+``tests/test_verify.py`` lints this source under a *pretend* in-tree
+path (``src/repro/core/kernels/_bad.py``) so every path-scoped rule is
+in scope, and asserts each rule fires exactly on its ``# BAD:`` line.
+The file itself is excluded from the CI lint surface
+(:func:`repro.verify.lint.default_paths` skips ``_bad_*.py``) and is
+never imported -- it only needs to parse.
+"""
+import os                                          # BAD: dead-import
+
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def densify_in_core(c):
+    return c.to_dense() @ c.to_dense().T           # BAD: no-densify
+
+
+def nondeterministic_plan_key(a):
+    import time
+    return (hash(a.indices.tobytes()),             # BAD: plan-key-determinism
+            time.time())                           # BAD: plan-key-determinism
+
+
+def undeclared_pallas_call(kernel, m):
+    # no out_shape, no grid, anonymous scratch allocation
+    return pl.pallas_call(                         # BAD: pallas-static-shapes
+        kernel,
+        scratch_shapes=[jnp.zeros((m,))],          # BAD: pallas-static-shapes
+    )
+
+
+def unreset_counter_assert(run, kernel_call_counts):
+    run()
+    counts = kernel_call_counts()                  # BAD: counter-reset
+    assert counts["hash"] == 1
+
+
+def mutate_frozen_plan(plan, cap):
+    object.__setattr__(plan, "cap_c", cap)         # BAD: frozen-plan-immutability
+    field = "nnz" + "_c"
+    object.__setattr__(plan, field, cap)           # BAD: frozen-plan-immutability
+    return plan
+
+
+def traced_branch_kernel(a_ref, o_ref):
+    cnt = a_ref[0]
+    if cnt > 0:                                    # BAD: no-traced-branch
+        o_ref[0] = cnt
+    steps = pl.load(a_ref, (pl.dslice(0, 1),))
+    while steps[0] > 0:                            # BAD: no-traced-branch
+        steps = steps - 1

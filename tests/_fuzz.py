@@ -150,6 +150,36 @@ def scramble_rows(a: CSR) -> CSR:
                a.nnz, a.shape, sorted_cols=False)
 
 
+PLAN_PERTURBATIONS = ("cap_c", "bin_tsize")
+
+
+def perturb_plan(plan, which: str):
+    """A structurally-broken twin of a frozen hash :class:`SpGEMMPlan`.
+
+    The layer-1 verifier (:func:`repro.verify.check_plan_vcs`) must
+    *reject* every twin this produces and keep passing the untouched
+    plan -- the differential contract of ``tests/test_verify.py``:
+
+      * ``"cap_c"``: output capacity dropped below the planned exact
+        ``nnz_c`` (breaks ``store-capacity`` / ``nnz-consistent``);
+      * ``"bin_tsize"``: every per-bin hash table halved -- now either
+        under the kernel's CHUNK floor (``table-p2-range``) or too small
+        for its bin's worst row (``probe-termination`` /
+        ``flush-bound``).
+
+    Returns a new frozen plan; the input is never mutated.
+    """
+    import dataclasses
+    if which == "cap_c":
+        bad = max(int(plan.nnz_c) - 1, 0)
+        return dataclasses.replace(plan, cap_c=bad)
+    if which == "bin_tsize":
+        assert plan.bin_tsize is not None, "perturbation needs a hash plan"
+        halved = jnp.maximum(jnp.asarray(plan.bin_tsize) // 2, 1)
+        return dataclasses.replace(plan, bin_tsize=halved)
+    raise ValueError(f"unknown plan perturbation {which!r}")
+
+
 # ---------------------------------------------------------------------------
 # Hypothesis strategies (optional extra; absent => the names don't exist
 # and `from _fuzz import product_case` raises ImportError, which is the
@@ -238,6 +268,20 @@ if HAVE_HYPOTHESIS:
         member_vals = member_value_fleet(ad, e, draw(st.integers(0, 2**16)))
         vector = draw(st.booleans())
         return ad, bd, member_vals, context, vector
+
+    @st.composite
+    def perturbed_plan_case(draw):
+        """A hash-plannable product plus a schedule perturbation kind:
+        ``(ad, bd, which)``.  The consumer plans ``hash``, applies
+        :func:`perturb_plan`, and asserts the layer-1 VCs reject the
+        twin while the untouched plan keeps passing."""
+        m, k, n = draw(DIMS), draw(DIMS), draw(DIMS)
+        seed = draw(st.integers(0, 2**16))
+        # nonzero density: a perturbable plan needs at least one product
+        ad = rand_dense(m, k, draw(st.sampled_from((0.2, 0.5, 0.9))), seed)
+        bd = rand_dense(k, n, draw(st.sampled_from((0.5, 0.9))), seed + 1)
+        which = draw(st.sampled_from(PLAN_PERTURBATIONS))
+        return ad, bd, which
 
     @st.composite
     def batch_case(draw, min_products: int = 2, max_products: int = 6):

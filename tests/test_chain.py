@@ -30,7 +30,7 @@ import jax.numpy as jnp  # noqa: E402
 
 from repro.core import (CSR, chained_flop_bound, clear_plan_cache,  # noqa: E402
                         csr_transpose, finalize, flops_per_row, galerkin,
-                        gram, measure_stats, plan_cache_stats, plan_chain,
+                        gram, plan_cache_stats, plan_chain,
                         plan_chain_1d, plan_galerkin, plan_gram, plan_power,
                         plan_spgemm, recommend, shard_csr_rows, spgemm,
                         unshard_rows)

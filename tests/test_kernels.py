@@ -1,6 +1,5 @@
 """Per-kernel shape/dtype sweeps against the pure-jnp oracles (interpret
 mode on CPU; the kernels target TPU)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -10,7 +9,6 @@ from repro.data.rmat import rmat_csr
 from repro.kernels.spgemm_hash.ops import spgemm_hash, spgemm_hash_symbolic
 from repro.kernels.spgemm_hash.ref import numeric_ref, symbolic_ref
 from repro.kernels.spgemm_bcsr.ops import spgemm_bcsr
-from repro.kernels.spgemm_bcsr import ref as bcsr_ref
 from repro.kernels.spmm.ops import spmm_pallas
 from repro.kernels.spmm.ref import spmm_ref
 from repro.kernels.flash_attention.ops import flash_attention, chunked_attention

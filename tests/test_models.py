@@ -4,7 +4,6 @@ output shapes and no NaNs; decode agrees with prefill."""
 import jax
 import jax.numpy as jnp
 import jax.tree_util as jtu
-import numpy as np
 import pytest
 
 from repro.configs import ARCHS, SHAPES, reduced, get

@@ -26,9 +26,9 @@ import pytest
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-from repro.core import (CSR, clear_plan_cache, plan_cache_stats, plan_spgemm,
-                        spgemm, spgemm_esc, spgemm_heap, symbolic)
-from repro.core import schedule as sched_pkg  # noqa: F401 (import check)
+from repro.core import (clear_plan_cache, plan_cache_stats, plan_spgemm,
+                        spgemm, spgemm_heap, symbolic)
+from repro.core import schedule as sched_pkg  # noqa: F401  # verify: allow(dead-import) -- deliberate import check
 import repro.core.schedule as sched
 from repro.core.plan import structure_key
 from repro.data.rmat import rmat_csr

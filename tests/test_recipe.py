@@ -1,6 +1,4 @@
 """Recipe (paper section 4.2.4 + Table 4): cost model + selector."""
-import numpy as np
-import pytest
 
 from repro.core.recipe import (SpGEMMStats, choose_algorithm_from_stats,
                                cost_hash, cost_heap, model_costs,

@@ -6,8 +6,7 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import CSR, spgemm
-from repro.core.recipe import (block_density_of, measure_stats,
-                               choose_algorithm, MXU_MIN_TILE_DENSITY)
+from repro.core.recipe import block_density_of, choose_algorithm
 
 settings.register_profile("ci", max_examples=10, deadline=None)
 settings.load_profile("ci")

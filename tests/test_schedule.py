@@ -7,7 +7,6 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import schedule as sched
-from repro.core.formats import CSR
 from repro.data.rmat import rmat_csr
 
 settings.register_profile("ci", max_examples=25, deadline=None)

@@ -16,12 +16,11 @@ import os
 import sys
 
 import numpy as np
-import jax.numpy as jnp
 import pytest
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-from repro.core import (CSR, spgemm, spgemm_esc, spgemm_heap, spgemm_hash_jnp,
+from repro.core import (CSR, spgemm, spgemm_esc, spgemm_hash_jnp,
                         symbolic, choose_algorithm_from_stats, measure_stats,
                         masked_row_bound, resolve_semiring, SEMIRINGS)
 from repro.core.recipe import SpGEMMStats

@@ -9,9 +9,8 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import (CSR, spgemm, spgemm_dense, spgemm_esc, spgemm_heap,
+from repro.core import (CSR, spgemm, spgemm_esc, spgemm_heap,
                         spmm, symbolic)
-from repro.core.spgemm import symbolic_flops
 from repro.data.rmat import rmat_csr, triangular_split, tall_skinny_from, rmat_edges
 
 settings.register_profile("ci", max_examples=15, deadline=None)

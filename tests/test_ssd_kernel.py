@@ -1,5 +1,4 @@
 """SSD chunk kernel sweeps vs the pure-jnp oracle (interpret mode)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

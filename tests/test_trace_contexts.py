@@ -32,7 +32,7 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
 from repro.core import (clear_plan_cache, plan_batch, plan_cache_stats,  # noqa: E402
-                        plan_spgemm, spgemm)
+                        plan_spgemm)
 from repro.core.distributed import (plan_spgemm_1d, shard_csr_rows,  # noqa: E402
                                     unshard_rows)
 from repro.kernels.spgemm_hash import ops as hash_ops  # noqa: E402

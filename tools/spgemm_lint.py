@@ -1,0 +1,19 @@
+#!/usr/bin/env python
+"""Gating entry point for the static contract checker.
+
+Thin wrapper over ``python -m repro.verify`` that works from a bare
+checkout (adds ``src/`` to ``sys.path``), so CI and pre-commit hooks can
+run ``python tools/spgemm_lint.py --all --json verify_report.json``
+without an editable install.
+"""
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.verify.__main__ import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:] + ["--root", str(ROOT)]
+                  if "--root" not in sys.argv else sys.argv[1:]))
