@@ -1,0 +1,144 @@
+"""Measured-recipe benchmark: autotuner vs Table-4 heuristic.
+
+For each suite matrix pair, plan the product twice -- once through the
+heuristic recipe, once through ``plan_spgemm(autotune=True)`` against a
+fresh DB -- and time both frozen plans' numeric phases.  Rows carry the
+work model (``flops`` / ``bytes_moved``), so the JSON trajectory gains
+roofline columns for them, matching what the autotune DB itself records
+with each winner.
+
+``--smoke`` is the CI gate for the measured-mode contract:
+
+  * the measured choice never loses to the heuristic choice by more
+    than 5% on any suite matrix (best-of-5 on both, so one scheduler
+    hiccup cannot fail the job);
+  * a repeat recommend on the same structure is a DB hit with **zero**
+    microbenchmarks, proven by the ``candidates_timed`` counter;
+  * both plans agree bitwise-on-dense with the numpy oracle.
+
+    PYTHONPATH=src python benchmarks/bench_autotune.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import tempfile
+
+import numpy as np
+
+sys.path.insert(0, ".")
+
+from repro.autotune import (PerfDB, measure_call_counts, measured_recommend,
+                            reset_measure_calls)
+from repro.core import plan_spgemm
+from repro.core.spgemm import symbolic_flops
+from repro.data.rmat import rmat_csr
+
+from benchmarks.common import bench, emit, flops_rate
+
+
+def suite(quick: bool = True):
+    """(tag, a, b) pairs: skewed G500 (the mispriced regime), uniform ER,
+    and a squaring -- the shapes Table 4 routes differently."""
+    pairs = [
+        ("g500_s7_axb", rmat_csr(7, 8, "G500", seed=0),
+         rmat_csr(7, 8, "G500", seed=1)),
+        ("er_s7_axa", rmat_csr(7, 4, "ER", seed=2), None),
+    ]
+    if not quick:
+        pairs += [
+            ("g500_s8_axa", rmat_csr(8, 8, "G500", seed=3), None),
+            ("er_s8_axb", rmat_csr(8, 4, "ER", seed=4),
+             rmat_csr(8, 4, "ER", seed=5)),
+        ]
+    return [(tag, a, (a if b is None else b)) for tag, a, b in pairs]
+
+
+def _work_model(a, b, plan):
+    """(flops, bytes) for the roofline columns: multiply-adds count 2."""
+    from repro.analysis.roofline import spgemm_traffic_bytes
+    flop = float(np.asarray(symbolic_flops(a, b)).sum())
+    return 2.0 * flop, spgemm_traffic_bytes(
+        n_rows=a.n_rows, nnz_a=float(a.nnz), flop=flop,
+        nnz_c=float(plan.nnz_c))
+
+
+def _pair(tag, a, b, db, iters):
+    """Plan heuristic + measured, time both, emit rows; returns plans +
+    timings."""
+    heur = plan_spgemm(a, b, cache=False)
+    meas = plan_spgemm(a, b, autotune=True, autotune_db=db, cache=False)
+    assert heur.provenance == "heuristic" and meas.provenance == "measured"
+    flops, nbytes = _work_model(a, b, heur)
+
+    t_h = bench(lambda: heur.execute(a, b), iters=iters)
+    emit(f"autotune,{tag},heuristic", t_h,
+         f"algo={heur.algorithm};{flops_rate(flops / 2, t_h)}",
+         flops=flops, bytes_moved=nbytes)
+    t_m = bench(lambda: meas.execute(a, b), iters=iters)
+    emit(f"autotune,{tag},measured", t_m,
+         f"algo={meas.algorithm};t{meas.table_size};"
+         f"speedup={t_h / t_m:.2f}x",
+         flops=flops, bytes_moved=nbytes)
+    return heur, meas, t_h, t_m
+
+
+def run(quick: bool = True):
+    """benchmarks.run suite entry (fresh DB per run: the rows compare the
+    recipes, not a previous run's persisted winners)."""
+    with tempfile.TemporaryDirectory() as d:
+        db = PerfDB(os.path.join(d, "autotune.json"))
+        for tag, a, b in suite(quick):
+            _pair(tag, a, b, db, iters=2 if quick else 3)
+
+
+def smoke():
+    """CI gate for the measured-mode acceptance contract."""
+    with tempfile.TemporaryDirectory() as d:
+        db = PerfDB(os.path.join(d, "autotune.json"))
+        for tag, a, b in suite(quick=True):
+            heur, meas, t_h, t_m = _pair(tag, a, b, db, iters=5)
+
+            # (1) measured never loses to the heuristic by > 5%
+            assert t_m <= t_h * 1.05, \
+                f"{tag}: measured {meas.algorithm} ({t_m*1e6:.0f}us) lost " \
+                f"to heuristic {heur.algorithm} ({t_h*1e6:.0f}us) by " \
+                f"{t_m / t_h:.3f}x"
+
+            # (2) repeat recommend = DB hit, zero microbenchmarks
+            reset_measure_calls()
+            choice = measured_recommend(a, b, db=db)
+            calls = measure_call_counts()
+            assert choice is not None and choice.source == "db", choice
+            assert choice.algorithm == meas.algorithm
+            assert calls["candidates_timed"] == 0, \
+                f"{tag}: repeat recommend measured: {calls}"
+            assert calls["db_hits"] == 1, calls
+
+            # (3) both recipes compute the same (correct) product
+            cd = np.asarray(a.to_dense()) @ np.asarray(b.to_dense())
+            assert np.allclose(np.asarray(meas.execute(a, b).to_dense()),
+                               cd, atol=1e-3)
+            assert np.allclose(np.asarray(heur.execute(a, b).to_dense()),
+                               cd, atol=1e-3)
+            print(f"autotune smoke {tag}: measured={meas.algorithm} "
+                  f"heuristic={heur.algorithm} ratio={t_m / t_h:.3f}",
+                  flush=True)
+    print("bench_autotune smoke: OK", flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="measured-mode acceptance assertions (CI gate)")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+        return
+    run(quick=not args.full)
+
+
+if __name__ == "__main__":
+    main()

@@ -29,9 +29,25 @@ def bench(fn, *args, warmup: int = 1, iters: int = 3) -> float:
     return float(np.median(ts))
 
 
-def emit(name: str, seconds: float, derived: str = ""):
+def emit(name: str, seconds: float, derived: str = "",
+         flops: float | None = None, bytes_moved: float | None = None):
+    """Record one benchmark row (and print its CSV line).
+
+    ``flops`` / ``bytes_moved`` optionally attach the operation's work
+    model: the JSON trajectory then carries roofline columns for the row
+    (bound, achieved rates, roof fraction via
+    ``repro.analysis.roofline.spgemm_roofline``), which is what the
+    autotune DB records alongside winners and what cross-commit
+    perf-trajectory diffs normalize against.
+    """
     us = seconds * 1e6
-    ROWS.append((name, us, derived))
+    extras = {}
+    if flops is not None and bytes_moved is not None:
+        from repro.analysis.roofline import spgemm_roofline
+        extras["roofline"] = spgemm_roofline(flops, bytes_moved, seconds)
+        extras["flops"] = flops
+        extras["bytes_moved"] = bytes_moved
+    ROWS.append((name, us, derived, extras))
     print(f"{name},{us:.1f},{derived}", flush=True)
 
 

@@ -29,6 +29,7 @@ from . import bench_distributed as dist_bench
 from . import bench_chain as chain_bench
 from . import bench_batch as batch_bench
 from . import bench_verify as verify_bench
+from . import bench_autotune as autotune_bench
 
 
 SUITES = [
@@ -51,6 +52,7 @@ SUITES = [
     ("chain", lambda q: chain_bench.run(q)),
     ("batch", lambda q: batch_bench.run(q)),
     ("verify", lambda q: verify_bench.run(q)),
+    ("autotune", lambda q: autotune_bench.run(q)),
 ]
 
 
@@ -75,6 +77,23 @@ def _jaxlib_version() -> str:
         return "unknown"
 
 
+def _row_doc(row) -> dict:
+    """One trajectory row.  Rows that attached a work model via
+    ``common.emit(..., flops=, bytes_moved=)`` carry roofline columns
+    (bound / roof_fraction / achieved rates)."""
+    name, us, derived, extras = row
+    doc = {"name": name, "us_per_call": round(us, 3), "derived": derived}
+    roof = extras.get("roofline")
+    if roof is not None:
+        doc["flops"] = extras["flops"]
+        doc["bytes_moved"] = extras["bytes_moved"]
+        doc["roofline_bound"] = roof["bound"]
+        doc["roof_fraction"] = round(roof["roof_fraction"], 6)
+        doc["achieved_gflops"] = round(roof["achieved_gflops"], 4)
+        doc["achieved_gbps"] = round(roof["achieved_gbps"], 4)
+    return doc
+
+
 def write_json(path: str, suites_run, failures: int) -> None:
     """Serialize ``common.ROWS`` + provenance as the perf trajectory."""
     import jax
@@ -90,10 +109,7 @@ def write_json(path: str, suites_run, failures: int) -> None:
         "machine": platform.machine(),
         "suites": list(suites_run),
         "failures": failures,
-        "rows": [
-            {"name": name, "us_per_call": round(us, 3), "derived": derived}
-            for name, us, derived in common.ROWS
-        ],
+        "rows": [_row_doc(row) for row in common.ROWS],
     }
     with open(path, "w") as f:
         json.dump(doc, f, indent=1)

@@ -28,6 +28,56 @@ PEAK_FLOPS = 197e12     # bf16 FLOP/s per v5e-class chip
 HBM_BW = 819e9          # B/s per chip
 LINK_BW = 50e9          # B/s per ICI link
 
+
+# ---------------------------------------------------------------------------
+# SpGEMM kernel roofline (autotune DB context + benchmark trajectory rows)
+# ---------------------------------------------------------------------------
+
+def spgemm_traffic_bytes(*, n_rows: float, nnz_a: float, flop: float,
+                         nnz_c: float, itemsize: int = 4) -> float:
+    """Model HBM traffic of one C = A*B numeric phase, in bytes.
+
+    Per the paper's Sec. 2 access pattern: A is streamed once (indices +
+    values), every multiply streams one B entry (index + value; the
+    paper's ``flop`` counts multiply-adds so ``flop`` B-entry touches),
+    and C is written once (indices + values) with one indptr stream over
+    the rows.  Accumulator traffic is assumed to stay in cache/scratch
+    -- that is the entire point of the hash/heap accumulators -- so this
+    is a *lower* bound and the roofline fraction an upper bound.
+    """
+    index_size = 4   # int32 indices regardless of x64 values
+    a_bytes = nnz_a * (index_size + itemsize)
+    b_bytes = flop * (index_size + itemsize)
+    c_bytes = nnz_c * (index_size + itemsize) + (n_rows + 1) * index_size
+    return a_bytes + b_bytes + c_bytes
+
+
+def spgemm_roofline(flops: float, bytes_moved: float, seconds: float,
+                    peak_flops: float = PEAK_FLOPS,
+                    hbm_bw: float = HBM_BW) -> dict:
+    """Place one measured SpGEMM run on the roofline.
+
+    Returns the two ideal-time terms, which one binds (``bound``), the
+    achieved fraction of that roof (``roof_fraction``), and the achieved
+    absolute rates -- the context the autotune DB persists with every
+    winner so a recorded timing can be sanity-checked against the
+    machine it claims to describe.
+    """
+    compute_s = flops / peak_flops
+    memory_s = bytes_moved / hbm_bw
+    bound = "memory" if memory_s >= compute_s else "compute"
+    ideal_s = max(compute_s, memory_s)
+    seconds = max(seconds, 1e-12)
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "bound": bound,
+        "roof_fraction": ideal_s / seconds,
+        "achieved_gflops": flops / seconds / 1e9,
+        "achieved_gbps": bytes_moved / seconds / 1e9,
+        "intensity_flop_per_byte": flops / max(bytes_moved, 1.0),
+    }
+
 _SHAPE_TOKENS = {
     "train_4k": 4096 * 256,
     "prefill_32k": 32768 * 32,

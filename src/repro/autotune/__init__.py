@@ -1,0 +1,29 @@
+"""Measured SpGEMM recipe backed by a persistent performance database.
+
+Public surface (DESIGN.md section 16):
+
+  * :func:`measured_recommend` -- DB-first measured algorithm choice;
+    what ``recipe.recommend(mode="measured")`` and
+    ``plan_spgemm(autotune=True)`` delegate to.
+  * :class:`PerfDB` / :func:`default_db_path` -- the JSON results DB.
+  * :class:`TunedChoice` -- a resolved choice (algorithm, table scale,
+    timing, db-vs-measured source).
+  * :class:`AutotuneDBWarning` -- every degraded path warns with this.
+  * :func:`reset_measure_calls` / :func:`measure_call_counts` -- the
+    effort counters tests use to prove a DB hit measures nothing.
+
+This package intentionally lives *outside* ``repro.core``: it times
+wall-clock, which the core planner's determinism lint bans, and core
+only imports it lazily when a caller asks for measured mode.
+"""
+from .db import DRIFT_TOLERANCE, SCHEMA_VERSION, AutotuneDBWarning, \
+    PerfDB, default_db_path, resolve_db
+from .measure import MEASURE_CALLS, TABLE_SCALES, TunedChoice, db_key, \
+    measure_call_counts, measured_recommend, reset_measure_calls
+
+__all__ = [
+    "AutotuneDBWarning", "DRIFT_TOLERANCE", "MEASURE_CALLS", "PerfDB",
+    "SCHEMA_VERSION", "TABLE_SCALES", "TunedChoice", "db_key",
+    "default_db_path", "measure_call_counts", "measured_recommend",
+    "reset_measure_calls", "resolve_db",
+]

@@ -1,0 +1,257 @@
+"""Measured recipe: microbenchmark candidates, persist winners.
+
+The heuristic Table-4 recipe guesses from structure statistics; this
+module *measures*.  :func:`measured_recommend` keys the request by the
+operands' structure digests plus the execution context (backend, x64
+flag) -- the same blake2b digests the plan cache uses, so a DB entry can
+never be served to a different structure -- and either
+
+  * **hits** the persistent :class:`repro.autotune.db.PerfDB` and
+    returns the recorded winner with zero microbenchmarks (the
+    ``candidates_timed`` counter pins this in tests), or
+  * **misses**, builds a throwaway (uncached) plan per candidate
+    algorithm -- esc / heap (sorted inputs only) / hash / hash_vector /
+    hash_jnp, plus x2 hash-table-size variants of the Pallas hash paths
+    -- times each as a median of ``REPS`` runs after a compile warmup,
+    persists the winner with its timing and roofline context, and
+    returns it.
+
+Candidate timing runs the *numeric* phase only (``SpGEMMPlan.execute``):
+inspection is shared by every candidate and by the caller, so including
+it would just add identical noise to every lane.  Any failure -- a DB
+that cannot be trusted degrades per :mod:`repro.autotune.db`; a
+candidate that refuses to build or run is skipped; no candidate
+surviving -- returns ``None`` and the caller falls back to the
+heuristic.  Nothing in here raises at the caller.
+
+Wall-clock timing lives here, outside ``core/``, deliberately: the
+``plan-key-determinism`` lint rule bans ``time.*`` in the core planner,
+and ``core.recipe`` / ``core.plan`` only import this module lazily when
+the caller asks for measured mode.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+import warnings
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.roofline import spgemm_roofline, spgemm_traffic_bytes
+from .db import DRIFT_TOLERANCE, SCHEMA_VERSION, AutotuneDBWarning, \
+    resolve_db
+
+#: timed repetitions per candidate (median taken; one warmup before)
+REPS = 3
+
+#: hash-table-size multipliers tried for the Pallas hash paths.  Scales
+#: stay powers of two so the scaled schedule keeps every p2 VC.
+TABLE_SCALES = (1, 2)
+
+#: measurement-effort counters, cumulative per process.  Tests reset
+#: them around a recommend and assert ``candidates_timed == 0`` on a DB
+#: hit -- the "repeat plans measure nothing" contract.
+MEASURE_CALLS = {"recommends": 0, "db_hits": 0, "db_misses": 0,
+                 "candidates_timed": 0}
+
+
+def reset_measure_calls() -> None:
+    for k in MEASURE_CALLS:
+        MEASURE_CALLS[k] = 0
+
+
+def measure_call_counts() -> dict:
+    return dict(MEASURE_CALLS)
+
+
+@dataclasses.dataclass(frozen=True)
+class TunedChoice:
+    """What the measured recipe resolved to.
+
+    ``source`` says how: ``"db"`` (persisted winner, zero measurement
+    this call) or ``"measured"`` (fresh microbenchmark, now persisted).
+    ``us`` is the winner's recorded median execute time.
+    """
+    algorithm: str
+    table_scale: int
+    us: float
+    source: str
+
+
+def db_key(a, b, mask=None, *, semiring: str = "plus_times",
+           sorted_output: bool = False,
+           complement_mask: bool = False) -> str:
+    """Autotune DB key: plan-cache structure digests + execution context.
+
+    Two requests share an entry iff their operand (and mask) structures
+    are digest-identical AND they run on the same backend with the same
+    x64 setting -- a winner measured on one backend says nothing about
+    another, and x64 doubles the value traffic.
+    """
+    from repro.core.plan import structure_key
+    parts = [
+        "spgemm",
+        structure_key(a).hex(),
+        structure_key(b).hex(),
+        structure_key(mask).hex() if mask is not None else "nomask",
+        "cmpl" if complement_mask else "mask",
+        semiring,
+        "sorted" if sorted_output else "unsorted",
+        jax.default_backend(),
+        "x64" if jax.config.jax_enable_x64 else "x32",
+    ]
+    return "|".join(parts)
+
+
+def _stat_fingerprint(stats) -> dict:
+    """The drift-check fields recorded with (and compared against) an
+    entry: structure-level totals that move whenever the digest's
+    meaning would."""
+    return {"flop": float(stats.flop), "nnz_c": float(stats.nnz_c_est),
+            "nnz_a": float(stats.nnz_a)}
+
+
+def _scaled_plan(plan, scale: int, n_cols: int):
+    """x``scale`` hash-table variant of a frozen plan (same contract as
+    the planner's own table_scale application: p2 in [CHUNK, p2(n+1)],
+    per-bin sizes clipped to the scratch, so the schedule VCs of
+    ``repro.verify.bounds`` keep holding)."""
+    from repro.core import schedule as sched
+    from repro.kernels.spgemm_hash import kernel as HK
+    table_size = max(min(plan.table_size * scale,
+                         sched.lowest_p2(n_cols + 1)), HK.CHUNK)
+    bin_tsize = jnp.clip(plan.bin_tsize.astype(jnp.int32) * scale,
+                         jnp.int32(HK.CHUNK), jnp.int32(table_size))
+    return dataclasses.replace(plan, table_size=table_size,
+                               bin_tsize=bin_tsize)
+
+
+def _time_plan(plan, a, b) -> float:
+    """Median execute wall-clock over :data:`REPS` runs, microseconds.
+
+    One untimed run first eats compilation; every run blocks on the
+    output buffers so device-async dispatch cannot leak out of the
+    timed window."""
+    def run():
+        out = plan.execute(a, b)
+        jax.block_until_ready((out.indptr, out.indices, out.data))
+
+    run()
+    samples = []
+    for _ in range(REPS):
+        t0 = time.perf_counter()
+        run()
+        samples.append(time.perf_counter() - t0)
+    samples.sort()
+    MEASURE_CALLS["candidates_timed"] += 1
+    return samples[len(samples) // 2] * 1e6
+
+
+def _candidates(a, b, semiring: str, mask) -> list:
+    """(label, algorithm, table_scale) lanes worth timing here.
+
+    Under a general semiring or a mask, ``plan.execute`` routes every
+    hash flavor to the jnp fallback, so only esc / heap / hash_jnp are
+    distinct programs; the Pallas hash paths (and their table-size
+    variants) only race on the plus_times unmasked fast path.
+    """
+    general = semiring != "plus_times" or mask is not None
+    lanes = [("esc", "esc", 1)]
+    if a.sorted_cols and b.sorted_cols:
+        lanes.append(("heap", "heap", 1))
+    if general:
+        lanes.append(("hash_jnp", "hash_jnp", 1))
+        return lanes
+    for algo in ("hash", "hash_vector"):
+        for scale in TABLE_SCALES:
+            label = algo if scale == 1 else f"{algo}@t{scale}"
+            lanes.append((label, algo, scale))
+    lanes.append(("hash_jnp", "hash_jnp", 1))
+    return lanes
+
+
+def measured_recommend(a, b, *, sorted_output: bool = False,
+                       semiring: str = "plus_times", mask=None,
+                       complement_mask: bool = False, stats=None,
+                       row_nnz_c=None, db=None, measure: bool = True,
+                       tolerance: float = DRIFT_TOLERANCE
+                       ) -> Optional[TunedChoice]:
+    """DB-first measured algorithm choice; ``None`` means "use the
+    heuristic".
+
+    ``stats`` (a ``SpGEMMStats``) arms the drift check against the
+    recorded entry and is computed here if absent; ``row_nnz_c`` passes
+    the symbolic phase's exact counts through to that computation.
+    ``measure=False`` restricts to DB lookups -- a miss then returns
+    ``None`` instead of spending microbenchmark time, which is what
+    latency-sensitive callers probe with.  ``db`` is a path string, a
+    :class:`repro.autotune.PerfDB`, or ``None`` for the default path.
+    """
+    MEASURE_CALLS["recommends"] += 1
+    pdb = resolve_db(db)
+    if stats is None:
+        from repro.core.recipe import measure_stats
+        stats = measure_stats(a, b, row_nnz_c=row_nnz_c, mask=mask,
+                              complement_mask=complement_mask)
+    key = db_key(a, b, mask, semiring=semiring, sorted_output=sorted_output,
+                 complement_mask=complement_mask)
+    fingerprint = _stat_fingerprint(stats)
+
+    entry = pdb.get(key, stats=fingerprint, tolerance=tolerance)
+    if entry is not None:
+        MEASURE_CALLS["db_hits"] += 1
+        return TunedChoice(algorithm=entry["algorithm"],
+                           table_scale=int(entry.get("table_scale", 1)),
+                           us=float(entry.get("us", 0.0)), source="db")
+    MEASURE_CALLS["db_misses"] += 1
+    if not measure:
+        return None
+
+    from repro.core.plan import plan_spgemm
+    timings: dict[str, float] = {}
+    best = None   # (us, label, algorithm, scale)
+    for label, algo, scale in _candidates(a, b, semiring, mask):
+        try:
+            plan = plan_spgemm(a, b, algorithm=algo, semiring=semiring,
+                               mask=mask, complement_mask=complement_mask,
+                               sorted_output=sorted_output, cache=False)
+            if scale != 1:
+                plan = _scaled_plan(plan, scale, b.n_cols)
+            us = _time_plan(plan, a, b)
+        except Exception as exc:   # a lane that cannot run just drops out
+            warnings.warn(f"autotune candidate {label} failed "
+                          f"({type(exc).__name__}: {exc}); skipping",
+                          AutotuneDBWarning, stacklevel=2)
+            continue
+        timings[label] = us
+        if best is None or us < best[0]:
+            best = (us, label, algo, scale)
+    if best is None:
+        warnings.warn("autotune: every candidate failed; falling back to "
+                      "the heuristic recipe", AutotuneDBWarning,
+                      stacklevel=2)
+        return None
+
+    us, label, algo, scale = best
+    flops = 2.0 * float(stats.flop)
+    bytes_moved = spgemm_traffic_bytes(
+        n_rows=stats.n_rows, nnz_a=float(stats.nnz_a),
+        flop=float(stats.flop), nnz_c=float(stats.nnz_c_est),
+        itemsize=8 if jax.config.jax_enable_x64 else 4)
+    roof = spgemm_roofline(flops, bytes_moved, us * 1e-6)
+    pdb.put(key, {
+        "schema": SCHEMA_VERSION,
+        "algorithm": algo,
+        "table_scale": scale,
+        "label": label,
+        "us": us,
+        "candidates": timings,
+        "stats": fingerprint,
+        "roofline": roof,
+        "backend": jax.default_backend(),
+        "x64": bool(jax.config.jax_enable_x64),
+    })
+    return TunedChoice(algorithm=algo, table_scale=scale, us=us,
+                       source="measured")

@@ -141,7 +141,16 @@ def cache_lookup(key: tuple):
 
 
 def cache_store(key: tuple, value) -> None:
-    """Insert into the shared plan LRU, evicting least-recent past capacity."""
+    """Insert into the shared plan LRU, evicting least-recent past capacity.
+
+    Pop-before-insert: a re-stored existing key must move to the newest
+    position, exactly like a :func:`cache_lookup` hit.  Plain
+    ``_CACHE[key] = value`` would overwrite in place and keep the key's
+    *old* dict position, so a just-refreshed plan could be evicted as
+    "least recent" by the very next store (regression-pinned by
+    ``tests/test_plan.py::test_plan_cache_restore_refreshes_recency``).
+    """
+    _CACHE.pop(key, None)                          # refresh recency on re-store
     _CACHE[key] = value
     while len(_CACHE) > PLAN_CACHE_CAPACITY:
         _CACHE.pop(next(iter(_CACHE)))             # evict least-recent
@@ -197,6 +206,10 @@ class SpGEMMPlan:
     cap_c: int               # exact nnz(C) as a static capacity
     row_cap: int             # heap: max nnz(c_i*)
     k_width: int             # heap: max nnz(a_i*)
+    #: where the algorithm choice came from: ``"explicit"`` (caller pinned
+    #: it), ``"heuristic"`` (Table-4 recipe), or ``"measured"`` (autotune
+    #: DB / microbenchmark, DESIGN.md section 16).
+    provenance: str = "explicit"
 
     # -------------------------------------------------------------------
     def check_structure(self, a: CSR, b: CSR, strict: bool = False) -> None:
@@ -279,12 +292,25 @@ def plan_spgemm(a: CSR, b: CSR, *, algorithm: str = "auto",
                 mask: Optional[CSR] = None, complement_mask: bool = False,
                 sorted_output: bool = False, use_case: Optional[str] = None,
                 n_bins: int = 8, cache: bool = True,
-                bucket_caps: bool = False, a_row_nnz=None) -> SpGEMMPlan:
+                bucket_caps: bool = False, a_row_nnz=None,
+                autotune: bool = False, autotune_db=None) -> SpGEMMPlan:
     """Run the full inspection once and freeze it as a :class:`SpGEMMPlan`.
 
     With ``cache=True`` (default) the structure-keyed cache is consulted
     first: a structure-identical repeat request returns the existing plan
     and skips schedule + symbolic + recipe entirely.
+
+    ``autotune=True`` (with ``algorithm="auto"``) resolves the algorithm
+    through the measured recipe instead of the Table-4 heuristics: the
+    persistent autotune DB (:mod:`repro.autotune`) is consulted under the
+    structure/backend key, a miss microbenchmarks the candidates on the
+    actual operands and persists the winner, and any DB trouble degrades
+    to the heuristic with a warning.  The plan records where its choice
+    came from in :attr:`SpGEMMPlan.provenance` (``"measured"`` vs
+    ``"heuristic"`` vs ``"explicit"``), a winning hash-table-size variant
+    is applied to the frozen schedule, and ``autotune_db`` overrides the
+    default DB path.  Autotuned and heuristic requests are distinct plan
+    cache entries.
 
     ``bucket_caps=True`` rounds the static capacities (``cap_c``,
     ``flop_cap``, heap ``row_cap``) up to powers of two.  Exact capacities
@@ -308,7 +334,8 @@ def plan_spgemm(a: CSR, b: CSR, *, algorithm: str = "auto",
         arn_digest = hashlib.blake2b(np.asarray(a_row_nnz).tobytes(),
                                      digest_size=8).digest()
     key = _plan_key(a, b, mask, sr.name, complement_mask, sorted_output,
-                    algorithm, use_case, n_bins) + (bucket_caps, arn_digest)
+                    algorithm, use_case, n_bins) + (bucket_caps, arn_digest,
+                                                    autotune)
     if cache:
         hit = cache_lookup(key)
         if hit is not None:
@@ -350,18 +377,45 @@ def plan_spgemm(a: CSR, b: CSR, *, algorithm: str = "auto",
         # match the direct dispatcher: an explicit heap request on
         # unsorted inputs fails loudly (spgemm_heap's own contract)
         raise AssertionError("heap path requires sorted inputs")
+    provenance = "explicit"
+    table_scale = 1
     if algorithm == "auto":
-        from .recipe import recommend
         uc = use_case if use_case is not None else \
             ("masked" if mask is not None else "AxA")
-        algorithm, _ = recommend(a, b, sorted_output=sorted_output,
-                                 use_case=uc, semiring=sr.name, mask=mask,
-                                 complement_mask=complement_mask,
-                                 row_nnz_c=row_nnz_c, a_row_nnz=a_row_nnz)
+        if autotune:
+            from repro.autotune import measured_recommend
+            choice = measured_recommend(
+                a, b, sorted_output=sorted_output, semiring=sr.name,
+                mask=mask, complement_mask=complement_mask,
+                row_nnz_c=row_nnz_c, db=autotune_db)
+            if choice is not None:
+                algorithm = choice.algorithm
+                table_scale = choice.table_scale
+                provenance = "measured"
+        if algorithm == "auto":      # no autotune, or DB degraded
+            from .recipe import recommend
+            algorithm, _ = recommend(a, b, sorted_output=sorted_output,
+                                     use_case=uc, semiring=sr.name,
+                                     mask=mask,
+                                     complement_mask=complement_mask,
+                                     row_nnz_c=row_nnz_c,
+                                     a_row_nnz=a_row_nnz)
+            provenance = "heuristic"
         if algorithm == "heap" and not (a.sorted_cols and b.sorted_cols):
             # recipe picked heap on its merits, but the inputs cannot feed
             # it; hash keeps the unsorted contract
             algorithm = "hash"
+    if table_scale != 1 and algorithm in ("hash", "hash_vector"):
+        # winning table-size variant: scale the static scratch allocation
+        # and per-bin effective sizes together.  Everything stays p2
+        # (p2 * p2-scale) and clipped to [CHUNK, table_size] with the
+        # scratch capped at p2(n_cols + 1) -- a table wider than every
+        # column is pure waste -- so every schedule VC of
+        # repro.verify.bounds keeps holding on the scaled plan.
+        table_size = max(min(table_size * table_scale,
+                             sched.lowest_p2(n + 1)), HK.CHUNK)
+        bin_tsize = jnp.clip(bin_tsize.astype(jnp.int32) * table_scale,
+                             jnp.int32(HK.CHUNK), jnp.int32(table_size))
     if algorithm == "bcsr":
         raise NotImplementedError(
             "the bcsr block path recomputes its own block schedule; "
@@ -375,7 +429,7 @@ def plan_spgemm(a: CSR, b: CSR, *, algorithm: str = "auto",
         flop=flop, total_flop=total_flop, flop_cap=flop_cap,
         offsets=offsets, bin_tsize=bin_tsize, table_size=table_size,
         row_nnz_c=row_nnz_c, indptr_c=indptr_c, nnz_c=nnz_c, cap_c=cap_c,
-        row_cap=row_cap, k_width=k_width)
+        row_cap=row_cap, k_width=k_width, provenance=provenance)
     if cache:
         cache_store(key, plan)
     return plan

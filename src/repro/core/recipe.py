@@ -57,6 +57,17 @@ class SpGEMMStats:
     #: because a fully dense mask legally reaches density 1.0 yet still
     #: routes the product through the generalized (non-bcsr) paths.
     has_mask: bool = False
+    #: Exact Eq. 1 log term ``sum_i flop(c_i*) * log2(max(nnz(a_i*), 2))``.
+    #: The paper's per-row sum, NOT a mean substitute: log2 is concave, so
+    #: on skewed (G500) matrices -- where the heavy rows carry both the
+    #: flop and the large nnz(a_i*) -- ``flop * log2(mean nnz_a)`` can
+    #: underprice heap by the full skew factor and invert the Eq.1/Eq.2
+    #: ranking.  0.0 means "not collected" (hand-built stats); the cost
+    #: model then falls back to the mean-based approximation.
+    eq1_heap_log: float = 0.0
+    #: Exact Eq. 2 sort term ``sum_i nnz(c_i*) * log2(max(nnz(c_i*), 2))``
+    #: (same per-row-sum contract as :attr:`eq1_heap_log`).
+    eq2_hash_sort: float = 0.0
 
 
 #: minimum mean tile occupancy for the MXU block path to beat scalar hash
@@ -71,13 +82,22 @@ _PROBE_TILE = (8, 8)
 
 def block_density_of(a: CSR, tile=_PROBE_TILE) -> float:  # verify: allow(no-densify)
     """Mean occupancy of occupied tiles (structure probe, host-side;
-    densify waived -- the probe inspects structure, never jit-hot)."""
+    densify waived -- the probe inspects structure, never jit-hot).
+
+    Shapes that are not a tile multiple are zero-padded up to the tile
+    grid before probing: the padding dilutes only the boundary tiles'
+    occupancy, so a dense-blocked 1000x1000 matrix still reads as
+    block-dense instead of silently returning 0.0 (which used to disable
+    bcsr routing for every non-multiple shape).
+    """
     import numpy as np
     m, n = a.shape
     bm, bn = tile
-    if m % bm or n % bn:
-        return 0.0
     dense = np.asarray(a.to_dense()) != 0
+    pad_m, pad_n = (-m) % bm, (-n) % bn
+    if pad_m or pad_n:
+        dense = np.pad(dense, ((0, pad_m), (0, pad_n)))
+        m, n = m + pad_m, n + pad_n
     tiles = dense.reshape(m // bm, bm, n // bn, bn).transpose(0, 2, 1, 3)
     occ = tiles.any(axis=(2, 3))
     n_occ = int(occ.sum())
@@ -107,8 +127,10 @@ def measure_stats(a: CSR, b: CSR, row_nnz_c=None,
     flop = sched.flops_per_row(a, b)
     total_flop = float(flop.sum())
     if a_row_nnz is not None:
-        nnz_a = float(jnp.asarray(a_row_nnz).sum())
+        row_nnz_a = jnp.asarray(a_row_nnz)
+        nnz_a = float(row_nnz_a.sum())
     else:
+        row_nnz_a = a.row_nnz()
         nnz_a = float(a.nnz)
     if row_nnz_c is None:
         # cheap upper-bound estimate; exact comes from core.spgemm.symbolic
@@ -116,9 +138,19 @@ def measure_stats(a: CSR, b: CSR, row_nnz_c=None,
         if mask is not None:
             row_bound = sched.masked_row_bound(row_bound, mask,
                                                complement_mask)
+        row_c = row_bound
         nnz_c = float(row_bound.sum())
     else:
-        nnz_c = float(jnp.asarray(row_nnz_c).sum())
+        row_c = jnp.asarray(row_nnz_c)
+        nnz_c = float(row_c.sum())
+    # The paper's Eq.1/Eq.2 log terms are per-row SUMS -- one reduction
+    # each over arrays already in hand.  Substituting a global-mean log
+    # (the old shortcut) inverts rankings on skewed inputs because log2
+    # is concave (see SpGEMMStats.eq1_heap_log).
+    log2_a = jnp.log2(jnp.maximum(row_nnz_a.astype(jnp.float32), 2.0))
+    eq1 = float(jnp.sum(flop.astype(jnp.float32) * log2_a))
+    rc_f = row_c.astype(jnp.float32)
+    eq2 = float(jnp.sum(rc_f * jnp.log2(jnp.maximum(rc_f, 2.0))))
     mean_flop = total_flop / max(a.n_rows, 1)
     cells = max(a.n_rows * b.n_cols, 1)
     if mask is None:
@@ -135,7 +167,8 @@ def measure_stats(a: CSR, b: CSR, row_nnz_c=None,
         compression_ratio=total_flop / max(nnz_c, 1.0),
         density_ef=nnz_a / max(a.n_rows, 1),
         block_density=(block_density_of(a) if probe_blocks else 0.0),
-        mask_density=mask_density, has_mask=mask is not None)
+        mask_density=mask_density, has_mask=mask is not None,
+        eq1_heap_log=eq1, eq2_hash_sort=eq2)
 
 
 def aggregate_stats(stats_list) -> SpGEMMStats:
@@ -171,7 +204,11 @@ def aggregate_stats(stats_list) -> SpGEMMStats:
         density_ef=nnz_a / max(n_rows, 1), block_density=0.0,
         mask_density=(sum(s.mask_density for s in stats_list)
                       / len(stats_list)),
-        has_mask=any(s.has_mask for s in stats_list))
+        has_mask=any(s.has_mask for s in stats_list),
+        # the Eq.1/Eq.2 log terms are sums over rows, and the fleet runs
+        # as stacked rows of one logical product: member sums just add
+        eq1_heap_log=sum(s.eq1_heap_log for s in stats_list),
+        eq2_hash_sort=sum(s.eq2_hash_sort for s in stats_list))
 
 
 # ---------------------------------------------------------------------------
@@ -179,15 +216,32 @@ def aggregate_stats(stats_list) -> SpGEMMStats:
 # ---------------------------------------------------------------------------
 
 def cost_heap(stats: SpGEMMStats) -> float:
+    """Eq. 1: ``T_heap = sum_i flop(c_i*) * log2 nnz(a_i*)``.
+
+    Uses the exact per-row sum when :func:`measure_stats` collected it;
+    hand-constructed stats (``eq1_heap_log == 0``) fall back to the
+    mean-based approximation ``flop * log2(mean nnz_a)``, which is a
+    strict underestimate on skewed inputs (Jensen: log2 is concave and
+    the heavy rows carry the flop) -- the bug this field exists to fix.
+    """
+    if stats.eq1_heap_log > 0.0:
+        return stats.eq1_heap_log
     log_k = max(1.0, float(jnp.log2(jnp.maximum(stats.mean_row_nnz_a, 2.0))))
     return stats.flop * log_k
 
 
 def cost_hash(stats: SpGEMMStats, sorted_output: bool) -> float:
+    """Eq. 2: ``T_hash = flop * c [+ sorted: sum_i nnz(c_i*) * log2
+    nnz(c_i*)]`` -- exact per-row sort sum when collected, mean-based
+    fallback otherwise (see :func:`cost_heap`)."""
     t = stats.flop * HASH_COLLISION_FACTOR
     if sorted_output:
-        mean_row_c = stats.nnz_c_est / max(stats.n_rows, 1)
-        t += stats.nnz_c_est * max(1.0, float(jnp.log2(jnp.maximum(mean_row_c, 2.0))))
+        if stats.eq2_hash_sort > 0.0:
+            t += stats.eq2_hash_sort
+        else:
+            mean_row_c = stats.nnz_c_est / max(stats.n_rows, 1)
+            t += stats.nnz_c_est * max(
+                1.0, float(jnp.log2(jnp.maximum(mean_row_c, 2.0))))
     return t
 
 
@@ -293,8 +347,27 @@ def recommend(a: CSR, b: CSR, sorted_output: bool = False,
               semiring: str = "plus_times",
               mask: CSR | None = None,
               complement_mask: bool = False,
-              row_nnz_c=None, a_row_nnz=None) -> tuple[str, SpGEMMStats]:
+              row_nnz_c=None, a_row_nnz=None,
+              mode: str = "heuristic",
+              db=None) -> tuple[str, SpGEMMStats]:
     """Measure stats and choose -- returns ``(algorithm, stats)``.
+
+    ``mode`` selects the decision procedure:
+
+      * ``"heuristic"`` (default): the fixed Table-4 decision tree over
+        the Eq.1/Eq.2 cost models -- zero measurement, deterministic.
+      * ``"measured"``: consult the persistent autotune database
+        (:mod:`repro.autotune`) under the ``(structure digests, backend,
+        x64)`` key.  A DB hit returns the recorded winner with **zero**
+        microbenchmarks (counter-verified by ``tests/test_autotune.py``);
+        a miss microbenchmarks every candidate algorithm on the actual
+        operands, persists the winner with timing + roofline context,
+        and returns it.  A DB entry whose recorded stats drift past the
+        tolerance is re-measured, not trusted; any DB failure
+        (corrupt/truncated file, unknown schema) degrades to the
+        heuristic with a warning -- never a crash.  ``db`` overrides the
+        default database path (a path string or a
+        :class:`repro.autotune.PerfDB`).
 
     ``row_nnz_c`` takes the symbolic phase's exact per-row counts when the
     caller already has them (the planner does), replacing the cheap
@@ -309,10 +382,22 @@ def recommend(a: CSR, b: CSR, sorted_output: bool = False,
     factor and skew differ from the user matrices that produced it, so
     without this the stage-k algorithm choice would key on defaults.
     """
+    assert mode in ("heuristic", "measured"), mode
     stats = measure_stats(a, b, row_nnz_c=row_nnz_c,
                           probe_blocks=probe_blocks, mask=mask,
                           complement_mask=complement_mask,
                           a_row_nnz=a_row_nnz)
+    if mode == "measured":
+        # imported lazily: the autotuner times things (wall-clock is
+        # banned in core/ by the plan-key-determinism rule) and must not
+        # load unless asked for
+        from repro.autotune import measured_recommend
+        choice = measured_recommend(
+            a, b, sorted_output=sorted_output, semiring=semiring,
+            mask=mask, complement_mask=complement_mask, stats=stats,
+            row_nnz_c=row_nnz_c, db=db)
+        if choice is not None:
+            return choice.algorithm, stats
     return choose_algorithm_from_stats(stats, sorted_output, use_case,
                                        semiring=semiring), stats
 

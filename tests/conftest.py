@@ -4,6 +4,7 @@ import sys
 # src-layout import without installation (PYTHONPATH=src also works).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+import jax
 import numpy as np
 import pytest
 
@@ -11,3 +12,18 @@ import pytest
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _bounded_jit_accumulation():
+    """Free compiled executables after every test module.
+
+    A single-process run of the whole suite compiles hundreds of one-off
+    XLA/Pallas executables; past ~300 tests the accumulated native JIT
+    state deterministically segfaults a later large compile (observed at
+    test_ssd_kernel's chunk==seq sweep, inside backend_compile).
+    Clearing per module bounds live JIT state by the heaviest single
+    module; cross-module compilation reuse is negligible.
+    """
+    yield
+    jax.clear_caches()

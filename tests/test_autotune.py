@@ -1,0 +1,302 @@
+"""Measured recipe + persistent perf DB (DESIGN.md section 16).
+
+Robustness contract: a missing / truncated / corrupt / unknown-schema DB
+file and a stale (drifted) entry must all degrade to the heuristic
+recipe with an :class:`AutotuneDBWarning` -- never a crash, never an
+entry served for the wrong structure.  Effort contract: a DB hit does
+**zero** microbenchmarks, pinned by the ``candidates_timed`` counter.
+"""
+import json
+import os
+import sys
+import warnings
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.autotune import (AutotuneDBWarning, PerfDB, SCHEMA_VERSION,
+                            TunedChoice, db_key, measure_call_counts,
+                            measured_recommend, reset_measure_calls)
+from repro.autotune.measure import _scaled_plan
+from repro.core import clear_plan_cache, plan_spgemm
+from repro.core.recipe import recommend
+from repro.data.rmat import rmat_csr
+from repro.verify.bounds import check_plan_vcs
+
+ALGOS = ("esc", "heap", "hash", "hash_vector", "hash_jnp")
+
+
+def _pair(seed=0, scale=5, ef=3):
+    return (rmat_csr(scale, ef, "G500", seed=seed),
+            rmat_csr(scale, ef, "ER", seed=seed + 50))
+
+
+def _seed_entry(db: PerfDB, a, b, **overrides):
+    """Plant a plausible winner entry for (a, b) directly."""
+    key = db_key(a, b)
+    from repro.core.recipe import measure_stats
+    s = measure_stats(a, b)
+    entry = {"schema": SCHEMA_VERSION, "algorithm": "esc", "table_scale": 1,
+             "us": 100.0, "candidates": {"esc": 100.0},
+             "stats": {"flop": float(s.flop), "nnz_a": float(s.nnz_a),
+                       "nnz_c": float(s.nnz_c_est)},
+             "backend": "cpu", "x64": False}
+    entry.update(overrides)
+    db.put(key, entry)
+    return key
+
+
+# ---------------------------------------------------------------------------
+# DB file robustness: degrade, warn, never crash, never mis-key
+# ---------------------------------------------------------------------------
+
+def test_db_missing_file_is_empty_without_warning(tmp_path):
+    db = PerfDB(str(tmp_path / "nope.json"))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")          # a missing DB is normal
+        assert db.load() == {}
+        assert db.get("anything") is None
+
+
+def test_db_truncated_json_degrades_with_warning(tmp_path):
+    path = tmp_path / "db.json"
+    db = PerfDB(str(path))
+    a, b = _pair(seed=1)
+    _seed_entry(db, a, b)
+    full = path.read_text()
+    path.write_text(full[: len(full) // 2])     # torn write / truncation
+    with pytest.warns(AutotuneDBWarning, match="unreadable"):
+        assert db.load() == {}
+    with pytest.warns(AutotuneDBWarning):
+        assert measured_recommend(a, b, db=db, measure=False) is None
+
+
+def test_db_corrupt_json_degrades_and_heals_on_next_put(tmp_path):
+    path = tmp_path / "db.json"
+    path.write_text("{not json at all")
+    db = PerfDB(str(path))
+    a, b = _pair(seed=2)
+    with pytest.warns(AutotuneDBWarning):
+        assert db.get(db_key(a, b)) is None
+    # the next put rewrites a clean schema-1 document
+    with pytest.warns(AutotuneDBWarning):       # put re-loads the bad file
+        key = _seed_entry(db, a, b)
+    doc = json.loads(path.read_text())
+    assert doc["schema"] == SCHEMA_VERSION and key in doc["entries"]
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert db.get(key) is not None
+
+
+def test_db_unknown_schema_version_degrades(tmp_path):
+    path = tmp_path / "db.json"
+    path.write_text(json.dumps({"schema": 99, "entries": {"k": {}}}))
+    db = PerfDB(str(path))
+    with pytest.warns(AutotuneDBWarning, match="schema"):
+        assert db.load() == {}
+
+
+def test_db_non_dict_document_degrades(tmp_path):
+    path = tmp_path / "db.json"
+    path.write_text(json.dumps([1, 2, 3]))
+    db = PerfDB(str(path))
+    with pytest.warns(AutotuneDBWarning):
+        assert db.load() == {}
+
+
+def test_db_stale_entry_drift_is_remeasured_not_trusted(tmp_path):
+    """An entry whose recorded stats disagree with the request's measured
+    stats past the tolerance is dropped (the stale-digest guard)."""
+    db = PerfDB(str(tmp_path / "db.json"))
+    a, b = _pair(seed=3)
+    _seed_entry(db, a, b,
+                stats={"flop": 1e9, "nnz_a": 1e9, "nnz_c": 1e9})
+    with pytest.warns(AutotuneDBWarning, match="drifted"):
+        assert measured_recommend(a, b, db=db, measure=False) is None
+
+
+def test_db_entry_with_unknown_algorithm_is_ignored(tmp_path):
+    db = PerfDB(str(tmp_path / "db.json"))
+    a, b = _pair(seed=4)
+    _seed_entry(db, a, b, algorithm="quantum_annealer")
+    with pytest.warns(AutotuneDBWarning, match="unknown algorithm"):
+        assert measured_recommend(a, b, db=db, measure=False) is None
+
+
+def test_db_never_mis_keys_across_structures(tmp_path):
+    """A winner recorded for one structure is invisible to a different
+    structure of the same shape -- the digest key, not the shape, is the
+    identity."""
+    db = PerfDB(str(tmp_path / "db.json"))
+    a, b = _pair(seed=5)
+    _seed_entry(db, a, b)
+    a2, b2 = _pair(seed=6)                      # same shapes, new structure
+    assert db_key(a2, b2) != db_key(a, b)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")          # a clean miss, no warning
+        assert measured_recommend(a2, b2, db=db, measure=False) is None
+
+
+def test_recommend_measured_mode_survives_corrupt_db(tmp_path):
+    """End-to-end: mode="measured" against garbage on disk still returns
+    a valid algorithm (and heals the DB), with warnings, not a crash."""
+    path = tmp_path / "db.json"
+    path.write_text('{"schema": 1, "entries": "oops"}')
+    a, b = _pair(seed=7, scale=4)               # tiny: it will measure
+    with pytest.warns(AutotuneDBWarning):
+        algo, stats = recommend(a, b, mode="measured", db=str(path))
+    assert algo in ALGOS
+    assert json.loads(path.read_text())["schema"] == SCHEMA_VERSION
+
+
+# ---------------------------------------------------------------------------
+# Determinism / convergence: two measuring processes, one entry
+# ---------------------------------------------------------------------------
+
+def test_two_writers_converge_on_one_entry(tmp_path):
+    """Two PerfDB handles on one path (two processes in miniature): both
+    measure the same digest; the file ends with exactly one entry for it
+    and the second handle's read agrees with what it wrote."""
+    path = str(tmp_path / "db.json")
+    a, b = _pair(seed=8, scale=4)
+    c1 = measured_recommend(a, b, db=PerfDB(path))
+    c2 = measured_recommend(a, b, db=PerfDB(path))
+    assert c1 is not None and c1.source == "measured"
+    # the second handle reads the first's persisted winner -- a hit, so
+    # it reports source="db" and the identical algorithm
+    assert c2 is not None and c2.source == "db"
+    assert c2.algorithm == c1.algorithm
+    entries = PerfDB(path).load()
+    assert len(entries) == 1
+    (key,) = entries
+    assert key == db_key(a, b)
+
+
+def test_concurrent_puts_merge_not_clobber(tmp_path):
+    """Interleaved writers with distinct keys both land: put re-reads the
+    file before writing, so the last writer merges rather than erases."""
+    path = str(tmp_path / "db.json")
+    db1, db2 = PerfDB(path), PerfDB(path)
+    a, b = _pair(seed=9)
+    a2, b2 = _pair(seed=10)
+    k1 = _seed_entry(db1, a, b)
+    k2 = _seed_entry(db2, a2, b2)               # db2 never saw k1 in memory
+    entries = PerfDB(path).load()
+    assert set(entries) == {k1, k2}
+
+
+# ---------------------------------------------------------------------------
+# Effort counters: a DB hit measures nothing
+# ---------------------------------------------------------------------------
+
+def test_db_hit_does_zero_microbenchmarks(tmp_path):
+    db = PerfDB(str(tmp_path / "db.json"))
+    a, b = _pair(seed=11, scale=4)
+    reset_measure_calls()
+    first = measured_recommend(a, b, db=db)
+    calls = measure_call_counts()
+    assert first.source == "measured" and calls["candidates_timed"] > 0
+    reset_measure_calls()
+    again = measured_recommend(a, b, db=db)
+    calls = measure_call_counts()
+    assert again.source == "db"
+    assert calls["candidates_timed"] == 0, calls
+    assert calls["db_hits"] == 1 and calls["db_misses"] == 0
+
+
+def test_plan_autotune_repeat_hits_db_and_records_provenance(tmp_path):
+    db = PerfDB(str(tmp_path / "db.json"))
+    a, b = _pair(seed=12, scale=4)
+    clear_plan_cache()
+    p_meas = plan_spgemm(a, b, autotune=True, autotune_db=db, cache=False)
+    assert p_meas.provenance == "measured"
+    reset_measure_calls()
+    p2 = plan_spgemm(a, b, autotune=True, autotune_db=db, cache=False)
+    assert p2.provenance == "measured"
+    assert p2.algorithm == p_meas.algorithm
+    assert measure_call_counts()["candidates_timed"] == 0
+    # provenance of the other two resolution paths
+    assert plan_spgemm(a, b, cache=False).provenance == "heuristic"
+    assert plan_spgemm(a, b, algorithm="esc",
+                       cache=False).provenance == "explicit"
+    # autotuned vs heuristic requests are distinct plan-cache entries
+    clear_plan_cache()
+    p_h = plan_spgemm(a, b)
+    p_m = plan_spgemm(a, b, autotune=True, autotune_db=db)
+    assert p_h is not p_m and p_h.key != p_m.key
+
+
+def test_measured_plan_output_matches_oracle(tmp_path):
+    db = PerfDB(str(tmp_path / "db.json"))
+    a, b = _pair(seed=13, scale=4)
+    plan = plan_spgemm(a, b, autotune=True, autotune_db=db, cache=False)
+    cd = np.asarray(a.to_dense()) @ np.asarray(b.to_dense())
+    assert np.allclose(np.asarray(plan.execute(a, b).to_dense()), cd,
+                       atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Scaled-table variants keep the schedule VCs
+# ---------------------------------------------------------------------------
+
+def test_scaled_table_variant_passes_plan_vcs():
+    a, b = _pair(seed=14)
+    base = plan_spgemm(a, b, algorithm="hash", cache=False)
+    for scale in (2, 4):
+        variant = _scaled_plan(base, scale, b.n_cols)
+        failures = [vc for vc in check_plan_vcs(variant) if not vc.ok]
+        assert not failures, failures
+        assert variant.table_size >= base.table_size
+        # and it still computes the same product
+        cd = np.asarray(a.to_dense()) @ np.asarray(b.to_dense())
+        assert np.allclose(np.asarray(variant.execute(a, b).to_dense()),
+                           cd, atol=1e-3)
+
+
+def test_tuned_choice_threads_table_scale_into_plan(tmp_path):
+    """A DB entry naming a table-scale variant actually scales the frozen
+    schedule (and the plan still verifies + computes correctly)."""
+    db = PerfDB(str(tmp_path / "db.json"))
+    a, b = _pair(seed=15)
+    base = plan_spgemm(a, b, algorithm="hash", cache=False)
+    _seed_entry(db, a, b, algorithm="hash", table_scale=2)
+    plan = plan_spgemm(a, b, autotune=True, autotune_db=db, cache=False)
+    assert plan.provenance == "measured" and plan.algorithm == "hash"
+    assert plan.table_size >= base.table_size
+    failures = [vc for vc in check_plan_vcs(plan) if not vc.ok]
+    assert not failures, failures
+    cd = np.asarray(a.to_dense()) @ np.asarray(b.to_dense())
+    assert np.allclose(np.asarray(plan.execute(a, b).to_dense()), cd,
+                       atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Roofline context helpers
+# ---------------------------------------------------------------------------
+
+def test_spgemm_roofline_classifies_bounds():
+    from repro.analysis.roofline import spgemm_roofline, \
+        spgemm_traffic_bytes
+    # sparse products are memory-bound: ~1 flop/byte << machine balance
+    nbytes = spgemm_traffic_bytes(n_rows=1000, nnz_a=8000, flop=64000,
+                                  nnz_c=32000)
+    roof = spgemm_roofline(2.0 * 64000, nbytes, seconds=1e-3)
+    assert roof["bound"] == "memory"
+    assert 0.0 < roof["roof_fraction"]
+    # a hypothetical compute-heavy op flips the bound
+    roof2 = spgemm_roofline(1e15, 1e6, seconds=1.0)
+    assert roof2["bound"] == "compute"
+
+
+def test_measured_entry_records_roofline_and_candidates(tmp_path):
+    db = PerfDB(str(tmp_path / "db.json"))
+    a, b = _pair(seed=16, scale=4)
+    choice = measured_recommend(a, b, db=db)
+    assert isinstance(choice, TunedChoice)
+    (entry,) = db.load().values()
+    assert entry["roofline"]["bound"] in ("memory", "compute")
+    assert entry["candidates"] and \
+        min(entry["candidates"].values()) == entry["us"]
+    assert entry["algorithm"] in ALGOS

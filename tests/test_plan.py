@@ -363,3 +363,26 @@ def test_planned_bfs_and_triangles_match_unplanned():
     assert after["misses"] == before["misses"], \
         "repeat BFS must plan nothing new"
     assert after["hits"] > before["hits"]
+
+
+def test_plan_cache_restore_refreshes_recency():
+    """Re-storing an existing key at capacity must refresh its recency
+    (pop-before-insert): the old in-place overwrite kept the key's stale
+    dict position, so a just-refreshed plan was evicted as "least
+    recent" by the very next store."""
+    from repro.core import plan as plan_mod
+    from repro.core.plan import cache_store, cache_lookup
+    clear_plan_cache()
+    old_cap = plan_mod.PLAN_CACHE_CAPACITY
+    plan_mod.PLAN_CACHE_CAPACITY = 2
+    try:
+        cache_store(("spgemm", "k1"), "v1")
+        cache_store(("spgemm", "k2"), "v2")
+        cache_store(("spgemm", "k1"), "v1-refreshed")  # re-store at capacity
+        cache_store(("spgemm", "k3"), "v3")            # must evict k2, not k1
+        assert cache_lookup(("spgemm", "k1")) == "v1-refreshed"
+        assert cache_lookup(("spgemm", "k3")) == "v3"
+        assert cache_lookup(("spgemm", "k2")) is None  # the true LRU victim
+    finally:
+        plan_mod.PLAN_CACHE_CAPACITY = old_cap
+        clear_plan_cache()

@@ -68,3 +68,69 @@ def test_skewed_has_higher_skew_stat():
     s_g5 = measure_stats(g5, g5)
     assert s_g5.row_skew > s_er.row_skew, \
         "G500 (power law) must look more skewed than ER"
+
+
+def test_measure_stats_collects_exact_eq_sums():
+    """Eq.1/Eq.2 per-row log sums are collected and match a numpy
+    recompute (paper section 4.2.4; PR-8 mispricing bugfix)."""
+    import numpy as np
+    from repro.core.schedule import flops_per_row
+    from repro.core.spgemm import symbolic
+
+    a = rmat_csr(5, 3, "G500", seed=2)
+    b = rmat_csr(5, 3, "ER", seed=3)
+    row_nnz_c, _, _, _ = symbolic(a, b)
+    s = measure_stats(a, b, row_nnz_c=row_nnz_c)
+    flop = np.asarray(flops_per_row(a, b), dtype=np.float64)
+    nnz_a_rows = np.asarray(a.row_nnz(), dtype=np.float64)
+    rc = np.asarray(row_nnz_c, dtype=np.float64)
+    eq1 = float((flop * np.log2(np.maximum(nnz_a_rows, 2.0))).sum())
+    eq2 = float((rc * np.log2(np.maximum(rc, 2.0))).sum())
+    assert s.eq1_heap_log > 0.0 and s.eq2_hash_sort > 0.0
+    assert abs(s.eq1_heap_log - eq1) <= 1e-3 * max(eq1, 1.0)
+    assert abs(s.eq2_hash_sort - eq2) <= 1e-3 * max(eq2, 1.0)
+
+
+def test_mean_based_ranking_inverts_on_skewed_input():
+    """The regression the exact sums fix: one full row + a diagonal tail.
+
+    The mean row nnz is ~2, so the old ``flop * log2(mean)`` heap cost
+    collapses to ``flop * 1`` and heap *beats* unsorted hash
+    (``1.5 * flop``).  The exact Eq.1 sum concentrates the flop in the
+    full row where ``log2 nnz(a_0*) = log2 n``, pricing heap several
+    times above hash -- the mean-based model inverts the true ranking
+    exactly in the skewed regime the paper says matters (G500).
+    """
+    import dataclasses
+    import numpy as np
+    from repro.core.formats import CSR
+
+    n = 64
+    dense = np.zeros((n, n), np.float32)
+    dense[0, :] = 1.0                    # one heavy row: nnz = n
+    idx = np.arange(1, n)
+    dense[idx, idx] = 1.0                # tail rows: nnz = 1
+    a = CSR.from_dense(dense)
+    s = measure_stats(a, a)
+    assert s.mean_row_nnz_a < 2.5        # mean hides the heavy row
+
+    legacy = dataclasses.replace(s, eq1_heap_log=0.0, eq2_hash_sort=0.0)
+    # mean-substituted model: heap "wins" against unsorted hash...
+    assert cost_heap(legacy) < cost_hash(legacy, False)
+    # ...the exact per-row sums invert that -- hash wins, by a margin
+    assert cost_heap(s) > cost_hash(s, False) * 2.0
+
+
+def test_block_density_pads_non_tile_multiple_shapes():
+    """1000x1000-style shapes (not a tile multiple) used to probe as 0.0
+    and silently disable bcsr routing; padding to the tile grid keeps a
+    dense-blocked matrix block-dense and Table-4+TPU recommends bcsr."""
+    import numpy as np
+    from repro.core.formats import CSR
+    from repro.core.recipe import block_density_of
+
+    n = 100                              # not a multiple of the 8x8 tile
+    a = CSR.from_dense(np.ones((n, n), np.float32))
+    dens = block_density_of(a)
+    assert dens > 0.9, f"padded probe diluted to {dens}"
+    assert choose_algorithm(a, a, probe_blocks=True) == "bcsr"

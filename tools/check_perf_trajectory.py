@@ -1,0 +1,157 @@
+#!/usr/bin/env python
+"""Gate fresh perf-trajectory runs against the committed baseline.
+
+Usage:
+    python tools/check_perf_trajectory.py FRESH.json [FRESH2.json ...] \
+        BASELINE.json [--threshold 1.3] [--min-us 50] [--selftest]
+
+The *last* positional is the baseline; every earlier one is an
+independent fresh run.  Rows are matched by exact ``name``.  The raw
+per-row ratio ``fresh/baseline`` confounds real regressions with
+machine speed (CI runners differ run to run), so the gate normalizes:
+each row's ratio is divided by the **median ratio across all matched
+rows of its run**, and a row fails only when that normalized ratio
+exceeds the threshold.  A uniform 2x slower machine has median 2x and
+every normalized ratio 1.0 -- passes; a single kernel regressing 2x on
+an otherwise stable run has median ~1.0 and normalized ratio ~2.0 --
+fails.  With several fresh runs, a row must regress in **every** run to
+fail -- a real regression reproduces, scheduler noise does not.  Both
+timings already come from median-of-3 (``benchmarks.common.bench``),
+and rows faster than ``--min-us`` in the *baseline* are skipped as pure
+dispatch noise.
+
+Unmatched rows (suites added or removed since the baseline) are
+reported but never fail the gate: the baseline is regenerated in the
+same PR that changes the suite.
+
+``--selftest`` runs the gate against synthetic documents -- a clean run
+must pass and a run with one injected 2x row must fail -- so CI proves
+the gate can actually fire before trusting its green.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import sys
+
+
+def load_rows(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("schema") != 1:
+        raise SystemExit(f"{path}: unknown trajectory schema "
+                         f"{doc.get('schema')!r}")
+    return {r["name"]: float(r["us_per_call"]) for r in doc["rows"]}
+
+
+def check(fresh: dict, base: dict, threshold: float = 1.3,
+          min_us: float = 50.0) -> tuple[list, list]:
+    """Returns ``(failures, report_lines)``; empty failures = pass."""
+    matched = [(name, fresh[name], base[name]) for name in sorted(base)
+               if name in fresh and base[name] >= min_us]
+    report = [f"matched {len(matched)} rows "
+              f"(baseline has {len(base)}, fresh has {len(fresh)}; "
+              f"min-us {min_us})"]
+    for name in sorted(set(base) ^ set(fresh)):
+        side = "baseline-only" if name in base else "fresh-only"
+        report.append(f"  unmatched ({side}): {name}")
+    if not matched:
+        report.append("no matched rows above the noise floor; passing")
+        return [], report
+    ratios = {name: f / b for name, f, b in matched}
+    med = statistics.median(ratios.values())
+    report.append(f"median fresh/baseline ratio {med:.3f} "
+                  "(machine-speed normalizer)")
+    failures = []
+    for name, f, b in sorted(matched, key=lambda r: -ratios[r[0]] / med):
+        norm = ratios[name] / max(med, 1e-12)
+        line = (f"  {name}: {b:.0f}us -> {f:.0f}us "
+                f"(raw {ratios[name]:.2f}x, normalized {norm:.2f}x)")
+        if norm > threshold:
+            failures.append(name)
+            line += f"  REGRESSION > {threshold}x"
+        report.append(line)
+    return failures, report
+
+
+def check_runs(fresh_runs: list, base: dict, threshold: float = 1.3,
+               min_us: float = 50.0) -> tuple[list, list]:
+    """Gate several independent fresh runs: a row fails only if it
+    regresses past the threshold in *every* run (real regressions
+    reproduce; scheduler noise does not)."""
+    per_run = [check(fresh, base, threshold, min_us)
+               for fresh in fresh_runs]
+    report: list = []
+    for i, (_, rep) in enumerate(per_run, 1):
+        report.append(f"--- fresh run {i}/{len(per_run)} ---")
+        report.extend(rep)
+    failure_sets = [set(fails) for fails, _ in per_run]
+    reproduced = sorted(set.intersection(*failure_sets))
+    flaky = sorted(set.union(*failure_sets) - set(reproduced))
+    if flaky:
+        report.append(f"not reproduced across all runs (ignored): "
+                      f"{', '.join(flaky)}")
+    return reproduced, report
+
+
+def selftest(threshold: float, min_us: float) -> int:
+    base = {f"suite,row{i}": 1000.0 + 10 * i for i in range(8)}
+    # clean run on a uniformly 1.7x slower machine: must pass
+    clean = {k: v * 1.7 for k, v in base.items()}
+    fails, _ = check(clean, base, threshold, min_us)
+    assert not fails, f"selftest: clean slower-machine run failed: {fails}"
+    # same run with one 2x-regressed row: must fail, and only that row
+    regressed = dict(clean)
+    regressed["suite,row3"] *= 2.0
+    fails, _ = check(regressed, base, threshold, min_us)
+    assert fails == ["suite,row3"], \
+        f"selftest: injected regression not caught (got {fails})"
+    # sub-noise-floor rows never fire
+    tiny_base = {"suite,tiny": min_us / 2}
+    fails, _ = check({"suite,tiny": min_us * 100}, tiny_base,
+                     threshold, min_us)
+    assert not fails, "selftest: noise-floor row fired"
+    # multi-run semantics: a regression present in every run fires...
+    fails, _ = check_runs([regressed, regressed], base, threshold, min_us)
+    assert fails == ["suite,row3"], \
+        f"selftest: reproduced regression not caught (got {fails})"
+    # ...one present in only one run (scheduler noise) does not
+    fails, _ = check_runs([regressed, clean], base, threshold, min_us)
+    assert not fails, f"selftest: non-reproduced noise fired: {fails}"
+    print("check_perf_trajectory selftest: OK")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="*", metavar="JSON",
+                    help="one or more FRESH runs followed by the "
+                         "BASELINE (last path)")
+    ap.add_argument("--threshold", type=float, default=1.3,
+                    help="max normalized slowdown per matched row")
+    ap.add_argument("--min-us", type=float, default=50.0,
+                    help="skip rows under this baseline time (noise)")
+    ap.add_argument("--selftest", action="store_true",
+                    help="prove the gate fires on an injected regression")
+    args = ap.parse_args(argv)
+    if args.selftest:
+        return selftest(args.threshold, args.min_us)
+    if len(args.files) < 2:
+        ap.error("need FRESH... BASELINE json paths (or --selftest)")
+    *fresh_paths, base_path = args.files
+    failures, report = check_runs([load_rows(p) for p in fresh_paths],
+                                  load_rows(base_path),
+                                  args.threshold, args.min_us)
+    print("\n".join(report))
+    if failures:
+        print(f"\nFAIL: {len(failures)} row(s) regressed past "
+              f"{args.threshold}x in every fresh run: "
+              f"{', '.join(failures)}")
+        return 1
+    print("\nperf trajectory OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
