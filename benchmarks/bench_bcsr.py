@@ -1,0 +1,153 @@
+"""Planned BCSR block-SpGEMM benchmark: register-tiled path vs CSR hash.
+
+For each block-clustered suite matrix, freeze both planned paths once --
+the block-granularity :func:`repro.core.plan_bcsr` plan and the CSR hash
+plan -- and time their numeric phases.  The interesting regime is high
+tile occupancy: one MXU block MAC replaces ``bm x bn`` scalar hash
+probes, so the block path's advantage grows with block density
+(DESIGN.md section 17).
+
+``--smoke`` is the CI gate for the block-path contract:
+
+  * the planned BCSR product agrees **bitwise** with the CSR planned
+    hash path on dyadic values (flattened through ``bcsr_to_csr``);
+  * repeat executes of a frozen ``BCSRPlan`` re-inspect nothing, proven
+    by the block kernel's ``symbolic`` call counter;
+  * on a decisively block-dense input (dense 8x8 block diagonal) the
+    block plan's numeric phase beats the CSR hash plan's.
+
+    PYTHONPATH=src python benchmarks/bench_bcsr.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import numpy as np
+
+sys.path.insert(0, ".")
+
+from repro.core import CSR, plan_bcsr, plan_spgemm
+from repro.core.formats import bcsr_to_csr, csr_to_bcsr
+from repro.core.spgemm import symbolic_flops
+from repro.kernels.spgemm_bcsr import ops as bcsr_ops
+
+from benchmarks.common import bench, emit, flops_rate
+
+
+def block_clustered(gm: int, gn: int, bm: int, bn: int, density: float,
+                    seed: int) -> np.ndarray:
+    """Block-clustered dyadic dense matrix: a ``gm x gn`` occupancy grid
+    of fully dense ``bm x bn`` tiles, values in {0.5, 1, 1.5, 2} so every
+    kernel-vs-oracle comparison is bitwise."""
+    rng = np.random.default_rng(seed)
+    occ = (rng.random((gm, gn)) < density).astype(np.float32)
+    if not occ.any():
+        occ[0, 0] = 1.0
+    vals = rng.choice(np.array([0.5, 1.0, 1.5, 2.0], np.float32),
+                      size=(gm * bm, gn * bn))
+    return np.kron(occ, np.ones((bm, bn), np.float32)) * vals
+
+
+def block_diag(gm: int, bm: int, seed: int) -> np.ndarray:
+    """Dense ``bm x bm`` block diagonal: tile occupancy 1.0 along the
+    diagonal, the regime where the block path wins most decisively."""
+    rng = np.random.default_rng(seed)
+    occ = np.eye(gm, dtype=np.float32)
+    vals = rng.choice(np.array([0.5, 1.0, 1.5, 2.0], np.float32),
+                      size=(gm * bm, gm * bm))
+    return np.kron(occ, np.ones((bm, bm), np.float32)) * vals
+
+
+def _csr_of(d: np.ndarray) -> CSR:
+    r, c = np.nonzero(d)
+    return CSR.from_numpy_coo(r, c, d[r, c], d.shape)
+
+
+def suite(quick: bool = True):
+    """(tag, dense_a, dense_b, block) cases across tile occupancy."""
+    cases = [
+        ("diag16x8", block_diag(16, 8, 0), block_diag(16, 8, 1), (8, 8)),
+        ("clust_d50", block_clustered(12, 12, 8, 8, 0.5, 2),
+         block_clustered(12, 12, 8, 8, 0.5, 3), (8, 8)),
+    ]
+    if not quick:
+        cases += [
+            ("diag32x8", block_diag(32, 8, 4), block_diag(32, 8, 5), (8, 8)),
+            ("clust_d25", block_clustered(16, 16, 8, 8, 0.25, 6),
+             block_clustered(16, 16, 8, 8, 0.25, 7), (8, 8)),
+        ]
+    return cases
+
+
+def _pair(tag, ad, bd, block, iters):
+    """Freeze both planned paths, time their numeric phases, emit rows;
+    returns (block plan, hash plan, operands, timings)."""
+    a, b = _csr_of(ad), _csr_of(bd)
+    ab = csr_to_bcsr(a, block)
+    bb = csr_to_bcsr(b, (block[1], block[1]))
+    bplan = plan_bcsr(ab, bb, cache=False)
+    hplan = plan_spgemm(a, b, algorithm="hash", cache=False)
+    flop = float(np.asarray(symbolic_flops(a, b)).sum())
+
+    t_b = bench(lambda: bplan.execute(ab, bb).blocks, iters=iters)
+    emit(f"bcsr,{tag},block", t_b,
+         f"nnzb={bplan.nnzb_c};{flops_rate(flop, t_b)}")
+    t_h = bench(lambda: hplan.execute(a, b).data, iters=iters)
+    emit(f"bcsr,{tag},hash", t_h,
+         f"nnz={hplan.nnz_c};speedup={t_h / t_b:.2f}x")
+    return bplan, hplan, (a, b, ab, bb), t_b, t_h
+
+
+def run(quick: bool = True):
+    """benchmarks.run suite entry."""
+    for tag, ad, bd, block in suite(quick):
+        _pair(tag, ad, bd, block, iters=2 if quick else 3)
+
+
+def smoke():
+    """CI gate for the planned-BCSR contract (see module docstring)."""
+    for tag, ad, bd, block in suite(quick=True):
+        bplan, hplan, (a, b, ab, bb), t_b, t_h = _pair(
+            tag, ad, bd, block, iters=5)
+
+        # (1) bitwise agreement with the CSR planned hash path
+        cb = bcsr_to_csr(bplan.execute(ab, bb))
+        ch = hplan.execute(a, b)
+        assert np.array_equal(np.asarray(cb.to_dense()),
+                              np.asarray(ch.to_dense())), \
+            f"{tag}: block path disagrees with the CSR hash path"
+
+        # (2) repeat executes re-inspect nothing
+        bcsr_ops.reset_kernel_calls()
+        for _ in range(3):
+            bplan.execute(ab, bb).blocks.block_until_ready()
+        calls = bcsr_ops.kernel_call_counts()
+        assert calls["symbolic"] == 0, \
+            f"{tag}: repeat execute re-inspected: {calls}"
+        assert calls["numeric"] + calls["batched_numeric"] > 0, calls
+
+        # (3) the block path wins where tiles are dense
+        if tag.startswith("diag"):
+            assert t_b < t_h, \
+                f"{tag}: block path ({t_b*1e6:.0f}us) lost to CSR hash " \
+                f"({t_h*1e6:.0f}us)"
+        print(f"bcsr smoke {tag}: block={t_b*1e6:.0f}us "
+              f"hash={t_h*1e6:.0f}us ratio={t_h / t_b:.2f}x", flush=True)
+    print("bench_bcsr smoke: OK", flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="planned-BCSR acceptance assertions (CI gate)")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+        return
+    run(quick=not args.full)
+
+
+if __name__ == "__main__":
+    main()

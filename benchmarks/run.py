@@ -30,6 +30,7 @@ from . import bench_chain as chain_bench
 from . import bench_batch as batch_bench
 from . import bench_verify as verify_bench
 from . import bench_autotune as autotune_bench
+from . import bench_bcsr as bcsr_bench
 
 
 SUITES = [
@@ -53,6 +54,7 @@ SUITES = [
     ("batch", lambda q: batch_bench.run(q)),
     ("verify", lambda q: verify_bench.run(q)),
     ("autotune", lambda q: autotune_bench.run(q)),
+    ("bcsr", lambda q: bcsr_bench.run(q)),
 ]
 
 
@@ -114,6 +116,20 @@ def write_json(path: str, suites_run, failures: int) -> None:
     with open(path, "w") as f:
         json.dump(doc, f, indent=1)
     print(f"wrote {path}: {len(doc['rows'])} rows", file=sys.stderr)
+    _feed_db(doc)
+
+
+def _feed_db(doc: dict) -> None:
+    """Best-effort: mirror the trajectory rows into the autotune PerfDB
+    (``bench|`` namespace, aged by this run's git sha) so the perf history
+    CI gates on is queryable next to the tuner's winners."""
+    try:
+        from repro.autotune import feed_bench_rows
+        n = feed_bench_rows(doc)
+        print(f"fed {n} rows into the autotune DB", file=sys.stderr)
+    except Exception as exc:  # noqa: BLE001 - ingestion never fails a run
+        print(f"autotune DB feed skipped ({type(exc).__name__}: {exc})",
+              file=sys.stderr)
 
 
 def main(argv=None) -> None:

@@ -11,6 +11,9 @@ Public surface (DESIGN.md section 16):
   * :class:`AutotuneDBWarning` -- every degraded path warns with this.
   * :func:`reset_measure_calls` / :func:`measure_call_counts` -- the
     effort counters tests use to prove a DB hit measures nothing.
+  * :func:`feed_bench_rows` / :func:`bench_row_key` -- bench-trajectory
+    ingestion: ``benchmarks/run.py --json`` rows land in the same DB
+    under the ``bench|`` namespace, aged by recorded git sha.
 
 This package intentionally lives *outside* ``repro.core``: it times
 wall-clock, which the core planner's determinism lint bans, and core
@@ -18,12 +21,14 @@ only imports it lazily when a caller asks for measured mode.
 """
 from .db import DRIFT_TOLERANCE, SCHEMA_VERSION, AutotuneDBWarning, \
     PerfDB, default_db_path, resolve_db
+from .feed import BENCH_KEY_PREFIX, bench_row_key, feed_bench_rows
 from .measure import MEASURE_CALLS, TABLE_SCALES, TunedChoice, db_key, \
     measure_call_counts, measured_recommend, reset_measure_calls
 
 __all__ = [
-    "AutotuneDBWarning", "DRIFT_TOLERANCE", "MEASURE_CALLS", "PerfDB",
-    "SCHEMA_VERSION", "TABLE_SCALES", "TunedChoice", "db_key",
-    "default_db_path", "measure_call_counts", "measured_recommend",
+    "AutotuneDBWarning", "BENCH_KEY_PREFIX", "DRIFT_TOLERANCE",
+    "MEASURE_CALLS", "PerfDB", "SCHEMA_VERSION", "TABLE_SCALES",
+    "TunedChoice", "bench_row_key", "db_key", "default_db_path",
+    "feed_bench_rows", "measure_call_counts", "measured_recommend",
     "reset_measure_calls", "resolve_db",
 ]

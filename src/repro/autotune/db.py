@@ -56,7 +56,8 @@ DRIFT_TOLERANCE = 0.05
 _STAT_FIELDS = ("flop", "nnz_a")
 
 #: algorithms an entry may legally name (anything else is schema drift)
-KNOWN_ALGORITHMS = ("esc", "heap", "hash", "hash_vector", "hash_jnp")
+KNOWN_ALGORITHMS = ("esc", "heap", "hash", "hash_vector", "hash_jnp",
+                    "bcsr")
 
 
 class AutotuneDBWarning(UserWarning):
@@ -146,17 +147,10 @@ class PerfDB:
         return entry
 
     # -- writing --------------------------------------------------------
-    def put(self, key: str, entry: dict) -> None:
-        """Read-merge-replace: persist ``entry`` under ``key`` atomically.
-
-        The current file is re-read first so concurrent writers merge
-        rather than clobber each other's keys; the temp file lives in
-        the same directory so ``os.replace`` is atomic on POSIX.  Write
-        failures warn and leave the DB unchanged -- measurement results
-        still flow back to the caller.
-        """
-        entries = self.load()
-        entries[key] = entry
+    def _write(self, entries: dict) -> None:
+        """Atomically replace the document with ``entries`` (same-directory
+        temp file + ``os.replace``; failures warn and leave the DB as it
+        was)."""
         doc = {"schema": SCHEMA_VERSION, "entries": entries}
         path = pathlib.Path(self.path)
         tmp = path.with_name(f"{path.name}.tmp.{os.getpid()}")
@@ -172,6 +166,44 @@ class PerfDB:
                 tmp.unlink(missing_ok=True)
             except OSError:
                 pass
+
+    def put(self, key: str, entry: dict) -> None:
+        """Read-merge-replace: persist ``entry`` under ``key`` atomically.
+
+        The current file is re-read first so concurrent writers merge
+        rather than clobber each other's keys; the temp file lives in
+        the same directory so ``os.replace`` is atomic on POSIX.  Write
+        failures warn and leave the DB unchanged -- measurement results
+        still flow back to the caller.
+        """
+        entries = self.load()
+        entries[key] = entry
+        self._write(entries)
+
+    def update(self, mapping: dict) -> None:
+        """:meth:`put` for many keys with a single read-merge-replace."""
+        if not mapping:
+            return
+        entries = self.load()
+        entries.update(mapping)
+        self._write(entries)
+
+    def age(self, current_sha: str, prefix: str = "bench|") -> int:
+        """Drop ``prefix``-namespaced entries recorded at a different
+        ``git_sha`` (the bench-trajectory aging contract: a row timed on
+        old code says nothing about the current tree).  Returns the number
+        of entries removed.  Winner entries (``spgemm|...``) carry no sha
+        semantics and are never touched.
+        """
+        entries = self.load()
+        stale = [k for k, e in entries.items()
+                 if k.startswith(prefix) and isinstance(e, dict)
+                 and e.get("git_sha") not in (None, current_sha)]
+        if stale:
+            for k in stale:
+                del entries[k]
+            self._write(entries)
+        return len(stale)
 
     def __len__(self) -> int:
         return len(self.load())

@@ -169,6 +169,19 @@ def _candidates(a, b, semiring: str, mask) -> list:
             label = algo if scale == 1 else f"{algo}@t{scale}"
             lanes.append((label, algo, scale))
     lanes.append(("hash_jnp", "hash_jnp", 1))
+    # MXU block lane (DESIGN.md section 17): only raced where the recipe's
+    # eligibility gate says tiles are dense enough to possibly win, and
+    # where the host occupancy probe is affordable -- a lane that obviously
+    # loses just wastes microbenchmark time on every miss.
+    try:
+        from repro.core.recipe import (AUTO_PROBE_CELLS,
+                                       MXU_MIN_TILE_DENSITY,
+                                       block_density_of)
+        if a.n_rows * a.n_cols <= AUTO_PROBE_CELLS and \
+                block_density_of(a) >= MXU_MIN_TILE_DENSITY:
+            lanes.append(("bcsr", "bcsr", 1))
+    except Exception:
+        pass
     return lanes
 
 

@@ -14,6 +14,7 @@ from .recipe import (SpGEMMStats, measure_stats, model_costs, recommend,
                      aggregate_stats)
 from .plan import (SpGEMMPlan, plan_spgemm, structure_key, plan_cache_stats,
                    clear_plan_cache, PLAN_KINDS)
+from .bcsr import BCSRPlan, plan_bcsr, bcsr_structure_key
 from .distributed import (ShardedCSR, shard_csr_rows, reshard_rows,
                           unshard_rows, DistributedPlan, plan_spgemm_1d,
                           spgemm_1d, spmm_1d, SummaPlan, plan_spgemm_summa,
@@ -38,6 +39,7 @@ __all__ = [
     "choose_algorithm", "choose_algorithm_from_stats", "aggregate_stats",
     "SpGEMMPlan", "plan_spgemm", "structure_key", "plan_cache_stats",
     "clear_plan_cache", "PLAN_KINDS",
+    "BCSRPlan", "plan_bcsr", "bcsr_structure_key",
     "ShardedCSR", "shard_csr_rows", "reshard_rows", "unshard_rows",
     "DistributedPlan", "plan_spgemm_1d", "spgemm_1d", "spmm_1d",
     "SummaPlan", "plan_spgemm_summa", "spgemm_summa", "summa_panel_bounds",

@@ -1,0 +1,169 @@
+"""Inspector-executor planner for block-sparse (BCSR) SpGEMM
+(DESIGN.md section 17).
+
+The scalar planner (:mod:`repro.core.plan`) freezes the paper's Fig. 6/7
+inspection at row granularity; this module freezes the *same* inspection
+at block granularity for the DBCSR-class workloads (quantum chemistry,
+block-MoE) where the matrix is sparse in tiles, not scalars.  One
+inspection -- block flop per block row, equal-flop block-row bins, static
+and per-bin power-of-two hash-table sizes, the exact symbolic block count
+of C -- becomes a frozen :class:`BCSRPlan`; ``plan.execute(a, b)`` then
+stages only the register-tiled MXU numeric kernel
+(:mod:`repro.kernels.spgemm_bcsr`), with the schedule riding along as
+array operands.  Zero re-inspection on repeat executes is counter-verified
+(``kernels.spgemm_bcsr.ops.KERNEL_CALLS["symbolic"]`` stays flat).
+
+Plans are cached in the shared LRU of :mod:`repro.core.plan` under the
+``"bcsr"`` kind, keyed by the operands' *block structure* (values never
+enter the key -- a re-weighted fleet of tiles hits the cached plan).
+
+Planning is host-side eager (capacities must become static shapes);
+``execute`` is trace-friendly and runs under ``jit`` and -- through the
+kernels' ``custom_vmap`` rule -- under ``vmap`` over block-value fleets.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .formats import BCSR
+from .plan import cache_lookup, cache_store
+
+
+def bcsr_structure_key(a: BCSR) -> bytes:
+    """Digest of a BCSR's *block structure* (pattern + static layout), not
+    block values.  The block-granularity twin of
+    :func:`repro.core.plan.structure_key`: covers shape, block, capacity,
+    block count, and the indptr/indices arrays; memoized on the frozen
+    instance so repeat lookups skip the host transfer + hash.
+    """
+    cached = a.__dict__.get("_structure_digest")
+    if cached is not None:
+        return cached
+    h = hashlib.blake2b(digest_size=16)
+    h.update(repr((a.shape, a.block, a.bcap, int(a.nnzb))).encode())
+    h.update(np.asarray(a.indptr).tobytes())
+    h.update(np.asarray(a.indices).tobytes())
+    digest = h.digest()
+    object.__setattr__(a, "_structure_digest", digest)
+    return digest
+
+
+@dataclass(frozen=True)
+class BCSRPlan:
+    """Frozen block-product recipe for one (A, B) block-structure pair.
+
+    Everything the executor needs, nothing recomputed: the block flop
+    profile and equal-flop block-row bins (Fig. 6 over the block grid),
+    per-bin p2 hash-table sizes and the static scratch allocation (Fig. 7
+    lines 9-12, keys = block-column ids), and the exact block row pointer
+    and capacity of C from the symbolic phase.  All capacities are Python
+    ints, so structure-identical executes hit the jit dispatch cache.
+    """
+    key: tuple = dataclasses.field(repr=False)
+    block_a: Tuple[int, int]
+    block_b: Tuple[int, int]
+    shape_a: Tuple[int, int]
+    shape_b: Tuple[int, int]
+    bcap_a: int
+    bcap_b: int
+    nnzb_a: int
+    nnzb_b: int
+    n_bins: int
+    vector: bool
+    # --- inspection products -------------------------------------------
+    flop: jax.Array = dataclasses.field(repr=False)   # block flop/block row
+    total_flop: int          # total block flop (block-pair MACs)
+    offsets: jax.Array = dataclasses.field(repr=False)    # (n_bins + 1,)
+    bin_tsize: jax.Array = dataclasses.field(repr=False)  # (n_bins,) p2
+    table_size: int          # static scratch allocation (bin max, p2)
+    row_nnzb_c: jax.Array = dataclasses.field(repr=False)
+    indptr_cb: jax.Array = dataclasses.field(repr=False)
+    nnzb_c: int
+    bcap_c: int              # exact block-nnz(C) as a static capacity
+    provenance: str = "planned"
+
+    @property
+    def block_c(self) -> Tuple[int, int]:
+        return (self.block_a[0], self.block_b[1])
+
+    # -------------------------------------------------------------------
+    def check_structure(self, a: BCSR, b: BCSR) -> None:
+        """Cheap block-structure guard (shapes/blocks/caps/nnzb).
+
+        Executing against a different block structure would silently use
+        wrong capacities; nnzb is guarded only when concrete so a jit over
+        re-valued operands does not trip a concretization error.
+        """
+        assert a.shape == self.shape_a and b.shape == self.shape_b, \
+            f"plan is for {self.shape_a}x{self.shape_b}, " \
+            f"got {a.shape}x{b.shape}"
+        assert a.block == self.block_a and b.block == self.block_b, \
+            f"plan is for blocks {self.block_a}x{self.block_b}, " \
+            f"got {a.block}x{b.block}"
+        assert a.bcap == self.bcap_a and b.bcap == self.bcap_b, \
+            "operand block capacities differ from the planned structure"
+        for op, planned in ((a, self.nnzb_a), (b, self.nnzb_b)):
+            if not isinstance(op.nnzb, jax.core.Tracer):
+                assert int(op.nnzb) == planned, \
+                    "operand block nnz differs from the planned structure " \
+                    "(replan or clear_plan_cache)"
+
+    def execute(self, a: BCSR, b: BCSR) -> BCSR:
+        """Numeric phase only: the register-tiled MXU kernel with this
+        plan's frozen schedule -- zero re-inspection (counter-verified by
+        ``KERNEL_CALLS["symbolic"]``).  Block rows of C are unsorted (C8).
+        """
+        self.check_structure(a, b)
+        from repro.kernels.spgemm_bcsr import ops as bcsr_ops
+        return bcsr_ops.spgemm_bcsr(
+            a, b, self.bcap_c, vector=self.vector,
+            table_size=self.table_size,
+            schedule=(self.offsets, self.bin_tsize),
+            indptr_cb=self.indptr_cb)
+
+    __call__ = execute
+
+
+def plan_bcsr(a: BCSR, b: BCSR, *, n_bins: int = 8, vector: bool = False,
+              cache: bool = True) -> BCSRPlan:
+    """Run the block-granularity inspection once, freeze a :class:`BCSRPlan`.
+
+    With ``cache=True`` (default) the shared plan LRU is consulted first
+    under the ``"bcsr"`` kind: a block-structure-identical repeat request
+    returns the existing plan and skips schedule + symbolic entirely.
+    """
+    bm, bk = a.block
+    bk2, bn = b.block
+    assert bk == bk2 and a.shape[1] == b.shape[0], \
+        f"block-inner mismatch: {a.shape}x{a.block} @ {b.shape}x{b.block}"
+    key = ("bcsr", bcsr_structure_key(a), bcsr_structure_key(b), n_bins,
+           vector)
+    if cache:
+        hit = cache_lookup(key)
+        if hit is not None:
+            return hit
+
+    from repro.kernels.spgemm_bcsr import ops as bcsr_ops
+    # Fig. 6/7 at block granularity; eager so the int32 flop-overflow
+    # guard fires loudly on concrete inputs instead of mis-binning.
+    flop, offsets, bin_tsize, table_size, row_nnzb, indptr_cb = \
+        bcsr_ops.bcsr_inspect(a, b, n_bins=n_bins, vector=vector,
+                              eager=True)
+    nnzb_c = int(jnp.sum(row_nnzb))
+    plan = BCSRPlan(
+        key=key, block_a=a.block, block_b=b.block, shape_a=a.shape,
+        shape_b=b.shape, bcap_a=a.bcap, bcap_b=b.bcap, nnzb_a=int(a.nnzb),
+        nnzb_b=int(b.nnzb), n_bins=n_bins, vector=vector, flop=flop,
+        total_flop=int(jnp.sum(flop)), offsets=offsets, bin_tsize=bin_tsize,
+        table_size=table_size, row_nnzb_c=row_nnzb, indptr_cb=indptr_cb,
+        nnzb_c=nnzb_c, bcap_c=max(nnzb_c, 1))
+    if cache:
+        cache_store(key, plan)
+    return plan

@@ -469,7 +469,7 @@ def plan_spgemm_1d(a_sh: ShardedCSR, b: CSR, *, algorithm: str = "auto",
                         mask=mask_locals[s] if mask_locals else None,
                         complement_mask=complement_mask,
                         sorted_output=sorted_output, n_bins=n_bins,
-                        cache=cache)
+                        use_case="dist", cache=cache)
         if algo == "auto":
             algo = p.algorithm              # shard 0 resolves; rest uniform
         plans.append(p)
@@ -904,7 +904,7 @@ def plan_spgemm_summa(a: CSR, b: CSR, n_shards: int,
     # Global inspection: exact output structure -> per-row-shard capacity,
     # and the recipe's algorithm choice resolved on the whole product.
     gplan = plan_spgemm(a, b, algorithm=algorithm, semiring=sr.name,
-                        n_bins=n_bins, cache=cache)
+                        n_bins=n_bins, use_case="dist", cache=cache)
     algo = gplan.algorithm
     row_nnz = np.asarray(gplan.row_nnz_c, np.int64)
     rows_per = m // n_shards
@@ -922,7 +922,7 @@ def plan_spgemm_summa(a: CSR, b: CSR, n_shards: int,
             b_p = jax.tree.map(lambda x: x[s, p], b_parts)
             plans.append(plan_spgemm(a_p, b_p, algorithm=algo,
                                      semiring=sr.name, n_bins=n_bins,
-                                     cache=cache))
+                                     use_case="dist", cache=cache))
 
     # Per-(chip, panel) frozen hash schedules, stacked (S, per, ...):
     # every panel plan shares n_bins and the global row count m, so the

@@ -264,7 +264,11 @@ class BCSR:
 
     @property
     def grid(self) -> Tuple[int, int]:
-        return (self.shape[0] // self.block[0], self.shape[1] // self.block[1])
+        # ceil division: non-tile-multiple logical shapes occupy a partial
+        # last block row/column (the tile padding is storage-only; ``shape``
+        # stays the logical extent and ``to_dense`` crops back to it)
+        bm, bn = self.block
+        return (-(-self.shape[0] // bm), -(-self.shape[1] // bn))
 
     @property
     def dtype(self):
@@ -275,13 +279,20 @@ class BCSR:
                    bcap: int | None = None) -> "BCSR":
         m, n = x.shape
         bm, bn = block
-        assert m % bm == 0 and n % bn == 0, (x.shape, block)
-        gm, gn = m // bm, n // bn
+        gm, gn = -(-m // bm), -(-n // bn)
+        pm, pn = gm * bm - m, gn * bn - n
+        if pm or pn:
+            # ragged logical shape: zero-pad into the tile grid; ``shape``
+            # below records the *logical* (m, n) and ``to_dense`` crops
+            x = jnp.pad(x, ((0, pm), (0, pn)))
         tiles = x.reshape(gm, bm, gn, bn).transpose(0, 2, 1, 3)   # (gm, gn, bm, bn)
         occ = jnp.any(tiles != 0, axis=(2, 3)).ravel()            # (gm*gn,)
         nnzb = occ.sum().astype(jnp.int32)
         if bcap is None:
-            bcap = gm * gn
+            # exact capacity when concrete (the planner's eager path);
+            # under trace the count is dynamic, so fall back to the grid
+            bcap = gm * gn if isinstance(nnzb, jax.core.Tracer) \
+                else max(int(nnzb), 1)
         order = jnp.argsort(~occ, stable=True)[:bcap]
         valid = jnp.arange(bcap, dtype=jnp.int32) < nnzb
         bcols = jnp.where(valid, (order % gn).astype(jnp.int32), 0)
@@ -306,7 +317,8 @@ class BCSR:
         dense = jnp.zeros((gm, gn, bm, bn), self.blocks.dtype)
         v = jnp.where(self.valid_mask()[:, None, None], self.blocks, 0)
         dense = dense.at[self.brow_ids(), self.indices].add(v)
-        return dense.transpose(0, 2, 1, 3).reshape(self.shape)
+        dense = dense.transpose(0, 2, 1, 3).reshape(gm * bm, gn * bn)
+        return dense[:self.shape[0], :self.shape[1]]   # crop tile padding
 
 
 _register(BCSR, ("indptr", "indices", "blocks", "nnzb"), ("shape", "block"))
@@ -351,12 +363,82 @@ class ELL:
 _register(ELL, ("indices", "data", "row_nnz"), ("shape",))
 
 
-def csr_to_bcsr(a: CSR, block: Tuple[int, int], bcap: int | None = None) -> BCSR:  # verify: allow(no-densify)
-    """Re-tile a scalar CSR into block CSR (via dense staging; format
-    conversion is data-pipeline work, not a jit-hot path)."""
-    return BCSR.from_dense(a.to_dense(), block, bcap)
+def csr_to_bcsr(a: CSR, block: Tuple[int, int], bcap: int | None = None) -> BCSR:
+    """Re-tile a scalar CSR into block CSR.
+
+    Concrete inputs take a host-exact sparse pass: block keys straight from
+    (indptr, indices), exact default ``bcap`` (= occupied blocks), no dense
+    staging -- so huge-but-sparse matrices convert without materializing
+    ``m * n`` cells.  Ragged (non-tile-multiple) logical shapes land in a
+    ceil-divided grid with a partial last block row/column.  Under trace
+    the structure is dynamic, so conversion falls back to dense staging
+    (format conversion is data-pipeline work, not a jit-hot path).
+    """
+    if isinstance(a.indptr, jax.core.Tracer) or \
+            isinstance(a.indices, jax.core.Tracer) or \
+            isinstance(a.data, jax.core.Tracer) or \
+            isinstance(a.nnz, jax.core.Tracer):
+        return BCSR.from_dense(a.to_dense(), block, bcap)  # verify: allow(no-densify)
+    bm, bn = block
+    m, n = a.shape
+    gm, gn = -(-m // bm), -(-n // bn)
+    nnz = int(a.nnz)
+    ip = np.asarray(a.indptr, np.int64)
+    rows = np.repeat(np.arange(m, dtype=np.int64), np.diff(ip))[:nnz]
+    cols = np.asarray(a.indices, np.int64)[:nnz]
+    vals = np.asarray(a.data)[:nnz]
+    key = (rows // bm) * gn + (cols // bn)
+    uniq, inv = np.unique(key, return_inverse=True)
+    nnzb = int(uniq.size)
+    if bcap is None:
+        bcap = max(nnzb, 1)
+    assert nnzb <= bcap, f"block nnz {nnzb} exceeds capacity {bcap}"
+    blocks = np.zeros((bcap, bm, bn),
+                      vals.dtype if vals.size else np.float32)
+    blocks[inv, rows % bm, cols % bn] = vals
+    bcols = np.zeros(bcap, np.int32)
+    bcols[:nnzb] = uniq % gn            # sorted within block rows (row-major)
+    counts = np.bincount(uniq // gn, minlength=gm)
+    indptr = np.zeros(gm + 1, np.int32)
+    np.cumsum(counts, out=indptr[1:])
+    return BCSR(jnp.asarray(indptr), jnp.asarray(bcols), jnp.asarray(blocks),
+                jnp.asarray(nnzb, jnp.int32), (m, n), block)
 
 
-def bcsr_to_csr(a: BCSR, cap: int | None = None) -> CSR:  # verify: allow(no-densify)
-    """Flatten a block CSR back to scalar CSR (sorted, via dense staging)."""
-    return CSR.from_dense(a.to_dense(), cap)
+def bcsr_to_csr(a: BCSR, cap: int | None = None, prune: bool = True) -> CSR:
+    """Flatten a block CSR back to scalar CSR (sorted row-major).
+
+    Stored blocks are dense tiles, so flattening emits every in-tile cell --
+    including the zeros a sparse scalar pattern was padded with when the
+    matrix was re-tiled.  The ``prune`` epilogue (default on) drops those
+    explicit zeros so ``bcsr_to_csr(csr_to_bcsr(a, block))`` round-trips
+    with ``nnz`` equal to the input's; pass ``prune=False`` to keep the
+    dense-tile pattern (every stored cell inside the logical shape becomes
+    an explicit entry).  Cells past the logical shape (ragged tile padding)
+    are always cropped.  Concrete inputs run a host sparse pass; traced
+    inputs fall back to dense staging with ``prune`` semantics matching
+    ``CSR.from_dense`` (zeros dropped).
+    """
+    if isinstance(a.indptr, jax.core.Tracer) or \
+            isinstance(a.indices, jax.core.Tracer) or \
+            isinstance(a.blocks, jax.core.Tracer) or \
+            isinstance(a.nnzb, jax.core.Tracer):
+        return CSR.from_dense(a.to_dense(), cap)  # verify: allow(no-densify)
+    bm, bn = a.block
+    m, n = a.shape
+    nnzb = int(a.nnzb)
+    ip = np.asarray(a.indptr, np.int64)
+    brows = np.repeat(np.arange(a.grid[0], dtype=np.int64),
+                      np.diff(ip))[:nnzb]
+    bcols = np.asarray(a.indices, np.int64)[:nnzb]
+    blocks = np.asarray(a.blocks)[:nnzb]
+    ii, jj = np.meshgrid(np.arange(bm, dtype=np.int64),
+                         np.arange(bn, dtype=np.int64), indexing="ij")
+    rows = (brows[:, None, None] * bm + ii[None]).ravel()
+    cols = (bcols[:, None, None] * bn + jj[None]).ravel()
+    vals = blocks.reshape(-1)
+    keep = (rows < m) & (cols < n)      # crop ragged tile padding
+    if prune:
+        keep &= vals != 0               # drop block-padding explicit zeros
+    return CSR.from_numpy_coo(rows[keep], cols[keep], vals[keep], (m, n),
+                              cap=cap)

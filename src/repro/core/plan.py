@@ -93,7 +93,7 @@ PLAN_CACHE_CAPACITY = 256
 #: registered kind even on a cold cache, so dashboards can key on a kind
 #: unconditionally; new plan families register here when they add a kind.
 PLAN_KINDS = ("spgemm", "dist_1d", "summa", "chain", "chain_1d", "gram",
-              "batch", "batch_power")
+              "batch", "batch_power", "bcsr")
 
 
 def plan_cache_stats() -> dict:
@@ -210,6 +210,11 @@ class SpGEMMPlan:
     #: it), ``"heuristic"`` (Table-4 recipe), or ``"measured"`` (autotune
     #: DB / microbenchmark, DESIGN.md section 16).
     provenance: str = "explicit"
+    #: BCSR routing only (``algorithm == "bcsr"``): the tile shape the CSR
+    #: operands are re-blocked into and the frozen block-level plan
+    #: (:class:`repro.core.bcsr.BCSRPlan`) the execute runs through.
+    block: Optional[Tuple[int, int]] = None
+    bcsr_plan: object = dataclasses.field(default=None, repr=False)
 
     # -------------------------------------------------------------------
     def check_structure(self, a: CSR, b: CSR, strict: bool = False) -> None:
@@ -266,6 +271,18 @@ class SpGEMMPlan:
                                 k_width=self.k_width, cap_c=self.cap_c,
                                 semiring=sr, mask=self.mask,
                                 complement_mask=self.complement_mask)
+        elif algo == "bcsr":
+            # re-block the CSR operands into the planned tile grid (bcap
+            # pinned by the plan so the conversion is shape-stable under
+            # trace), run the frozen block plan, flatten back to CSR.
+            from .bcsr import BCSRPlan
+            from .formats import BCSR, bcsr_to_csr
+            bp = self.bcsr_plan
+            assert isinstance(bp, BCSRPlan) and self.block is not None, \
+                "bcsr plan is missing its nested block plan"
+            ab = BCSR.from_dense(a.to_dense(), bp.block_a, bcap=bp.bcap_a)  # verify: allow(no-densify)
+            bb = BCSR.from_dense(b.to_dense(), bp.block_b, bcap=bp.bcap_b)  # verify: allow(no-densify)
+            out = bcsr_to_csr(bp.execute(ab, bb), cap=self.cap_c)
         elif algo in ("hash", "hash_vector", "hash_jnp"):
             if general or algo == "hash_jnp":
                 out = spgemm_hash_jnp(a, b, self.cap_c,
@@ -293,7 +310,8 @@ def plan_spgemm(a: CSR, b: CSR, *, algorithm: str = "auto",
                 sorted_output: bool = False, use_case: Optional[str] = None,
                 n_bins: int = 8, cache: bool = True,
                 bucket_caps: bool = False, a_row_nnz=None,
-                autotune: bool = False, autotune_db=None) -> SpGEMMPlan:
+                autotune: bool = False, autotune_db=None,
+                block: Tuple[int, int] = (8, 8)) -> SpGEMMPlan:
     """Run the full inspection once and freeze it as a :class:`SpGEMMPlan`.
 
     With ``cache=True`` (default) the structure-keyed cache is consulted
@@ -325,6 +343,14 @@ def plan_spgemm(a: CSR, b: CSR, *, algorithm: str = "auto",
     stage's recorded ``plan.row_nnz_c`` and the recipe's A-side statistics
     come from that recorded structure instead of the handed-in buffer
     (``recipe.recommend``'s mid-chain hook; used by ``core.chain``).
+
+    ``block`` is the tile shape the ``"bcsr"`` routing re-blocks the CSR
+    operands into (A tiles ``block``, B tiles ``(block[1], block[1])``);
+    it only matters when the resolved algorithm is ``"bcsr"`` (explicit,
+    recipe block-density routing, or a measured autotune lane) -- the plan
+    then nests a frozen :class:`repro.core.bcsr.BCSRPlan` built at
+    planning time, so repeat executes stay numeric-only at both
+    granularities (DESIGN.md section 17).
     """
     sr = resolve_semiring(semiring)
     arn_digest = None
@@ -333,9 +359,10 @@ def plan_spgemm(a: CSR, b: CSR, *, algorithm: str = "auto",
         # the cache key; digest rather than store the array itself.
         arn_digest = hashlib.blake2b(np.asarray(a_row_nnz).tobytes(),
                                      digest_size=8).digest()
+    block = tuple(block)
     key = _plan_key(a, b, mask, sr.name, complement_mask, sorted_output,
                     algorithm, use_case, n_bins) + (bucket_caps, arn_digest,
-                                                    autotune)
+                                                    autotune, block)
     if cache:
         hit = cache_lookup(key)
         if hit is not None:
@@ -416,10 +443,20 @@ def plan_spgemm(a: CSR, b: CSR, *, algorithm: str = "auto",
                              sched.lowest_p2(n + 1)), HK.CHUNK)
         bin_tsize = jnp.clip(bin_tsize.astype(jnp.int32) * table_scale,
                              jnp.int32(HK.CHUNK), jnp.int32(table_size))
+    bcsr_plan = None
     if algorithm == "bcsr":
-        raise NotImplementedError(
-            "the bcsr block path recomputes its own block schedule; "
-            "plan esc/heap/hash instead")
+        if sr.name != "plus_times" or mask is not None:
+            raise NotImplementedError(
+                "the bcsr block path supports plus_times unmasked "
+                "products only; plan esc/heap/hash instead")
+        # nest the block-granularity inspection now (DESIGN.md section 17):
+        # re-block the operand patterns once, plan the block product under
+        # the shared LRU's "bcsr" kind, and freeze both levels together.
+        from .bcsr import plan_bcsr
+        from .formats import csr_to_bcsr
+        ab = csr_to_bcsr(a, block)
+        bb = csr_to_bcsr(b, (block[1], block[1]))
+        bcsr_plan = plan_bcsr(ab, bb, n_bins=n_bins, cache=cache)
 
     plan = SpGEMMPlan(
         key=key, algorithm=algorithm, semiring=sr.name,
@@ -429,7 +466,8 @@ def plan_spgemm(a: CSR, b: CSR, *, algorithm: str = "auto",
         flop=flop, total_flop=total_flop, flop_cap=flop_cap,
         offsets=offsets, bin_tsize=bin_tsize, table_size=table_size,
         row_nnz_c=row_nnz_c, indptr_c=indptr_c, nnz_c=nnz_c, cap_c=cap_c,
-        row_cap=row_cap, k_width=k_width, provenance=provenance)
+        row_cap=row_cap, k_width=k_width, provenance=provenance,
+        block=block if algorithm == "bcsr" else None, bcsr_plan=bcsr_plan)
     if cache:
         cache_store(key, plan)
     return plan

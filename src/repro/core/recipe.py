@@ -72,6 +72,11 @@ class SpGEMMStats:
 
 #: minimum mean tile occupancy for the MXU block path to beat scalar hash
 MXU_MIN_TILE_DENSITY = 0.25
+#: cell-count ceiling for the *automatic* block-density probe
+#: (``probe_blocks="auto"``): the probe densifies A's pattern on the host,
+#: so auto mode only pays it where that is clearly cheap; callers with big
+#: block-structured matrices opt in with ``probe_blocks=True``.
+AUTO_PROBE_CELLS = 1 << 20
 #: mask density below which the hash family wins the masked use case: the
 #: mask-pruned accumulator state fits a small probe table and the sort
 #: epilogue is skipped (outputs of masked graph products are rarely
@@ -267,7 +272,10 @@ def choose_algorithm_from_stats(stats: SpGEMMStats, sorted_output: bool,
                                 semiring: str = "plus_times") -> str:
     """Reproduction of Table 4 (+ section 4.2.4 reasoning).
 
-    use_case: "AxA" | "LxU" | "tall_skinny" | "masked" | "batch".
+    use_case: "AxA" | "LxU" | "tall_skinny" | "masked" | "batch" |
+    "dist" (a distributed planner resolving its SPMD-local algorithm:
+    never offered bcsr, whose block inspection cannot run inside the
+    traced shard program).
 
     Extensions beyond Table 4 (DESIGN.md section 7):
       * unsorted boolean/any_pair products route to the hash family: the
@@ -307,7 +315,8 @@ def choose_algorithm_from_stats(stats: SpGEMMStats, sorted_output: bool,
     # would send the caller straight into a NotImplementedError.
     if (stats.block_density >= MXU_MIN_TILE_DENSITY
             and semiring == "plus_times"
-            and not stats.has_mask and use_case != "masked"):
+            and not stats.has_mask
+            and use_case not in ("masked", "batch", "dist")):
         return "bcsr"
 
     # Boolean semirings with relaxed sortedness: hash family, per C8.
@@ -341,9 +350,29 @@ def choose_algorithm_from_stats(stats: SpGEMMStats, sorted_output: bool,
     return "hash"
 
 
+def _resolve_probe_blocks(probe_blocks, a: CSR, semiring: str, mask,
+                          use_case: str, a_row_nnz=None) -> bool:
+    """Resolve ``probe_blocks="auto"``: probe tile occupancy only when the
+    request is bcsr-eligible (plus_times, unmasked, not a masked / batch /
+    distributed use case, not a chain intermediate), the structure is
+    concrete, and the host dense probe is affordable
+    (:data:`AUTO_PROBE_CELLS`)."""
+    if probe_blocks != "auto":
+        return bool(probe_blocks)
+    import jax
+    if semiring != "plus_times" or mask is not None \
+            or use_case in ("masked", "batch", "dist") \
+            or a_row_nnz is not None:
+        return False
+    if any(isinstance(x, jax.core.Tracer)
+           for x in (a.indptr, a.indices, a.data, a.nnz)):
+        return False
+    return a.n_rows * a.n_cols <= AUTO_PROBE_CELLS
+
+
 def recommend(a: CSR, b: CSR, sorted_output: bool = False,
               use_case: str = "AxA",
-              probe_blocks: bool = False,
+              probe_blocks: bool | str = "auto",
               semiring: str = "plus_times",
               mask: CSR | None = None,
               complement_mask: bool = False,
@@ -351,6 +380,14 @@ def recommend(a: CSR, b: CSR, sorted_output: bool = False,
               mode: str = "heuristic",
               db=None) -> tuple[str, SpGEMMStats]:
     """Measure stats and choose -- returns ``(algorithm, stats)``.
+
+    ``probe_blocks`` controls the tile-occupancy probe behind the bcsr
+    routing row: ``True``/``False`` force it, the default ``"auto"``
+    probes exactly when the request is bcsr-eligible and the probe is
+    cheap (:func:`_resolve_probe_blocks`) -- so ``spgemm(algorithm=
+    "auto")`` and the planner genuinely reach the MXU block path on
+    block-clustered inputs without every scattered product paying for a
+    host densify.
 
     ``mode`` selects the decision procedure:
 
@@ -383,6 +420,8 @@ def recommend(a: CSR, b: CSR, sorted_output: bool = False,
     without this the stage-k algorithm choice would key on defaults.
     """
     assert mode in ("heuristic", "measured"), mode
+    probe_blocks = _resolve_probe_blocks(probe_blocks, a, semiring, mask,
+                                         use_case, a_row_nnz)
     stats = measure_stats(a, b, row_nnz_c=row_nnz_c,
                           probe_blocks=probe_blocks, mask=mask,
                           complement_mask=complement_mask,
@@ -404,7 +443,7 @@ def recommend(a: CSR, b: CSR, sorted_output: bool = False,
 
 def choose_algorithm(a: CSR, b: CSR, sorted_output: bool = False,
                      use_case: str = "AxA",
-                     probe_blocks: bool = False,
+                     probe_blocks: bool | str = "auto",
                      semiring: str = "plus_times",
                      mask: CSR | None = None,
                      complement_mask: bool = False) -> str:

@@ -533,11 +533,11 @@ def spgemm(a: CSR, b: CSR, cap_c: int | None = None,
         from repro.core.formats import csr_to_bcsr, bcsr_to_csr
         from repro.kernels.spgemm_bcsr import ops as bcsr_ops
         block = kw.pop("block", (8, 8))
-        assert a.n_rows % block[0] == 0 and a.n_cols % block[1] == 0 and \
-            b.n_cols % block[1] == 0, \
-            f"bcsr path needs tile-aligned shapes, got {a.shape}x{b.shape}"
+        # ragged shapes land in a ceil-divided grid (partial edge tiles are
+        # zero-padded storage; formats crop back to the logical shape)
         bcap_c = kw.pop("bcap_c",
-                        (a.n_rows // block[0]) * (b.n_cols // block[1]))
+                        (-(-a.n_rows // block[0])) *
+                        (-(-b.n_cols // block[1])))
         ab = csr_to_bcsr(a, (block[0], block[1]))
         bb = csr_to_bcsr(b, (block[1], block[1]))
         cb = bcsr_ops.spgemm_bcsr(ab, bb, bcap_c=bcap_c, **kw)

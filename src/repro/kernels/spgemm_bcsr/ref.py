@@ -4,6 +4,14 @@ Structural note: C's block pattern from the kernel is the *product pattern*
 (a block is present iff some A-block x B-block pair touches it), which can
 include numerically-zero blocks under value cancellation; `to_dense`
 comparison is therefore the canonical check.
+
+Rounding contract (PR 6): the Pallas kernel accumulates each output lane
+with the backend's fused multiply-add inside ``jnp.dot(...,
+preferred_element_type=f32)``, while this twin -- like scipy's BSR
+matmul -- rounds every product before summing.  Block pattern, block row
+pointers, and (set-wise) block columns agree always; values agree bitwise
+whenever the arithmetic is exactly representable (the dyadic fuzz values
+{0.5, 1.0, 1.5, 2.0}), and to 1 ulp per accumulated product otherwise.
 """
 from __future__ import annotations
 
@@ -13,4 +21,5 @@ from repro.core.formats import BCSR
 
 
 def numeric_ref(a: BCSR, b: BCSR) -> jax.Array:
+    """Dense jnp twin of the planned BCSR numeric phase (see module doc)."""
     return a.to_dense() @ b.to_dense()

@@ -28,7 +28,7 @@ def main(argv=None) -> int:
                     help="AST repo-rule lint over the repo surface")
     ap.add_argument("--kinds", default=None,
                     help="comma list of layer-1 plan kinds "
-                         "(spgemm,batch,dist_1d,summa,chain)")
+                         "(spgemm,batch,dist_1d,summa,chain,bcsr)")
     ap.add_argument("--rules", default=None,
                     help="comma list of layer-2 rules (see --list-rules)")
     ap.add_argument("--root", default=".",

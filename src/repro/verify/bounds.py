@@ -155,6 +155,39 @@ def _check_spgemm_vcs(plan) -> List[VC]:
     return vcs
 
 
+def _check_bcsr_vcs(plan) -> List[VC]:
+    """Block-granularity VCs for one frozen :class:`BCSRPlan`: the hash
+    schedule invariants hold verbatim over the *block* grid (block rows
+    are the rows, block columns of B the hash keys), plus the block-shape
+    compatibility and i32 admissibility the planner promised."""
+    vcs: List[VC] = []
+    gm = -(-plan.shape_a[0] // plan.block_a[0])
+    gn_b = -(-plan.shape_b[1] // plan.block_b[1])
+    flop = np.asarray(plan.flop).astype(np.int64)[:gm]
+
+    vcs.append(_vc("block-compatible",
+                   plan.block_a[1] == plan.block_b[0],
+                   f"A tile inner {plan.block_a[1]} == B tile outer "
+                   f"{plan.block_b[0]}"))
+
+    total = int(flop.sum())
+    scaled = total * max(plan.n_bins - 1, 1)
+    vcs.append(_vc("i32-flop", total == int(plan.total_flop)
+                   and scaled <= _I32_MAX,
+                   f"block total_flop={total}, x(n_bins-1)={scaled} "
+                   "<= 2^31-1"))
+    vcs.append(_vc("nnz-consistent",
+                   int(np.asarray(plan.indptr_cb)[-1]) == int(plan.nnzb_c)
+                   and int(plan.nnzb_c) <= int(plan.bcap_c),
+                   f"nnzb_c={plan.nnzb_c} <= bcap_c={plan.bcap_c}"))
+
+    vcs += _check_hash_schedule(
+        plan.offsets, plan.bin_tsize, plan.indptr_cb, n_rows=gm,
+        n_cols=gn_b, cap_c=int(plan.bcap_c),
+        table_size=int(plan.table_size), flop=flop)
+    return vcs
+
+
 def _check_stacked_hash_vcs(hash_sched, *, n_rows: int, n_cols: int,
                             cap_c: int, table_size: int,
                             label: str) -> List[VC]:
@@ -181,12 +214,21 @@ def check_plan_vcs(plan) -> List[VC]:
     """Concrete verification conditions for any plan kind (dispatches on
     the plan's type; container plans recurse into their members)."""
     from repro.core.batch import BatchedPlan
+    from repro.core.bcsr import BCSRPlan
     from repro.core.chain import ChainPlan, GramPlan
     from repro.core.distributed import DistributedPlan, SummaPlan
     from repro.core.plan import SpGEMMPlan
 
+    if isinstance(plan, BCSRPlan):
+        return _check_bcsr_vcs(plan)
+
     if isinstance(plan, SpGEMMPlan):
-        return _check_spgemm_vcs(plan)
+        vcs = _check_spgemm_vcs(plan)
+        if plan.bcsr_plan is not None:
+            # bcsr-routed CSR plan: the nested block plan's VCs gate too
+            vcs += [VC(f"bcsr.{vc.name}", vc.ok, vc.detail)
+                    for vc in _check_bcsr_vcs(plan.bcsr_plan)]
+        return vcs
 
     if isinstance(plan, ChainPlan):
         vcs: List[VC] = []
@@ -284,12 +326,42 @@ def _rebuild(c: CSR, parts) -> CSR:
     return dataclasses.replace(c, indptr=ip, indices=ix, data=dat, nnz=nnz)
 
 
+def _bcsr_args(x) -> Tuple[Any, ...]:
+    return (x.indptr, x.indices, x.blocks, x.nnzb)
+
+
+def _bcsr_seeds(x) -> List[Ival]:
+    """Admitted input intervals for one BCSR operand: indptr/nnzb within
+    the static block capacity, block-column ids within the block grid."""
+    gn = -(-x.shape[1] // x.block[1])
+    return [Ival(0, int(x.bcap)), Ival(0, max(gn - 1, 0)), TOP,
+            Ival(0, int(x.bcap))]
+
+
+def _rebuild_bcsr(x, parts):
+    ip, ix, blk, nnzb = parts
+    return dataclasses.replace(x, indptr=ip, indices=ix, blocks=blk,
+                               nnzb=nnzb)
+
+
 def _dyadic_dense(m: int, n: int, density: float, seed: int) -> np.ndarray:
     rng = np.random.default_rng(seed)
     vals = rng.choice(np.array([0.5, 1.0, 1.5, 2.0], np.float32),
                       size=(m, n))
     return np.where(rng.random((m, n)) < density, vals, 0.0
                     ).astype(np.float32)
+
+
+def _block_dyadic(gm: int, gn: int, bm: int, bn: int, density: float,
+                  seed: int) -> np.ndarray:
+    """Block-clustered dyadic dense fixture: a ``gm x gn`` occupancy grid
+    of fully dense ``bm x bn`` tiles with values from {0.5, 1, 1.5, 2}
+    (exactly representable, so kernel-vs-oracle comparisons are bitwise)."""
+    rng = np.random.default_rng(seed)
+    occ = (rng.random((gm, gn)) < density).astype(np.float32)
+    vals = rng.choice(np.array([0.5, 1.0, 1.5, 2.0], np.float32),
+                      size=(gm * bm, gn * bn))
+    return np.kron(occ, np.ones((bm, bn), np.float32)) * vals
 
 
 def _csr_of(d: np.ndarray, cap: Optional[int] = None) -> CSR:
@@ -383,6 +455,28 @@ def verify_spgemm(plan, a: CSR, b: CSR, name: str = "") -> CaseReport:
     expected = _algo_budget(plan.algorithm, sr_general, plan.sorted_output)
     return _case("spgemm", name or f"spgemm/{plan.algorithm}",
                  plan.algorithm, vcs, analyzer, expected)
+
+
+def verify_bcsr(plan, a, b, name: str = "") -> CaseReport:
+    """Prove one frozen :class:`repro.core.bcsr.BCSRPlan` against its
+    executor jaxpr.  The budget pins the register-tiled story: exactly
+    one numeric Pallas call (a second would be the block symbolic kernel
+    re-inspecting), zero ``sort`` (block rows come out hash-ordered by
+    contract), and exactly one ``dot_general`` -- the MXU tile MAC inside
+    the kernel body, the only dense product a planned block execute may
+    stage."""
+    vcs = check_plan_vcs(plan)
+
+    def trace(ai, aj, ax, an, bi, bj, bx, bn, _plan=plan):
+        return _plan.execute(_rebuild_bcsr(a, (ai, aj, ax, an)),
+                             _rebuild_bcsr(b, (bi, bj, bx, bn)))
+
+    analyzer = _analyze_traced(trace, _bcsr_args(a) + _bcsr_args(b),
+                               _bcsr_seeds(a) + _bcsr_seeds(b),
+                               _flush_discharge(vcs))
+    expected = {"pallas_call": 1, "sort": 0, "dot_general": 1, **_FORBIDDEN}
+    return _case("bcsr", name or "bcsr/planned", "bcsr", vcs, analyzer,
+                 expected)
 
 
 def verify_batch(plan, pairs: Sequence[Tuple[CSR, CSR]],
@@ -507,11 +601,13 @@ def run_layer1(kinds: Optional[Sequence[str]] = None) -> List[CaseReport]:
     one :class:`CaseReport` per case; the CLI turns them into the gating
     JSON document.
     """
-    from repro.core import (plan_batch, plan_chain, plan_spgemm,
+    from repro.core import (plan_batch, plan_bcsr, plan_chain, plan_spgemm,
                             plan_spgemm_1d, plan_spgemm_summa)
     from repro.core.distributed import shard_csr_rows
+    from repro.core.formats import BCSR
 
-    kinds = set(kinds or ("spgemm", "batch", "dist_1d", "summa", "chain"))
+    kinds = set(kinds or ("spgemm", "batch", "dist_1d", "summa", "chain",
+                          "bcsr"))
     cases: List[CaseReport] = []
 
     ad = _dyadic_dense(16, 12, 0.3, 0)
@@ -546,6 +642,17 @@ def run_layer1(kinds: Optional[Sequence[str]] = None) -> List[CaseReport]:
         mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("data",))
         plan = plan_spgemm_summa(sa, sb, n_shards=1, k_panels=2)
         cases.append(verify_summa(plan, mesh, sa, sb))
+
+    if "bcsr" in kinds:
+        ba = BCSR.from_dense(_block_dyadic(4, 3, 4, 4, 0.6, 8), (4, 4))
+        bb2 = BCSR.from_dense(_block_dyadic(3, 4, 4, 8, 0.6, 9), (4, 8))
+        plan = plan_bcsr(ba, bb2)
+        cases.append(verify_bcsr(plan, ba, bb2))
+        # rectangular-tile variant at a different bin count
+        ba2 = BCSR.from_dense(_block_dyadic(5, 4, 2, 4, 0.5, 10), (2, 4))
+        bb3 = BCSR.from_dense(_block_dyadic(4, 5, 4, 2, 0.5, 11), (4, 2))
+        plan = plan_bcsr(ba2, bb3, n_bins=3)
+        cases.append(verify_bcsr(plan, ba2, bb3, name="bcsr/rect-tiles"))
 
     if "chain" in kinds:
         cd = _dyadic_dense(10, 7, 0.4, 7)

@@ -56,6 +56,17 @@ def csr_of(d: np.ndarray, cap: int | None = None) -> CSR:
     return CSR.from_numpy_coo(r, c, d[r, c], d.shape, cap=cap)
 
 
+def block_clustered_dense(gm: int, gn: int, bm: int, bn: int,
+                          density: float, seed: int) -> np.ndarray:
+    """Block-clustered dyadic dense matrix: a ``gm x gn`` occupancy grid
+    of fully dense ``bm x bn`` tiles -- the structure the BCSR recipe
+    routing keys on.  Dyadic values keep every comparison bitwise."""
+    rng = np.random.default_rng(seed)
+    occ = (rng.random((gm, gn)) < density).astype(np.float32)
+    vals = rng.choice(VALS, size=(gm * bm, gn * bn)).astype(np.float32)
+    return np.kron(occ, np.ones((bm, bn), np.float32)) * vals
+
+
 def member_value_fleet(ad: np.ndarray, n_members: int, seed: int) -> np.ndarray:
     """``(n_members, nnz)`` dyadic value stacks on ``ad``'s fixed pattern.
 
@@ -268,6 +279,34 @@ if HAVE_HYPOTHESIS:
         member_vals = member_value_fleet(ad, e, draw(st.integers(0, 2**16)))
         vector = draw(st.booleans())
         return ad, bd, member_vals, context, vector
+
+    #: tile dims for the BCSR strategy (tiny, so examples share programs)
+    BLOCK_DIMS = st.sampled_from((1, 2, 4))
+
+    @st.composite
+    def bcsr_case(draw):
+        """One block product: ``(ad, bd, (bm, bk, bn))``.
+
+        A tiles ``(bm, bk)``, B tiles ``(bk, bn)`` on independent
+        occupancy grids; tiles are optionally thinned below full density
+        (partially-filled blocks), and either operand may be all-zero.
+        The consumer re-blocks with ``csr_to_bcsr`` / ``BCSR.from_dense``
+        and compares the planned block product against the scipy BSR
+        oracle.
+        """
+        bm, bk, bn = draw(BLOCK_DIMS), draw(BLOCK_DIMS), draw(BLOCK_DIMS)
+        gm, gk, gn = (draw(st.integers(1, 4)) for _ in range(3))
+        seed = draw(st.integers(0, 2**16))
+        ad = block_clustered_dense(gm, gk, bm, bk, draw(DENSITIES), seed)
+        bd = block_clustered_dense(gk, gn, bk, bn, draw(DENSITIES),
+                                   seed + 1)
+        if draw(st.booleans()):     # partially-filled A tiles
+            rng = np.random.default_rng(seed + 2)
+            ad = ad * (rng.random(ad.shape) < 0.7)
+        if draw(st.booleans()):     # partially-filled B tiles
+            rng = np.random.default_rng(seed + 3)
+            bd = bd * (rng.random(bd.shape) < 0.7)
+        return ad.astype(np.float32), bd.astype(np.float32), (bm, bk, bn)
 
     @st.composite
     def perturbed_plan_case(draw):

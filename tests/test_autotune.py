@@ -300,3 +300,68 @@ def test_measured_entry_records_roofline_and_candidates(tmp_path):
     assert entry["candidates"] and \
         min(entry["candidates"].values()) == entry["us"]
     assert entry["algorithm"] in ALGOS
+
+
+# ---------------------------------------------------------------------------
+# Bench-trajectory ingestion: feed + sha aging (repro.autotune.feed)
+# ---------------------------------------------------------------------------
+
+def _traj_doc(sha, rows, backend="cpu"):
+    """A minimal benchmarks.run --json trajectory document."""
+    return {"schema": 1, "git_sha": sha, "backend": backend,
+            "rows": rows}
+
+
+def test_feed_bench_rows_ingests_under_bench_namespace(tmp_path):
+    from repro.autotune import bench_row_key, feed_bench_rows
+    db = PerfDB(str(tmp_path / "db.json"))
+    doc = _traj_doc("aaa111", [
+        {"name": "bcsr,diag16x8,block", "us_per_call": 12.5,
+         "derived": "nnzb=16"},
+        {"name": "plan,s5", "us_per_call": 3.0},
+        {"name": "broken-no-timing"},               # skipped: no us
+        {"name": 42, "us_per_call": 1.0},           # skipped: bad name
+        {"name": "bool-timing", "us_per_call": True},  # skipped: bool
+    ])
+    assert feed_bench_rows(doc, db=db) == 2
+    entry = db.load()[bench_row_key("bcsr,diag16x8,block", "cpu")]
+    assert entry["kind"] == "bench" and entry["us"] == 12.5
+    assert entry["git_sha"] == "aaa111" and entry["schema"] == SCHEMA_VERSION
+
+
+def test_feed_ages_stale_shas_but_never_winners(tmp_path):
+    """Re-feeding at a new sha drops the old sha's bench rows (a timing
+    on old code says nothing about the current tree) while winner
+    entries -- which carry no sha semantics -- survive untouched."""
+    from repro.autotune import BENCH_KEY_PREFIX, bench_row_key, \
+        feed_bench_rows
+    db = PerfDB(str(tmp_path / "db.json"))
+    a, b = _pair(seed=21, scale=4)
+    winner_key = _seed_entry(db, a, b)
+
+    feed_bench_rows(_traj_doc("sha_A", [
+        {"name": "bcsr,diag16x8,block", "us_per_call": 10.0},
+        {"name": "plan,s5", "us_per_call": 5.0}]), db=db)
+    feed_bench_rows(_traj_doc("sha_B", [
+        {"name": "bcsr,diag16x8,block", "us_per_call": 11.0}]), db=db)
+
+    entries = db.load()
+    bench_keys = [k for k in entries if k.startswith(BENCH_KEY_PREFIX)]
+    assert bench_keys == [bench_row_key("bcsr,diag16x8,block", "cpu")]
+    assert entries[bench_keys[0]]["git_sha"] == "sha_B"
+    assert winner_key in entries          # winners never aged
+
+
+def test_age_is_prefix_scoped_and_counts(tmp_path):
+    from repro.autotune import bench_row_key
+    db = PerfDB(str(tmp_path / "db.json"))
+    db.update({
+        bench_row_key("r1", "cpu"): {"kind": "bench", "git_sha": "old"},
+        bench_row_key("r2", "cpu"): {"kind": "bench", "git_sha": "new"},
+        bench_row_key("r3", "cpu"): {"kind": "bench"},  # sha-less: kept
+    })
+    assert db.age(current_sha="new") == 1
+    kept = sorted(db.load())
+    assert kept == sorted([bench_row_key("r2", "cpu"),
+                           bench_row_key("r3", "cpu")])
+    assert db.age(current_sha="new") == 0   # idempotent

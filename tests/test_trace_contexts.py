@@ -35,10 +35,14 @@ from repro.core import (clear_plan_cache, plan_batch, plan_cache_stats,  # noqa:
                         plan_spgemm)
 from repro.core.distributed import (plan_spgemm_1d, shard_csr_rows,  # noqa: E402
                                     unshard_rows)
+from repro.core.formats import bcsr_to_csr, csr_to_bcsr  # noqa: E402
 from repro.kernels.spgemm_hash import ops as hash_ops  # noqa: E402
+from repro.kernels.spgemm_bcsr import ops as bcsr_ops  # noqa: E402
+from repro.kernels.spgemm_bcsr import ref as bcsr_ref  # noqa: E402
 from benchmarks.common import counted  # noqa: E402
-from _fuzz import (csr_of as _csr, member_value_fleet,  # noqa: E402
-                   rand_dense as _rand_dense, run_planned_hash_in_context)
+from _fuzz import (block_clustered_dense, csr_of as _csr,  # noqa: E402
+                   member_value_fleet, rand_dense as _rand_dense,
+                   run_planned_hash_in_context)
 from test_distributed import _run  # noqa: E402
 
 sp = pytest.importorskip("scipy.sparse")
@@ -130,6 +134,64 @@ def test_shared_runner_contexts_bitwise(context):
         assert counts["batched_numeric"] > 0, counts
     else:
         assert counts["numeric"] > 0, counts
+
+
+# ---------------------------------------------------------------------------
+# Planned BCSR: eager / jit / vmap, kernel counter-verified, twin bitwise
+# ---------------------------------------------------------------------------
+
+def test_planned_bcsr_eager_jit_vmap_bitwise():
+    """One frozen block plan; eager, jit and vmap executions of the
+    Pallas block kernel (dispatch counter-verified -- never the jnp twin)
+    agree bitwise with each other, with the jnp reference twin, and with
+    the CSR planned hash path after ``bcsr_to_csr``."""
+    from repro.core import plan_bcsr
+
+    ad = block_clustered_dense(4, 3, 4, 4, 0.6, seed=50)
+    bd = block_clustered_dense(3, 4, 4, 4, 0.6, seed=51)
+    ab = csr_to_bcsr(_csr(ad), (4, 4))
+    bb = csr_to_bcsr(_csr(bd), (4, 4))
+    plan = plan_bcsr(ab, bb, cache=False)
+
+    # eager: numeric-only Pallas dispatch, bitwise vs twin + CSR path
+    bcsr_ops.reset_kernel_calls()
+    eager = np.asarray(plan.execute(ab, bb).to_dense())
+    counts = bcsr_ops.kernel_call_counts()
+    assert counts["numeric"] == 1 and counts["symbolic"] == 0, counts
+    assert np.array_equal(eager, np.asarray(bcsr_ref.numeric_ref(ab, bb)))
+    assert np.array_equal(eager, _scipy_dense(ad, bd))
+    a_csr, b_csr = bcsr_to_csr(ab), bcsr_to_csr(bb)
+    csr_plan = plan_spgemm(a_csr, b_csr, algorithm="hash", cache=False)
+    assert np.array_equal(
+        eager, np.asarray(csr_plan.execute(a_csr, b_csr).to_dense()))
+
+    def one(blk):
+        return plan.execute(dataclasses.replace(ab, blocks=blk),
+                            bb).to_dense()
+
+    # jit: same program, same counter, bitwise
+    bcsr_ops.reset_kernel_calls()
+    jitted = np.asarray(jax.jit(one)(ab.blocks))
+    assert bcsr_ops.kernel_call_counts()["numeric"] == 1
+    assert np.array_equal(jitted, eager)
+
+    # vmap over a member block-value fleet on A's frozen block pattern:
+    # the batched-grid kernel (custom_vmap rule), never the twin
+    rng = np.random.default_rng(52)
+    vstack = rng.choice(np.array([0.5, 1.0, 1.5, 2.0], np.float32),
+                        size=(3,) + ab.blocks.shape)
+    vstack *= (np.asarray(ab.blocks) != 0)      # keep the frozen pattern
+    vstack[0] = np.asarray(ab.blocks)
+    bcsr_ops.reset_kernel_calls()
+    vmapped = np.asarray(jax.vmap(one)(jnp.asarray(vstack)))
+    counts = bcsr_ops.kernel_call_counts()
+    assert counts["batched_numeric"] == 1 and counts["symbolic"] == 0, \
+        counts
+    assert np.array_equal(vmapped[0], eager)
+    for e in range(1, len(vstack)):
+        member = dataclasses.replace(ab, blocks=jnp.asarray(vstack[e]))
+        assert np.array_equal(
+            vmapped[e], np.asarray(bcsr_ref.numeric_ref(member, bb))), e
 
 
 # ---------------------------------------------------------------------------
