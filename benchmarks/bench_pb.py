@@ -1,0 +1,198 @@
+"""Propagation-blocking SpGEMM benchmark (DESIGN.md section 18).
+
+Two questions, following Gu et al.'s propagation-blocking argument:
+
+  1. **Single node, low compression factor**: when the expansion barely
+     collapses (flop / nnz(C) near 1), how does the planned PB
+     scatter/merge pair compare against the planned hash path's table
+     probes and the ESC sort?  PB's two streaming passes are the
+     bandwidth-optimal shape in exactly this regime.
+  2. **On the mesh**: the PB-SUMMA bucket exchange moves O(flop) words
+     through one ``all_to_all``; the classic SUMMA merge reduce-scatters
+     a dense ``(m, n)`` accumulator regardless of sparsity.  On a low-CF
+     ER fixture the exchange should win outright.
+
+``--smoke`` is the CI gate for the PB contract:
+
+  * the PB-SUMMA product agrees **bitwise** with the classic SUMMA
+    dense-merge product on integer-valued fixtures (panel-sum
+    reassociation is exact there);
+  * repeat executes of the frozen plans re-inspect nothing, proven by
+    the PB kernel counters and the planner-entry spies;
+  * on the low-CF ER fixture the PB mesh merge beats the dense
+    ``psum_scatter`` merge.
+
+    PYTHONPATH=src python benchmarks/bench_pb.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import sys
+
+# must precede the first jax import; harmless no-op when run via
+# benchmarks.run (jax already up -- the suite then uses however many
+# devices the host exposes)
+if "jax" not in sys.modules and \
+        "xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               " --xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import Mesh  # noqa: E402
+
+sys.path.insert(0, ".")
+
+from repro.core import plan_pb, plan_spgemm  # noqa: E402
+from repro.core.distributed import (plan_spgemm_pb_summa,  # noqa: E402
+                                    plan_spgemm_summa, unshard_rows)
+from repro.core.recipe import PB_MAX_COMPRESSION, measure_stats  # noqa: E402
+from repro.data.rmat import rmat_csr  # noqa: E402
+from repro.kernels.spgemm_pb import ops as pb_ops  # noqa: E402
+
+from benchmarks.common import bench, counted, emit, flops_rate  # noqa: E402
+
+
+def _mesh():
+    return Mesh(np.array(jax.devices()), ("data",))
+
+
+def _int_values(a, seed: int):
+    """Integer-valued twin of a CSR (padding kept zero): fp32 sums over
+    small integers are exact, so merge-order differences cannot show
+    through and cross-path comparisons are bitwise."""
+    rng = np.random.default_rng(seed)
+    vals = rng.integers(1, 5, a.cap).astype(np.float32)
+    lane = np.arange(a.cap)
+    vals = np.where(lane < int(a.nnz), vals, 0.0).astype(np.float32)
+    return dataclasses.replace(a, data=jnp.asarray(vals))
+
+
+def low_cf_er(scale: int, seed: int = 0):
+    """A low-compression ER product: sparse enough that nearly every
+    partial product is its own output entry -- PB's home regime."""
+    a = _int_values(rmat_csr(scale, 1, "ER", seed=seed), seed + 10)
+    b = _int_values(rmat_csr(scale, 1, "ER", seed=seed + 1), seed + 11)
+    return a, b
+
+
+def _single_node(tag, a, b, iters):
+    stats = measure_stats(a, b)
+    flop = float(stats.flop)
+    pbp = plan_pb(a, b, cache=False)
+    hp = plan_spgemm(a, b, algorithm="hash", sorted_output=True,
+                     cache=False)
+    ep = plan_spgemm(a, b, algorithm="esc", sorted_output=True,
+                     cache=False)
+    t_pb = bench(lambda: pbp.execute(a, b).data, iters=iters)
+    emit(f"pb,{tag},pb", t_pb,
+         f"cf={stats.compression_ratio:.2f};{flops_rate(flop, t_pb)}")
+    t_h = bench(lambda: hp.execute(a, b).data, iters=iters)
+    emit(f"pb,{tag},hash", t_h, f"speedup={t_h / t_pb:.2f}x")
+    t_e = bench(lambda: ep.execute(a, b).data, iters=iters)
+    emit(f"pb,{tag},esc", t_e, f"speedup={t_e / t_pb:.2f}x")
+    return pbp, t_pb, t_h, t_e
+
+
+def _mesh_pair(tag, a, b, iters):
+    """Freeze both SUMMA merges, time their numeric phases."""
+    mesh = _mesh()
+    S = len(jax.devices())
+    pplan = plan_spgemm_pb_summa(a, b, S, cache=False)
+    splan = plan_spgemm_summa(a, b, S, algorithm="esc", cache=False)
+    t_pb = bench(lambda: pplan.execute(mesh, a, b).parts.data, iters=iters)
+    emit(f"pb,{tag},pb_summa", t_pb,
+         f"nnz_c={pplan.nnz_c};xcap={pplan.xcap}")
+    t_rs = bench(lambda: splan.execute(mesh, a, b).parts.data, iters=iters)
+    emit(f"pb,{tag},summa_psum", t_rs, f"speedup={t_rs / t_pb:.2f}x")
+    return pplan, splan, mesh, t_pb, t_rs
+
+
+def run(quick: bool = True):
+    """benchmarks.run suite entry."""
+    scales = (6, 7) if quick else (6, 7, 8, 9)
+    for scale in scales:
+        a, b = low_cf_er(scale, seed=scale)
+        _single_node(f"er{1 << scale}", a, b, iters=2 if quick else 3)
+    if len(jax.devices()) > 1:
+        a, b = low_cf_er(8, seed=3)
+        _mesh_pair("er256_mesh", a, b, iters=2 if quick else 3)
+
+
+def smoke():
+    """CI gate for the propagation-blocking contract (module docstring)."""
+    a, b = low_cf_er(8, seed=3)
+    stats = measure_stats(a, b)
+    assert stats.compression_ratio <= PB_MAX_COMPRESSION, \
+        f"fixture drifted out of PB's regime: cf={stats.compression_ratio}"
+
+    # (1) single node: planned PB == planned hash (sorted), bitwise
+    pbp, t_pb1, t_h, _ = _single_node("er256", a, b, iters=3)
+    hp = plan_spgemm(a, b, algorithm="hash", sorted_output=True,
+                     cache=False)
+    c_pb, c_h = pbp.execute(a, b), hp.execute(a, b)
+    nnz = int(c_h.nnz)
+    assert int(c_pb.nnz) == nnz
+    assert np.array_equal(np.asarray(c_pb.indptr), np.asarray(c_h.indptr))
+    assert np.array_equal(np.asarray(c_pb.indices)[:nnz],
+                          np.asarray(c_h.indices)[:nnz])
+    assert np.array_equal(np.asarray(c_pb.data)[:nnz],
+                          np.asarray(c_h.data)[:nnz])
+
+    # (2) mesh: PB exchange bitwise vs the dense psum_scatter merge
+    pplan, splan, mesh, t_pb, t_rs = _mesh_pair("er256_mesh", a, b,
+                                                iters=5)
+    c_x = unshard_rows(pplan.execute(mesh, a, b))
+    c_d = unshard_rows(splan.execute(mesh, a, b))
+    assert np.array_equal(np.asarray(c_x.to_dense()),
+                          np.asarray(c_d.to_dense())), \
+        "PB exchange disagrees with the dense reduce-scatter merge"
+
+    # (3) repeat executes re-inspect nothing (kernel counters + planner
+    # entry spies around the executes)
+    counter: dict = {}
+    restore = [counted("repro.core.pb", "plan_pb", counter),
+               counted("repro.core.distributed", "plan_spgemm_pb_summa",
+                       counter),
+               counted("repro.core.distributed", "_shard_summa", counter)]
+    try:
+        pb_ops.reset_kernel_calls()
+        for _ in range(3):
+            pplan.execute(mesh, a, b).parts.data.block_until_ready()
+            pbp.execute(a, b).data.block_until_ready()
+        calls = pb_ops.kernel_call_counts()
+        assert calls["inspect"] == 0, f"repeat execute re-inspected: {calls}"
+        assert not counter, f"planner re-entered on execute: {counter}"
+    finally:
+        for r in restore:
+            r()
+
+    # (4) the exchange beats the dense merge in PB's home regime
+    assert t_pb < t_rs, \
+        f"PB exchange ({t_pb*1e6:.0f}us) lost to the dense psum_scatter " \
+        f"merge ({t_rs*1e6:.0f}us) on the low-CF ER fixture"
+    print(f"pb smoke: pb_summa={t_pb*1e6:.0f}us "
+          f"psum_scatter={t_rs*1e6:.0f}us ratio={t_rs / t_pb:.2f}x",
+          flush=True)
+    print("bench_pb smoke: OK", flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="propagation-blocking acceptance assertions "
+                         "(CI gate)")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+        return
+    run(quick=not args.full)
+
+
+if __name__ == "__main__":
+    main()

@@ -31,6 +31,7 @@ from . import bench_batch as batch_bench
 from . import bench_verify as verify_bench
 from . import bench_autotune as autotune_bench
 from . import bench_bcsr as bcsr_bench
+from . import bench_pb as pb_bench
 
 
 SUITES = [
@@ -55,6 +56,7 @@ SUITES = [
     ("verify", lambda q: verify_bench.run(q)),
     ("autotune", lambda q: autotune_bench.run(q)),
     ("bcsr", lambda q: bcsr_bench.run(q)),
+    ("pb", lambda q: pb_bench.run(q)),
 ]
 
 

@@ -164,6 +164,17 @@ def _candidates(a, b, semiring: str, mask) -> list:
     if general:
         lanes.append(("hash_jnp", "hash_jnp", 1))
         return lanes
+    # Propagation-blocking lane (DESIGN.md section 18): only raced where
+    # the recipe's compression gate says the expansion barely collapses
+    # (low flop / nnz(C)) -- the regime PB's two streaming passes can
+    # beat the hash table's probes; elsewhere the lane obviously loses
+    # and would just burn microbenchmark time.
+    try:
+        from repro.core.recipe import PB_MAX_COMPRESSION, measure_stats
+        if measure_stats(a, b).compression_ratio <= PB_MAX_COMPRESSION:
+            lanes.append(("pb", "pb", 1))
+    except Exception:
+        pass
     for algo in ("hash", "hash_vector"):
         for scale in TABLE_SCALES:
             label = algo if scale == 1 else f"{algo}@t{scale}"

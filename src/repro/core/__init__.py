@@ -15,10 +15,12 @@ from .recipe import (SpGEMMStats, measure_stats, model_costs, recommend,
 from .plan import (SpGEMMPlan, plan_spgemm, structure_key, plan_cache_stats,
                    clear_plan_cache, PLAN_KINDS)
 from .bcsr import BCSRPlan, plan_bcsr, bcsr_structure_key
+from .pb import PBPlan, plan_pb
 from .distributed import (ShardedCSR, shard_csr_rows, reshard_rows,
                           unshard_rows, DistributedPlan, plan_spgemm_1d,
                           spgemm_1d, spmm_1d, SummaPlan, plan_spgemm_summa,
                           spgemm_summa, summa_panel_bounds, shard_batch,
+                          PBSummaPlan, plan_spgemm_pb_summa, spgemm_pb_summa,
                           multi_source_bfs as multi_source_bfs_1d)
 from .chain import (ChainPlan, plan_chain, plan_galerkin, galerkin,
                     plan_power, GramPlan, plan_gram, gram,
@@ -40,9 +42,11 @@ __all__ = [
     "SpGEMMPlan", "plan_spgemm", "structure_key", "plan_cache_stats",
     "clear_plan_cache", "PLAN_KINDS",
     "BCSRPlan", "plan_bcsr", "bcsr_structure_key",
+    "PBPlan", "plan_pb",
     "ShardedCSR", "shard_csr_rows", "reshard_rows", "unshard_rows",
     "DistributedPlan", "plan_spgemm_1d", "spgemm_1d", "spmm_1d",
     "SummaPlan", "plan_spgemm_summa", "spgemm_summa", "summa_panel_bounds",
+    "PBSummaPlan", "plan_spgemm_pb_summa", "spgemm_pb_summa",
     "shard_batch", "multi_source_bfs_1d",
     "ChainPlan", "plan_chain", "plan_galerkin", "galerkin", "plan_power",
     "GramPlan", "plan_gram", "gram", "DistributedChainPlan", "plan_chain_1d",

@@ -169,10 +169,17 @@ def reshard_rows(a: CSR, like: ShardedCSR) -> ShardedCSR:
     return shard_csr_rows(a, like.n_shards, row_starts=like.row_starts)
 
 
-def unshard_rows(c_sh: ShardedCSR) -> CSR:
+def unshard_rows(c_sh: ShardedCSR, cap: int | None = None) -> CSR:
     """Assemble a row-sharded result back into one global CSR (host-side,
     sparse concatenation -- within-row entry order, hence sortedness, is
-    preserved)."""
+    preserved).
+
+    ``cap`` pins the assembled capacity; pass the original operand's
+    ``cap`` to make a shard -> unshard round trip bitwise (same structure
+    key, so plan reuse matches the single-node path).  The default keeps
+    the sharded operand's slack (``n_shards * cap_per``) rather than
+    silently shrinking to ``nnz``, which made every round trip a new
+    structure."""
     parts, starts = c_sh.parts, c_sh.row_starts
     ip = np.asarray(parts.indptr)
     ind = np.asarray(parts.indices)
@@ -188,7 +195,9 @@ def unshard_rows(c_sh: ShardedCSR) -> CSR:
     idx = np.concatenate(idx)
     vals = np.concatenate(vals)
     nnz = int(idx.size)
-    cap = max(nnz, 1)
+    if cap is None:
+        cap = max(c_sh.n_shards * c_sh.cap_per, 1)
+    assert cap >= nnz, (cap, nnz)
     indices = np.zeros(cap, np.int32)
     data = np.zeros(cap, dat.dtype)
     indices[:nnz] = idx
@@ -218,7 +227,7 @@ def _local_spgemm(a_loc: CSR, b_loc: CSR, mask_loc: Optional[CSR], *,
                   sorted_output: bool, cap_c: int,
                   flop_cap: Optional[int], row_cap: Optional[int],
                   k_width: Optional[int], table_size: int = 0,
-                  hash_sched=None) -> CSR:
+                  hash_sched=None, pb_sched=None) -> CSR:
     """One shard's product, dispatched through the single-node front door.
 
     ``hash_sched=(offsets, bin_tsize, indptr_c)`` is this shard's frozen
@@ -226,10 +235,25 @@ def _local_spgemm(a_loc: CSR, b_loc: CSR, mask_loc: Optional[CSR], *,
     the hash family runs the numeric-only Pallas kernel.  Without it a
     hash request inside a trace would need eager inspection, so the
     planless path keeps the documented ``hash_jnp`` substitution.
+
+    ``pb_sched=(src_a, src_b, seg, bucket_nnz, indptr_c, cols_c)`` is the
+    shard's frozen propagation-blocking geometry (DESIGN.md section 18);
+    with it the PB scatter/merge Pallas pair runs numeric-only.  A
+    planless ``pb`` request substitutes ``esc`` -- the same sorted-output
+    contract without needing eager inspection inside the trace.
     """
     algo = _LOCAL_ALGO.get(algorithm, algorithm)
     if algo in ("hash", "hash_vector") and hash_sched is None:
         algo = "hash_jnp"
+    if algo == "pb":
+        if pb_sched is None:
+            algo = "esc"
+        else:
+            from repro.kernels.spgemm_pb import ops as pb_ops
+            src_a, src_b, seg, bucket_nnz, indptr_c, cols_c = pb_sched
+            return pb_ops.spgemm_pb(
+                a_loc, b_loc, cap_c, src_a=src_a, src_b=src_b, seg=seg,
+                bucket_nnz=bucket_nnz, indptr_c=indptr_c, cols_c=cols_c)
     kw = {}
     if algo in ("esc", "hash_jnp") and flop_cap is not None:
         kw["flop_cap"] = flop_cap
@@ -248,24 +272,32 @@ def _local_spgemm(a_loc: CSR, b_loc: CSR, mask_loc: Optional[CSR], *,
 
 
 def _build_1d_fn(mesh: Mesh, axis: str, masked: bool, statics: dict,
-                 with_sched: bool = False):
+                 with_sched: bool = False, with_pb: bool = False):
     """shard_map'd SPMD body for the 1D row-partitioned product.
 
     With ``with_sched`` the last three operands are the plan's stacked
     hash schedules, row-sharded like A (``P(axis)``): each shard slices
     off its own ``(offsets, bin_tsize, indptr_c)`` and the local product
-    runs the Pallas hash kernel on them.
+    runs the Pallas hash kernel on them.  With ``with_pb`` (mutually
+    exclusive) the last *six* operands are the stacked propagation-
+    blocking geometry ``(src_a, src_b, seg, bucket_nnz, indptr_c,
+    cols_c)`` and the local product runs the PB scatter/merge pair.
     """
+    assert not (with_sched and with_pb)
+
     def local(a_parts, b_rep, *rest):
         a_loc = jax.tree.map(lambda x: x[0], a_parts)
         m_loc = (jax.tree.map(lambda x: x[0], rest[0])
                  if masked else None)
         hs = tuple(r[0] for r in rest[-3:]) if with_sched else None
-        c = _local_spgemm(a_loc, b_rep, m_loc, hash_sched=hs, **statics)
+        ps = tuple(r[0] for r in rest[-6:]) if with_pb else None
+        c = _local_spgemm(a_loc, b_rep, m_loc, hash_sched=hs, pb_sched=ps,
+                          **statics)
         return jax.tree.map(lambda x: x[None], c)
 
     in_specs = (P(axis), P()) + ((P(axis),) if masked else ()) + \
-        ((P(axis), P(axis), P(axis)) if with_sched else ())
+        ((P(axis), P(axis), P(axis)) if with_sched else ()) + \
+        ((P(axis),) * 6 if with_pb else ())
     return shard_map(local, mesh=mesh, in_specs=in_specs,
                      out_specs=P(axis), check_rep=False)
 
@@ -312,6 +344,15 @@ class DistributedPlan:
     #: resolved to the hash family on a plain plus_times product.
     hash_sched: Optional[Tuple[jax.Array, jax.Array, jax.Array]] = \
         dataclasses.field(default=None, repr=False)
+    #: stacked per-shard propagation-blocking geometry ``(src_a
+    #: (S, nb, bcap), src_b (S, nb, bcap), seg (S, nb, bcap), bucket_nnz
+    #: (S, nb), indptr_c (S, rows_cap+1), cols_c (S, cap_c))``, threaded
+    #: through shard_map with ``P(axis)`` specs; ``None`` unless the plan
+    #: resolved to ``"pb"`` on a plus_times product.  Shards are padded
+    #: to uniform bucket count / capacities (pad lanes carry
+    #: ``bucket_nnz``-masked zeros, so they are never read).
+    pb_sched: Optional[Tuple[jax.Array, ...]] = \
+        dataclasses.field(default=None, repr=False)
 
     def check_structure(self, a_sh: ShardedCSR, b: CSR) -> None:
         assert a_sh.row_starts == self.row_starts, \
@@ -340,7 +381,8 @@ class DistributedPlan:
             self, (mesh, axis, statics["sorted_output"]),
             lambda: _build_1d_fn(mesh, axis, self.mask_sh is not None,
                                  statics,
-                                 with_sched=self.hash_sched is not None))
+                                 with_sched=self.hash_sched is not None,
+                                 with_pb=self.pb_sched is not None))
 
     def execute(self, mesh: Mesh, a_sh: ShardedCSR, b: CSR,
                 axis: str = "data",
@@ -358,6 +400,8 @@ class DistributedPlan:
             args = args + (self.mask_sh.parts,)
         if self.hash_sched is not None:
             args = args + self.hash_sched
+        if self.pb_sched is not None:
+            args = args + self.pb_sched
         out = self._executor(mesh, axis, sorted_output)(*args)
         return ShardedCSR(out, self.row_starts, self.shape_a[0])
 
@@ -385,8 +429,11 @@ class DistributedPlan:
                 else None
             hs = None if self.hash_sched is None else \
                 tuple(x[s] for x in self.hash_sched)
+            ps = None if self.pb_sched is None else \
+                tuple(x[s] for x in self.pb_sched)
             outs.append(_local_spgemm(a_sh.local(s), b, m_loc,
-                                      hash_sched=hs, **statics))
+                                      hash_sched=hs, pb_sched=ps,
+                                      **statics))
         parts = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
         return ShardedCSR(parts, self.row_starts, self.shape_a[0])
 
@@ -491,18 +538,55 @@ def plan_spgemm_1d(a_sh: ShardedCSR, b: CSR, *, algorithm: str = "auto",
                       jnp.stack([p.bin_tsize for p in plans]),
                       jnp.stack([p.indptr_c for p in plans]))
 
+    # Freeze the per-shard propagation-blocking geometry the same way
+    # (DESIGN.md section 18).  PB's bucket layout is per-shard (each
+    # shard's flop total picks its own bucket width), so the shards are
+    # first re-planned with a forced common bucket count -- every shard
+    # sees the same ``n_cols``, so a common count yields one common p2
+    # width -- then padded to the max bucket capacity / output capacity.
+    # Pad lanes sit beyond ``bucket_nnz`` and are never read by either
+    # the Pallas pair or the jnp twin.  Mask pruning happened at plan
+    # time (structural), so the masked product still runs the mask-free
+    # kernels; general semirings keep ``pb_sched=None`` and the SPMD body
+    # substitutes esc.
+    cap_c_u = _pad8(max(p.cap_c for p in plans))
+    pb_sched = None
+    if algo == "pb" and sr.name == "plus_times":
+        from .pb import plan_pb
+        nb = max(p.pb_plan.n_buckets for p in plans)
+        pbs = [plan_pb(a_locals[s], b, semiring=sr.name,
+                       mask=mask_locals[s] if mask_locals else None,
+                       complement_mask=complement_mask, n_buckets=nb,
+                       cache=cache) for s in range(S)]
+        assert all(q.n_buckets == pbs[0].n_buckets for q in pbs)
+        bcap = max(q.bucket_cap for q in pbs)
+
+        def lanes(x, cap):   # pad trailing lane axis to the shard max
+            x = np.asarray(x)
+            return np.pad(x, [(0, 0)] * (x.ndim - 1) +
+                          [(0, cap - x.shape[-1])])
+
+        pb_sched = (
+            jnp.stack([jnp.asarray(lanes(q.src_a, bcap)) for q in pbs]),
+            jnp.stack([jnp.asarray(lanes(q.src_b, bcap)) for q in pbs]),
+            jnp.stack([jnp.asarray(lanes(q.seg, bcap)) for q in pbs]),
+            jnp.stack([q.bucket_nnz for q in pbs]),
+            jnp.stack([q.indptr_c for q in pbs]),
+            jnp.stack([jnp.asarray(lanes(q.cols_c, cap_c_u))
+                       for q in pbs]))
+
     plan = DistributedPlan(
         key=key, row_starts=a_sh.row_starts, algorithm=algo,
         semiring=sr.name, complement_mask=complement_mask,
         sorted_output=sorted_output, mask_sh=mask_sh, shape_a=a_sh.shape,
         shape_b=b.shape, cap_a=a_sh.cap_per, cap_b=b.cap,
         nnz_b=int(b.nnz), plans=tuple(plans),
-        cap_c=_pad8(max(p.cap_c for p in plans)),
+        cap_c=cap_c_u,
         flop_cap=max(max(p.flop_cap for p in plans), 1),
         row_cap=max(p.row_cap for p in plans),
         k_width=max(p.k_width for p in plans),
         nnz_c=sum(p.nnz_c for p in plans),
-        table_size=table_size, hash_sched=hash_sched)
+        table_size=table_size, hash_sched=hash_sched, pb_sched=pb_sched)
     if cache:
         cache_store(key, plan)
     return plan
@@ -649,12 +733,15 @@ def multi_source_bfs(mesh: Mesh, a_sh: ShardedCSR, sources: jax.Array,
 def summa_panel_bounds(k_dim: int, n_shards: int,
                        k_panels: int | None = None) -> Tuple[Tuple[int, int],
                                                              ...]:
-    """The K-panel schedule: ``k_panels`` contiguous equal panels of the
+    """The K-panel schedule: ``k_panels`` contiguous panels of the
     contraction dimension, ``k_panels / n_shards`` owned per chip.
 
     ``k_panels`` defaults to one panel per chip and must be a multiple of
-    ``n_shards`` that divides K -- anything else raises (no silently
-    ignored arguments; this is the fix for the previously-dead parameter).
+    ``n_shards`` no larger than K -- anything else raises (no silently
+    ignored arguments).  K need *not* be a multiple of ``k_panels``:
+    panels are ``ceil(K / k_panels)`` wide with a ragged (short, possibly
+    empty) tail, so prime contraction dims schedule fine.  The first
+    panel is always the widest -- executors size buffers off it.
     """
     if k_panels is None:
         k_panels = n_shards
@@ -662,11 +749,12 @@ def summa_panel_bounds(k_dim: int, n_shards: int,
         raise ValueError(
             f"k_panels={k_panels} must be a multiple of the mesh axis size "
             f"{n_shards} (each chip owns k_panels/n_shards panels)")
-    if k_dim % k_panels != 0:
+    if k_panels > k_dim:
         raise ValueError(
-            f"k_panels={k_panels} must divide the contraction dim {k_dim}")
-    step = k_dim // k_panels
-    return tuple((i * step, (i + 1) * step) for i in range(k_panels))
+            f"k_panels={k_panels} exceeds the contraction dim {k_dim}")
+    step = -(-k_dim // k_panels)
+    return tuple((min(i * step, k_dim), min((i + 1) * step, k_dim))
+                 for i in range(k_panels))
 
 
 def _shard_summa(a: CSR, b: CSR, n_shards: int, k_panels: int):
@@ -724,7 +812,8 @@ def _shard_summa(a: CSR, b: CSR, n_shards: int, k_panels: int):
         nnz = np.zeros((n_shards, per), np.int32)
         for pg, (p_ptr, p_idx, p_val, p_take) in enumerate(blocks):
             s, p = pg // per, pg % per
-            ptr[s, p] = p_ptr
+            ptr[s, p, :p_ptr.size] = p_ptr
+            ptr[s, p, p_ptr.size:] = p_ptr[-1]   # ragged panel: pad rows
             idx[s, p, :p_idx.size] = p_idx
             val[s, p, :p_idx.size] = p_val
             take[s, p, :p_idx.size] = p_take
@@ -982,6 +1071,315 @@ def spgemm_summa(mesh: Mesh, a: CSR, b: CSR, axis: str = "data",
         plan = plan_spgemm_summa(a, b, n_shards, k_panels,
                                  algorithm=algorithm, semiring=semiring,
                                  n_bins=n_bins)
+    else:
+        if plan.n_shards != n_shards:
+            raise ValueError(f"plan is for {plan.n_shards} shards, mesh "
+                             f"axis {axis!r} has {n_shards}")
+        if k_panels is not None and plan.k_panels != k_panels:
+            raise ValueError(f"plan holds k_panels={plan.k_panels}, "
+                             f"call requested {k_panels}")
+    return plan.execute(mesh, a, b, axis=axis)
+
+
+# ----------------------------------------------------------------------------
+# Propagation-blocking SUMMA: bucket exchange instead of dense reduce-scatter
+# ----------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class PBSummaPlan:
+    """Frozen propagation-blocking merge for the outer-product schedule.
+
+    The classic SUMMA executor (:class:`SummaPlan`) merges K-panel
+    partials through a *dense* ``(m, n)`` accumulator and a
+    ``psum_scatter`` -- O(m*n) words on the wire regardless of sparsity.
+    This plan replaces that merge with the PB exchange (DESIGN.md
+    section 18, after Gu et al.'s propagation blocking): the inspector
+    expands every panel partial product, assigns it to the chip that
+    owns its output *row* (bucket = destination chip), and freezes per
+    ``(source, dest)`` gather indices into the chips' panel value
+    arrays.  Execute is then numeric-only and three steps per chip:
+
+      1. **scatter** -- multiply local panel values into per-destination
+         bucket buffers (the single-node PB scatter kernel, buckets =
+         chips),
+      2. **exchange** -- one ``all_to_all`` routes each bucket to its
+         row owner: O(flop) words total, the communication-avoiding win
+         on low-compression products where ``flop ~ nnz(C) << m*n``,
+      3. **merge** -- segment-add received products into the frozen
+         local output slots (the single-node PB merge kernel; the
+         sequential bucket grid makes cross-source accumulation into one
+         slot safe).
+
+    Values stay out of the plan: like :class:`SummaPlan`, execute
+    re-gathers only ``data`` through the frozen ``a_take``/``b_take``.
+    plus_times only (the Pallas pair's contract).
+    """
+    key: tuple = dataclasses.field(repr=False)
+    n_shards: int
+    k_panels: int
+    bounds: Tuple[Tuple[int, int], ...]
+    shape_a: Tuple[int, int]
+    shape_b: Tuple[int, int]
+    cap_a: int
+    cap_b: int
+    nnz_a: int
+    nnz_b: int
+    a_struct: CSR = dataclasses.field(repr=False)   # stacked, data zeroed
+    b_struct: CSR = dataclasses.field(repr=False)
+    a_take: jax.Array = dataclasses.field(repr=False)
+    b_take: jax.Array = dataclasses.field(repr=False)
+    #: per-(source, dest) product capacity: the exchange moves
+    #: ``n_shards * xcap`` f32 words per chip
+    xcap: int
+    #: ``[s, d, lane]`` -> flattened ``(per * panel_cap)`` slot in chip
+    #: s's gathered panel values (A resp. B)
+    src_a: jax.Array = dataclasses.field(repr=False)
+    src_b: jax.Array = dataclasses.field(repr=False)
+    pair_nnz: jax.Array = dataclasses.field(repr=False)   # (S, S) [src, dst]
+    #: ``[d, s, lane]`` -> chip d's local output slot for the lane-th
+    #: product received from source s (dest-major: lives on the receiver)
+    seg: jax.Array = dataclasses.field(repr=False)
+    recv_nnz: jax.Array = dataclasses.field(repr=False)   # (S, S) [dst, src]
+    cols_out: jax.Array = dataclasses.field(repr=False)   # (S, out_cap)
+    indptr_out: jax.Array = dataclasses.field(repr=False)  # (S, rows_per+1)
+    out_nnz: jax.Array = dataclasses.field(repr=False)    # (S,)
+    out_cap: int
+    row_starts_out: Tuple[int, ...]
+    nnz_c: int
+    total_flop: int
+    semiring: str = "plus_times"
+    provenance: str = "planned"
+
+    def check_structure(self, a: CSR, b: CSR) -> None:
+        assert a.shape == self.shape_a and b.shape == self.shape_b, \
+            f"plan is for {self.shape_a}x{self.shape_b}, " \
+            f"got {a.shape}x{b.shape}"
+        assert a.cap == self.cap_a and b.cap == self.cap_b, \
+            "operand capacities differ from the planned structure"
+        for op, planned in ((a, self.nnz_a), (b, self.nnz_b)):
+            if not isinstance(op.nnz, jax.core.Tracer):
+                assert int(op.nnz) == planned, \
+                    "operand nnz differs from the planned structure"
+
+    def execute(self, mesh: Mesh, a: CSR, b: CSR,
+                axis: str = "data") -> ShardedCSR:
+        """Numeric phase only: gather values, scatter / exchange / merge."""
+        self.check_structure(a, b)
+        fn = _memoized_executor(self, (mesh, axis),
+                                lambda: _build_pb_summa_fn(self, mesh, axis))
+        out = fn(self.a_struct, self.a_take, a.data,
+                 self.b_struct, self.b_take, b.data,
+                 self.src_a, self.src_b, self.pair_nnz, self.seg,
+                 self.recv_nnz, self.cols_out, self.indptr_out,
+                 self.out_nnz)
+        return ShardedCSR(out, self.row_starts_out, self.shape_a[0])
+
+    __call__ = execute
+
+
+def _build_pb_summa_fn(plan: PBSummaPlan, mesh: Mesh, axis: str):
+    """SPMD body: gather panel values, PB-scatter into per-chip buckets,
+    all_to_all exchange, PB-merge into the frozen local output."""
+    from repro.kernels.spgemm_pb import ops as pb_ops
+    n = plan.shape_b[1]
+    rows_per = plan.shape_a[0] // plan.n_shards
+
+    def flatvals(struct, take, data):
+        s_loc = jax.tree.map(lambda x: x[0], struct)     # (per, ...) local
+        lane = jnp.arange(take.shape[-1], dtype=jnp.int32)
+        live = lane[None, :] < s_loc.nnz[:, None]        # (per, cap)
+        return jnp.where(live, data[take[0]], 0).astype(
+            data.dtype).reshape(-1)                      # (per * cap,)
+
+    def local(a_struct, a_take, a_data, b_struct, b_take, b_data,
+              src_a, src_b, pair_nnz, seg, recv_nnz, cols_out,
+              indptr_out, out_nnz):
+        av = flatvals(a_struct, a_take, a_data)
+        bv = flatvals(b_struct, b_take, b_data)
+        # scatter: bucket g holds this chip's products destined for chip g
+        pp = pb_ops.pb_scatter(av, bv, src_a[0], src_b[0], pair_nnz[0])
+        # exchange: row d goes to chip d; received row s came from chip s
+        pp = jax.lax.all_to_all(pp, axis, split_axis=0, concat_axis=0)
+        data = pb_ops.pb_merge(pp, seg[0], recv_nnz[0], plan.out_cap)
+        lane = jnp.arange(plan.out_cap, dtype=jnp.int32)
+        valid = lane < out_nnz[0]
+        c_loc = CSR(indptr_out[0], jnp.where(valid, cols_out[0], 0),
+                    jnp.where(valid, data, 0).astype(a_data.dtype),
+                    out_nnz[0], (rows_per, n), sorted_cols=True)
+        return jax.tree.map(lambda x: x[None], c_loc)
+
+    in_specs = (P(axis), P(axis), P(), P(axis), P(axis), P()) + \
+        (P(axis),) * 8
+    return shard_map(local, mesh=mesh, in_specs=in_specs,
+                     out_specs=P(axis), check_rep=False)
+
+
+def plan_spgemm_pb_summa(a: CSR, b: CSR, n_shards: int,
+                         k_panels: int | None = None, *,
+                         cache: bool = True) -> PBSummaPlan:
+    """Inspect the PB-merge SUMMA schedule once and freeze it.
+
+    Reuses :func:`_shard_summa`'s panel decomposition (so the frozen
+    operand layout is bitwise the classic SUMMA one), then expands every
+    panel's partial products on the host, derives the exact global output
+    structure, and packs per-``(source, dest)`` bucket gather indices.
+    Cached in the shared LRU under the classic plan's ``("summa", ...)``
+    kind with a ``pb-merge`` marker in the digest.
+    """
+    from .schedule import guard_i32_flop
+    sr = resolve_semiring("plus_times")
+    m = a.n_rows
+    if m % n_shards != 0:
+        raise ValueError(
+            f"the PB exchange tiles C rows equally: n_rows={m} must be "
+            f"divisible by the mesh axis size {n_shards}")
+    bounds = summa_panel_bounds(a.n_cols, n_shards, k_panels)
+    k_panels = len(bounds)
+
+    h = hashlib.blake2b(digest_size=16)
+    h.update(structure_key(a))
+    h.update(structure_key(b))
+    h.update(repr(("pb-merge", n_shards, k_panels, sr.name)).encode())
+    key = ("summa", h.digest())
+    if cache:
+        hit = cache_lookup(key)
+        if hit is not None:
+            return hit
+
+    a_parts, b_parts, _, a_take, b_take = _shard_summa(a, b, n_shards,
+                                                       k_panels)
+    per = k_panels // n_shards
+    cap_pa = a_parts.indices.shape[-1]
+    cap_pb = b_parts.indices.shape[-1]
+    pa = np.asarray(a_parts.indptr, np.int64)    # (S, per, m+1)
+    ia = np.asarray(a_parts.indices)
+    na = np.asarray(a_parts.nnz, np.int64)
+    pbp = np.asarray(b_parts.indptr, np.int64)   # (S, per, step+1)
+    ib = np.asarray(b_parts.indices)
+
+    # Expand every panel's partial products: one (row, col, src-slot-a,
+    # src-slot-b, source-chip) record per scalar multiply.  Slots index
+    # the *flattened* (per * cap) gathered panel value arrays -- exactly
+    # the layout the executor's ``flatvals`` produces.
+    R, C, SA, SB, SRC = [], [], [], [], []
+    for s in range(n_shards):
+        for p in range(per):
+            cnt_a = int(na[s, p])
+            if cnt_a == 0:
+                continue
+            rows = np.repeat(np.arange(m), np.diff(pa[s, p]))[:cnt_a]
+            kloc = ia[s, p, :cnt_a]                 # panel-local column
+            starts = pbp[s, p][kloc]
+            counts = pbp[s, p][kloc + 1] - starts
+            total = int(counts.sum())
+            if total == 0:
+                continue
+            j = np.repeat(np.arange(cnt_a), counts)
+            off = np.arange(total) - np.repeat(
+                np.cumsum(counts) - counts, counts)
+            t = starts[j] + off
+            R.append(rows[j])
+            C.append(ib[s, p][t])
+            SA.append((p * cap_pa + j).astype(np.int64))
+            SB.append((p * cap_pb + t).astype(np.int64))
+            SRC.append(np.full(total, s, np.int64))
+    if R:
+        R = np.concatenate(R); C = np.concatenate(C)
+        SA = np.concatenate(SA); SB = np.concatenate(SB)
+        SRC = np.concatenate(SRC)
+    else:
+        R = C = SA = SB = SRC = np.zeros(0, np.int64)
+    total_flop = int(R.size)
+    guard_i32_flop(total_flop, what="pb-summa expansion")
+
+    # Exact global output structure (sorted rows-major), sliced per dest
+    # chip: rows are contiguous per chip, so a chip's slots are the
+    # global slots minus its first row's offset.
+    rows_per = m // n_shards
+    uo = np.lexsort((C, R))
+    Rs, Cs = R[uo], C[uo]
+    new = np.ones(total_flop, bool)
+    if total_flop:
+        new[1:] = (Rs[1:] != Rs[:-1]) | (Cs[1:] != Cs[:-1])
+    slot_sorted = np.cumsum(new) - 1
+    slot = np.empty(total_flop, np.int64)
+    slot[uo] = slot_sorted
+    nnz_c = int(new.sum()) if total_flop else 0
+    ur, uc = Rs[new] if total_flop else Rs, Cs[new] if total_flop else Cs
+    row_nnz = np.bincount(ur, minlength=m)
+    g_indptr = np.zeros(m + 1, np.int64)
+    np.cumsum(row_nnz, out=g_indptr[1:])
+    per_dest = (g_indptr[np.arange(1, n_shards + 1) * rows_per]
+                - g_indptr[np.arange(n_shards) * rows_per])
+    out_cap = _pad8(max(int(per_dest.max(initial=0)), 1))
+    out_nnz = per_dest.astype(np.int32)
+    cols_out = np.zeros((n_shards, out_cap), np.int32)
+    indptr_out = np.zeros((n_shards, rows_per + 1), np.int32)
+    for d in range(n_shards):
+        lo, hi = int(g_indptr[d * rows_per]), \
+            int(g_indptr[(d + 1) * rows_per])
+        cols_out[d, :hi - lo] = uc[lo:hi]
+        indptr_out[d] = (g_indptr[d * rows_per:(d + 1) * rows_per + 1]
+                         - lo)
+
+    # Pack (source, dest) buckets: bucket = destination chip (the row
+    # owner).  ``seg`` is dest-major -- it rides on the receiver, mapping
+    # each product that arrives from source s into a local output slot.
+    dest = R // rows_per if total_flop else R
+    pair = SRC * n_shards + dest
+    pair_nnz = np.bincount(pair, minlength=n_shards * n_shards) \
+        .reshape(n_shards, n_shards).astype(np.int32)
+    xcap = _pad8(max(int(pair_nnz.max(initial=0)), 1))
+    order = np.lexsort((C, R, pair))
+    pr = pair[order]
+    starts = np.zeros(n_shards * n_shards, np.int64)
+    np.cumsum(pair_nnz.reshape(-1)[:-1], out=starts[1:])
+    lane = np.arange(total_flop) - starts[pr]
+    src_a = np.zeros((n_shards, n_shards, xcap), np.int32)
+    src_b = np.zeros((n_shards, n_shards, xcap), np.int32)
+    seg = np.full((n_shards, n_shards, xcap), out_cap - 1, np.int32)
+    s_of, d_of = pr // n_shards, pr % n_shards
+    src_a[s_of, d_of, lane] = SA[order]
+    src_b[s_of, d_of, lane] = SB[order]
+    seg[d_of, s_of, lane] = (slot[order]
+                             - g_indptr[d_of * rows_per]).astype(np.int32)
+    recv_nnz = pair_nnz.T.copy()
+
+    plan = PBSummaPlan(
+        key=key, n_shards=n_shards, k_panels=k_panels, bounds=bounds,
+        shape_a=a.shape, shape_b=b.shape, cap_a=a.cap, cap_b=b.cap,
+        nnz_a=int(a.nnz), nnz_b=int(b.nnz),
+        a_struct=dataclasses.replace(
+            a_parts, data=jnp.zeros_like(a_parts.data)),
+        b_struct=dataclasses.replace(
+            b_parts, data=jnp.zeros_like(b_parts.data)),
+        a_take=a_take, b_take=b_take, xcap=xcap,
+        src_a=jnp.asarray(src_a), src_b=jnp.asarray(src_b),
+        pair_nnz=jnp.asarray(pair_nnz), seg=jnp.asarray(seg),
+        recv_nnz=jnp.asarray(recv_nnz), cols_out=jnp.asarray(cols_out),
+        indptr_out=jnp.asarray(indptr_out), out_nnz=jnp.asarray(out_nnz),
+        out_cap=out_cap,
+        row_starts_out=tuple(range(0, m + 1, rows_per)),
+        nnz_c=nnz_c, total_flop=total_flop)
+    if cache:
+        cache_store(key, plan)
+    return plan
+
+
+def spgemm_pb_summa(mesh: Mesh, a: CSR, b: CSR, axis: str = "data",
+                    k_panels: int | None = None, *,
+                    plan: PBSummaPlan | None = None) -> ShardedCSR:
+    """Outer-product SUMMA with the propagation-blocking merge.
+
+    Same operand layout and K-panel stream as :func:`spgemm_summa`, but
+    the partial-product merge is the PB bucket exchange (one
+    ``all_to_all`` of O(flop) words) instead of the dense ``(m, n)``
+    reduce-scatter -- the communication-avoiding lane for low-compression
+    products.  plus_times only; C comes back row-sharded.
+    """
+    n_shards = mesh.shape[axis]
+    if plan is None:
+        plan = plan_spgemm_pb_summa(a, b, n_shards, k_panels)
     else:
         if plan.n_shards != n_shards:
             raise ValueError(f"plan is for {plan.n_shards} shards, mesh "

@@ -1,0 +1,267 @@
+"""Inspector-executor planner for propagation-blocking SpGEMM
+(DESIGN.md section 18).
+
+The hash planner (:mod:`repro.core.plan`) freezes Gustavson-style row
+products; this module freezes the *outer-product* formulation instead,
+following Gu/Moreira/Edelsohn/Azad ("Bandwidth-Optimized Parallel
+Algorithms for SpGEMM using Propagation Blocking", PAPERS.md).  The
+inspection expands every partial product A[r,k]*B[k,c] once, buckets it
+by a cache/VMEM-sized *column segment* (``schedule.pb_bucket_layout``),
+and resolves its destination slot in the column-sorted CSR of C.  What
+freezes into a :class:`PBPlan` is pure gather/scatter geometry:
+
+  src_a[g, i], src_b[g, i]  -- operand value slots of product i of bucket g
+  seg[g, i]                 -- its output slot in C (same for duplicates)
+  bucket_nnz[g]             -- live lanes per bucket
+
+so repeat executes run two numeric Pallas grids (scatter then merge,
+:mod:`repro.kernels.spgemm_pb`) with zero re-inspection
+(counter-verified via ``KERNEL_CALLS["inspect"]``).  Because a bucket
+owns a contiguous column range, every duplicate of one output coordinate
+lands in exactly one bucket -- buckets touch disjoint output slots, which
+is the invariant that deletes the global hash table (and, on the mesh,
+the dense psum accumulator).
+
+PB pays one partial-product expansion of size flop; it wins when the
+*compression factor* flop/nnz(C) is low (little duplicate collapse, so a
+hash table mostly misses) -- the routing signal ``recipe.py`` uses.
+
+Masks are pruned *here*, structurally, at plan time: a masked product
+simply never enters a bucket, so the executor stays mask-free and repeat
+executes inherit the pruning for free.
+
+Plans are cached in the shared LRU of :mod:`repro.core.plan` under the
+``"pb"`` kind, keyed by operand structure (never values).  Planning is
+host-side eager (numpy); ``execute`` is trace-friendly under ``jit``,
+``shard_map`` bodies, and -- via the kernels' ``custom_vmap`` rules --
+``vmap`` over value fleets.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import schedule as sched
+from .formats import CSR
+from .plan import cache_lookup, cache_store, structure_key
+from .semiring import resolve_semiring
+
+
+def _pad8(n: int) -> int:
+    """Round a capacity up to a multiple of 8 (sublane-friendly)."""
+    return -(-int(n) // 8) * 8
+
+
+def _expand_products(a: CSR, b: CSR):
+    """Enumerate all partial products of A @ B on the host (numpy).
+
+    Returns ``(jj, tt, r, c)``: for product p, ``jj[p]``/``tt[p]`` are
+    the value slots in A/B and ``r[p]``/``c[p]`` its output coordinate.
+    Same searchsorted expansion as ``spgemm._expand``, but kept in numpy
+    because the results freeze into the plan as static geometry.
+    """
+    m = a.shape[0]
+    ip_a = np.asarray(a.indptr, dtype=np.int64)
+    ip_b = np.asarray(b.indptr, dtype=np.int64)
+    live_a = int(ip_a[-1])
+    rows_a = np.repeat(np.arange(m, dtype=np.int64), np.diff(ip_a))
+    k_of = np.asarray(a.indices, dtype=np.int64)[:live_a]
+    cnt = ip_b[k_of + 1] - ip_b[k_of]
+    off = np.concatenate([[0], np.cumsum(cnt)]).astype(np.int64)
+    total = int(off[-1])
+    sched.guard_i32_flop(total)
+    p = np.arange(total, dtype=np.int64)
+    jj = np.searchsorted(off, p, side="right") - 1
+    tt = ip_b[k_of[jj]] + (p - off[jj])
+    return jj, tt, rows_a[jj], np.asarray(b.indices, dtype=np.int64)[tt]
+
+
+def _mask_keep(mask: CSR, r, c, n: int, complement: bool):
+    """Structural membership of (r, c) in the mask pattern (host-side)."""
+    mip = np.asarray(mask.indptr, dtype=np.int64)
+    mlive = int(mip[-1])
+    mrows = np.repeat(np.arange(mask.shape[0], dtype=np.int64),
+                      np.diff(mip))
+    mkeys = np.sort(mrows * n + np.asarray(mask.indices,
+                                           dtype=np.int64)[:mlive])
+    keys = r * n + c
+    if mkeys.size == 0:
+        member = np.zeros(keys.shape[0], dtype=bool)
+    else:
+        pos = np.minimum(np.searchsorted(mkeys, keys), mkeys.size - 1)
+        member = mkeys[pos] == keys
+    return ~member if complement else member
+
+
+@dataclass(frozen=True)
+class PBPlan:
+    """Frozen propagation-blocking recipe for one (A, B) structure pair.
+
+    Bucket geometry (``bucket_w`` columns per bucket, power of two) plus
+    the fully resolved gather/scatter arrays and C's exact column-sorted
+    structure.  All capacities are Python ints, so structure-identical
+    executes hit the jit dispatch cache.
+    """
+    key: tuple = dataclasses.field(repr=False)
+    shape_a: Tuple[int, int]
+    shape_b: Tuple[int, int]
+    cap_a: int
+    cap_b: int
+    nnz_a: int
+    nnz_b: int
+    semiring: str
+    has_mask: bool
+    complement_mask: bool
+    # --- bucket geometry ------------------------------------------------
+    n_buckets: int
+    bucket_w: int            # columns per bucket (power of two)
+    bucket_cap: int          # padded max products per bucket
+    total_flop: int          # products after structural mask pruning
+    # --- frozen gather/scatter arrays -----------------------------------
+    src_a: jax.Array = dataclasses.field(repr=False)   # (n_buckets, cap)
+    src_b: jax.Array = dataclasses.field(repr=False)   # (n_buckets, cap)
+    seg: jax.Array = dataclasses.field(repr=False)     # (n_buckets, cap)
+    bucket_nnz: jax.Array = dataclasses.field(repr=False)  # (n_buckets,)
+    # --- exact output structure (column-sorted) -------------------------
+    cols_c: jax.Array = dataclasses.field(repr=False)  # (cap_c,)
+    indptr_c: jax.Array = dataclasses.field(repr=False)
+    row_nnz_c: jax.Array = dataclasses.field(repr=False)
+    nnz_c: int = 0
+    cap_c: int = 1
+    provenance: str = "planned"
+
+    # -------------------------------------------------------------------
+    def check_structure(self, a: CSR, b: CSR) -> None:
+        """Cheap structure guard (shapes/caps/nnz).
+
+        Executing a different structure would gather from wrong slots;
+        nnz is guarded only when concrete so a jit over re-valued
+        operands does not trip a concretization error.
+        """
+        assert a.shape == self.shape_a and b.shape == self.shape_b, \
+            f"plan is for {self.shape_a}x{self.shape_b}, " \
+            f"got {a.shape}x{b.shape}"
+        assert a.cap == self.cap_a and b.cap == self.cap_b, \
+            "operand capacities differ from the planned structure"
+        for op, planned in ((a, self.nnz_a), (b, self.nnz_b)):
+            if not isinstance(op.nnz, jax.core.Tracer):
+                assert int(op.nnz) == planned, \
+                    "operand nnz differs from the planned structure " \
+                    "(replan or clear_plan_cache)"
+
+    def execute(self, a: CSR, b: CSR) -> CSR:
+        """Numeric phases only: bucket scatter + per-bucket merge over
+        this plan's frozen geometry -- zero re-inspection (counter-
+        verified by ``KERNEL_CALLS["inspect"]``).  C is column-sorted.
+
+        plus_times runs the Pallas pair; general semirings thread the
+        identical frozen gathers through the jnp twin (``ref.py``).
+        """
+        self.check_structure(a, b)
+        from repro.kernels.spgemm_pb import ops as pb_ops
+        if self.semiring == "plus_times":
+            return pb_ops.spgemm_pb(
+                a, b, self.cap_c, src_a=self.src_a, src_b=self.src_b,
+                seg=self.seg, bucket_nnz=self.bucket_nnz,
+                indptr_c=self.indptr_c, cols_c=self.cols_c)
+        from repro.kernels.spgemm_pb.ref import pb_numeric_ref
+        data = pb_numeric_ref(
+            a.data, b.data, self.src_a, self.src_b, self.seg,
+            self.bucket_nnz, self.cap_c, self.indptr_c[-1],
+            semiring=self.semiring).astype(a.data.dtype)
+        m, n = self.shape_a[0], self.shape_b[1]
+        return CSR(self.indptr_c, self.cols_c, data, self.indptr_c[-1],
+                   (m, n), sorted_cols=True)
+
+    __call__ = execute
+
+
+def plan_pb(a: CSR, b: CSR, *, semiring: str = "plus_times",
+            mask: Optional[CSR] = None, complement_mask: bool = False,
+            n_buckets: Optional[int] = None,
+            budget: int = sched.PB_BUCKET_BUDGET,
+            cache: bool = True) -> PBPlan:
+    """Run the propagation-blocking inspection once, freeze a :class:`PBPlan`.
+
+    With ``cache=True`` (default) the shared plan LRU is consulted first
+    under the ``"pb"`` kind: a structure-identical repeat request returns
+    the existing plan and skips the expansion entirely.
+    """
+    assert a.shape[1] == b.shape[0], \
+        f"inner dim mismatch: {a.shape} @ {b.shape}"
+    sr = resolve_semiring(semiring)
+    if mask is not None:
+        assert mask.shape == (a.shape[0], b.shape[1]), \
+            f"mask shape {mask.shape} != output {(a.shape[0], b.shape[1])}"
+    key = ("pb", structure_key(a), structure_key(b),
+           structure_key(mask) if mask is not None else None,
+           sr.name, complement_mask, n_buckets, budget)
+    if cache:
+        hit = cache_lookup(key)
+        if hit is not None:
+            return hit
+
+    from repro.kernels.spgemm_pb import ops as pb_ops
+    pb_ops.KERNEL_CALLS["inspect"] += 1
+    m, n = a.shape[0], b.shape[1]
+
+    jj, tt, r, c = _expand_products(a, b)
+    if mask is not None:
+        keep = _mask_keep(mask, r, c, n, complement_mask)
+        jj, tt, r, c = jj[keep], tt[keep], r[keep], c[keep]
+    total = int(r.shape[0])
+
+    bucket_w, nb = sched.pb_bucket_layout(n, n_buckets, total_flop=total,
+                                          budget=budget)
+
+    # Exact output structure: sort products by (row, col), collapse
+    # duplicates; every product learns its output slot in sorted C.
+    uo = np.lexsort((c, r))
+    rs, cs = r[uo], c[uo]
+    new = np.ones(total, dtype=bool)
+    if total:
+        new[1:] = (rs[1:] != rs[:-1]) | (cs[1:] != cs[:-1])
+    slot = np.zeros(total, dtype=np.int64)
+    slot[uo] = np.cumsum(new) - 1
+    nnz_c = int(new.sum())
+    cap_c = max(nnz_c, 1)
+    row_nnz_c = np.bincount(rs[new], minlength=m).astype(np.int32)
+    indptr_c = np.concatenate([[0], np.cumsum(row_nnz_c)]).astype(np.int32)
+    cols_full = np.zeros(cap_c, dtype=np.int32)
+    cols_full[:nnz_c] = cs[new]
+
+    # Bucket packing: bucket-major, (row, col) within a bucket -- the
+    # accumulation order both the kernel loop and the jnp twin walk.
+    bucket = c // bucket_w
+    order = np.lexsort((c, r, bucket))  # bucket-major, then (r, c)
+    bseq = bucket[order]
+    bucket_nnz = np.bincount(bseq, minlength=nb).astype(np.int32)
+    bucket_cap = _pad8(max(int(bucket_nnz.max()), 1)) if total else 8
+    starts = np.concatenate([[0], np.cumsum(bucket_nnz)]).astype(np.int64)
+    lane = np.arange(total, dtype=np.int64) - starts[bseq]
+    src_a = np.zeros((nb, bucket_cap), dtype=np.int32)
+    src_b = np.zeros((nb, bucket_cap), dtype=np.int32)
+    seg = np.full((nb, bucket_cap), cap_c, dtype=np.int32)
+    if total:
+        src_a[bseq, lane] = jj[order]
+        src_b[bseq, lane] = tt[order]
+        seg[bseq, lane] = slot[order]
+
+    plan = PBPlan(
+        key=key, shape_a=a.shape, shape_b=b.shape, cap_a=a.cap,
+        cap_b=b.cap, nnz_a=int(a.nnz), nnz_b=int(b.nnz), semiring=sr.name,
+        has_mask=mask is not None, complement_mask=complement_mask,
+        n_buckets=nb, bucket_w=bucket_w, bucket_cap=bucket_cap,
+        total_flop=total, src_a=jnp.asarray(src_a),
+        src_b=jnp.asarray(src_b), seg=jnp.asarray(seg),
+        bucket_nnz=jnp.asarray(bucket_nnz), cols_c=jnp.asarray(cols_full),
+        indptr_c=jnp.asarray(indptr_c), row_nnz_c=jnp.asarray(row_nnz_c),
+        nnz_c=nnz_c, cap_c=cap_c)
+    if cache:
+        cache_store(key, plan)
+    return plan

@@ -93,7 +93,7 @@ PLAN_CACHE_CAPACITY = 256
 #: registered kind even on a cold cache, so dashboards can key on a kind
 #: unconditionally; new plan families register here when they add a kind.
 PLAN_KINDS = ("spgemm", "dist_1d", "summa", "chain", "chain_1d", "gram",
-              "batch", "batch_power", "bcsr")
+              "batch", "batch_power", "bcsr", "pb")
 
 
 def plan_cache_stats() -> dict:
@@ -215,6 +215,11 @@ class SpGEMMPlan:
     #: (:class:`repro.core.bcsr.BCSRPlan`) the execute runs through.
     block: Optional[Tuple[int, int]] = None
     bcsr_plan: object = dataclasses.field(default=None, repr=False)
+    #: PB routing only (``algorithm == "pb"``): the frozen propagation-
+    #: blocking plan (:class:`repro.core.pb.PBPlan`) the execute runs
+    #: through -- bucket geometry and output structure both frozen, so
+    #: repeat executes stay numeric-only (DESIGN.md section 18).
+    pb_plan: object = dataclasses.field(default=None, repr=False)
 
     # -------------------------------------------------------------------
     def check_structure(self, a: CSR, b: CSR, strict: bool = False) -> None:
@@ -283,6 +288,20 @@ class SpGEMMPlan:
             ab = BCSR.from_dense(a.to_dense(), bp.block_a, bcap=bp.bcap_a)  # verify: allow(no-densify)
             bb = BCSR.from_dense(b.to_dense(), bp.block_b, bcap=bp.bcap_b)  # verify: allow(no-densify)
             out = bcsr_to_csr(bp.execute(ab, bb), cap=self.cap_c)
+        elif algo == "pb":
+            # run the nested propagation-blocking plan (scatter + merge
+            # over frozen bucket geometry); pad the exact-capacity output
+            # up to this plan's cap_c when bucket_caps rounded it.
+            from .pb import PBPlan
+            pbp = self.pb_plan
+            assert isinstance(pbp, PBPlan), \
+                "pb plan is missing its nested bucket plan"
+            out = pbp.execute(a, b)
+            if out.cap < self.cap_c:
+                pad = self.cap_c - out.cap
+                out = CSR(out.indptr, jnp.pad(out.indices, (0, pad)),
+                          jnp.pad(out.data, (0, pad)), out.nnz, out.shape,
+                          out.sorted_cols)
         elif algo in ("hash", "hash_vector", "hash_jnp"):
             if general or algo == "hash_jnp":
                 out = spgemm_hash_jnp(a, b, self.cap_c,
@@ -457,6 +476,16 @@ def plan_spgemm(a: CSR, b: CSR, *, algorithm: str = "auto",
         ab = csr_to_bcsr(a, block)
         bb = csr_to_bcsr(b, (block[1], block[1]))
         bcsr_plan = plan_bcsr(ab, bb, n_bins=n_bins, cache=cache)
+    pb_plan = None
+    if algorithm == "pb":
+        # nest the propagation-blocking inspection now (DESIGN.md
+        # section 18): bucket the outer-product expansion once under the
+        # shared LRU's "pb" kind and freeze both levels together.  PB
+        # handles general semirings (jnp twin) and masks (structural
+        # plan-time pruning), so no routing restriction applies here.
+        from .pb import plan_pb
+        pb_plan = plan_pb(a, b, semiring=sr.name, mask=mask,
+                          complement_mask=complement_mask, cache=cache)
 
     plan = SpGEMMPlan(
         key=key, algorithm=algorithm, semiring=sr.name,
@@ -467,7 +496,8 @@ def plan_spgemm(a: CSR, b: CSR, *, algorithm: str = "auto",
         offsets=offsets, bin_tsize=bin_tsize, table_size=table_size,
         row_nnz_c=row_nnz_c, indptr_c=indptr_c, nnz_c=nnz_c, cap_c=cap_c,
         row_cap=row_cap, k_width=k_width, provenance=provenance,
-        block=block if algorithm == "bcsr" else None, bcsr_plan=bcsr_plan)
+        block=block if algorithm == "bcsr" else None, bcsr_plan=bcsr_plan,
+        pb_plan=pb_plan)
     if cache:
         cache_store(key, plan)
     return plan

@@ -77,6 +77,14 @@ MXU_MIN_TILE_DENSITY = 0.25
 #: so auto mode only pays it where that is clearly cheap; callers with big
 #: block-structured matrices opt in with ``probe_blocks=True``.
 AUTO_PROBE_CELLS = 1 << 20
+#: compression-factor ceiling for the propagation-blocking lane
+#: (DESIGN.md section 18): PB expands every partial product once
+#: (O(flop) streaming bandwidth, no hash table), so it only wins where
+#: the expansion barely compresses -- flop / nnz(C) near 1, the regime
+#: the PB paper (PAPERS.md, Gu et al.) calls bandwidth-bound.  At higher
+#: compression the hash table's on-chip duplicate collapse amortizes and
+#: Eq. 2 wins back.
+PB_MAX_COMPRESSION = 1.25
 #: mask density below which the hash family wins the masked use case: the
 #: mask-pruned accumulator state fits a small probe table and the sort
 #: epilogue is skipped (outputs of masked graph products are rarely
@@ -254,13 +262,29 @@ def cost_esc(stats: SpGEMMStats) -> float:
     return stats.flop * max(1.0, float(jnp.log2(jnp.maximum(stats.flop, 2.0))))
 
 
+def cost_pb(stats: SpGEMMStats) -> float:
+    """Propagation-blocking bandwidth model (PB paper section 4).
+
+    Two streaming passes over the expansion -- write each partial product
+    into its bucket, read it back in the merge -- plus the output write:
+    ``T_pb = 2 * flop + nnz(C)``.  No log term anywhere: the bucket sort
+    happened at plan time, and the merge's scatter stays inside one
+    cache/VMEM-resident bucket.  Compare against :func:`cost_hash` with
+    ``sorted_output=True``: PB's win is exactly the vanished sort term,
+    so it prices below hash only when the compression factor is low
+    (little duplicate collapse for the hash table to exploit).
+    """
+    return 2.0 * stats.flop + stats.nnz_c_est
+
+
 def model_costs(stats: SpGEMMStats, sorted_output: bool) -> dict:
     """Eq. 1/Eq. 2 cost-model scores per algorithm family (lower wins);
     the theoretical ranking `table4_recipe` checks the empirical decision
     table against."""
     return {"heap": cost_heap(stats),
             "hash": cost_hash(stats, sorted_output),
-            "esc": cost_esc(stats)}
+            "esc": cost_esc(stats),
+            "pb": cost_pb(stats)}
 
 
 # ---------------------------------------------------------------------------
@@ -318,6 +342,20 @@ def choose_algorithm_from_stats(stats: SpGEMMStats, sorted_output: bool,
             and not stats.has_mask
             and use_case not in ("masked", "batch", "dist")):
         return "bcsr"
+
+    # Propagation-blocking extension (DESIGN.md section 18): a sorted
+    # AxA-regime product whose expansion barely compresses routes to the
+    # bucketed outer-product path -- the hash table would mostly miss
+    # (every probe an insert), while PB streams the expansion twice and
+    # gets sorted output for free from its plan-time bucket sort.  Only
+    # for plain unmasked (+, x) AxA products: masked/batch/dist have their
+    # own executors and the LxU/tall_skinny columns keep Table 4's rows.
+    if (stats.compression_ratio <= PB_MAX_COMPRESSION
+            and sorted_output
+            and semiring == "plus_times"
+            and not stats.has_mask
+            and use_case == "AxA"):
+        return "pb"
 
     # Boolean semirings with relaxed sortedness: hash family, per C8.
     if semiring in ("boolean", "any_pair") and not sorted_output:

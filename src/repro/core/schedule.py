@@ -176,12 +176,22 @@ def equal_weight_partition(weights, n_parts: int) -> np.ndarray:
     Returns ``row_starts`` of shape ``(n_parts + 1,)`` with the same
     invariants as ``rows_to_bins``: starts[0] == 0, starts[-1] == n_rows,
     monotone, and every part's weight <= ceil(total/n_parts) + max weight.
+
+    Degenerate inputs rebalance instead of collapsing: an all-zero weight
+    vector has no flop to balance, so rows are split evenly (the old
+    zero-total prefix sent every ``searchsorted`` cut to ``n``, handing
+    part 0 the whole matrix and every other part zero rows).  With
+    ``n_parts > n`` some parts are necessarily empty; the cuts spread
+    them across the range rather than piling the empties at the tail.
     """
     w = np.asarray(weights, dtype=np.int64)
     assert w.ndim == 1, w.shape
+    assert n_parts >= 1, n_parts
     n = w.shape[0]
     ps = np.concatenate([np.zeros(1, np.int64), np.cumsum(w, dtype=np.int64)])
     total = ps[-1]
+    if total == 0:
+        return (n * np.arange(n_parts + 1, dtype=np.int64)) // n_parts
     targets = (total * np.arange(1, n_parts, dtype=np.int64)) // n_parts
     cuts = np.searchsorted(ps[1:], targets + 1, side="left")
     starts = np.concatenate([np.zeros(1, np.int64), cuts,
@@ -248,3 +258,35 @@ def bin_table_sizes(tsize: jax.Array, n_cols: int, table_size: int,
     t = jnp.minimum(tsize.astype(jnp.int32), jnp.int32(n_cols)) + 1
     return jnp.clip(lowest_p2_arr(t), jnp.int32(max(floor, 1)),
                     jnp.int32(table_size))
+
+
+#: default propagation-blocking bucket budget: the average number of
+#: partial products a column bucket should hold.  Sized so one bucket's
+#: gather indices + products fit comfortably in VMEM/cache during the
+#: merge (the paper's "bin fits in L2" rule, DESIGN.md section 18).
+PB_BUCKET_BUDGET = 2048
+
+
+def pb_bucket_layout(n_cols: int, n_buckets: int | None = None, *,
+                     total_flop: int | None = None,
+                     budget: int = PB_BUCKET_BUDGET) -> tuple:
+    """Column-bucket layout for propagation-blocking SpGEMM.
+
+    Returns ``(bucket_w, n_buckets)`` with ``bucket_w`` a power of two:
+    bucket of column ``c`` is ``c // bucket_w`` (one shift -- the radix
+    step), and ``n_buckets = ceil(n_cols / bucket_w)`` buckets cover
+    ``[0, n_cols)`` contiguously.
+
+    With ``n_buckets=None`` the count is derived from ``total_flop``:
+    enough buckets that the *average* bucket holds <= ``budget`` partial
+    products (never more buckets than columns).  An explicit request is
+    honored up to p2 rounding -- the returned count can be smaller when
+    rounding ``bucket_w`` up swallows trailing buckets.
+    """
+    assert n_cols >= 1, n_cols
+    if n_buckets is None:
+        want = max(1, -(-(total_flop or 0) // budget))
+        n_buckets = min(want, n_cols)
+    n_buckets = max(1, min(int(n_buckets), n_cols))
+    bucket_w = lowest_p2(-(-n_cols // n_buckets))
+    return bucket_w, -(-n_cols // bucket_w)

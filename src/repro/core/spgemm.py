@@ -47,7 +47,7 @@ from .semiring import Semiring, resolve_semiring
 from . import schedule as sched
 
 Algorithm = Literal["auto", "dense", "esc", "heap", "hash", "hash_vector",
-                    "hash_jnp", "bcsr"]
+                    "hash_jnp", "bcsr", "pb"]
 
 #: hash-order scrambling modulus for the jnp hash fallback (Fig. 8's
 #: multiply hash over a fixed 2^20 table: output order == table-scan order).
@@ -542,6 +542,26 @@ def spgemm(a: CSR, b: CSR, cap_c: int | None = None,
         bb = csr_to_bcsr(b, (block[1], block[1]))
         cb = bcsr_ops.spgemm_bcsr(ab, bb, bcap_c=bcap_c, **kw)
         out = bcsr_to_csr(cb, cap=cap_c)
+    elif algorithm == "pb":
+        # Propagation blocking (DESIGN.md section 18): outer-product
+        # expansion bucketed by column segment, merged per bucket.  The
+        # direct call plans eagerly (inspection needs concrete structure);
+        # repeat products should hold the PBPlan (core.pb.plan_pb) and
+        # execute it, exactly like the hash/bcsr planned paths.
+        from .pb import plan_pb
+        pbp = plan_pb(a, b, semiring=sr.name, mask=mask,
+                      complement_mask=complement_mask,
+                      n_buckets=kw.pop("n_buckets", None),
+                      budget=kw.pop("budget", sched.PB_BUCKET_BUDGET),
+                      cache=kw.pop("cache", True))
+        assert cap_c >= pbp.nnz_c, \
+            f"cap_c={cap_c} < exact nnz(C)={pbp.nnz_c}"
+        out = pbp.execute(a, b)
+        if out.cap < cap_c:
+            pad = cap_c - out.cap
+            out = CSR(out.indptr, jnp.pad(out.indices, (0, pad)),
+                      jnp.pad(out.data, (0, pad)), out.nnz, out.shape,
+                      out.sorted_cols)
     else:
         raise ValueError(f"unknown algorithm {algorithm!r}")
     return finalize(out, bool(sorted_output))

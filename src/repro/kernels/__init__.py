@@ -2,6 +2,7 @@
 
   spgemm_hash     -- paper C2/C3: hash + vectorized-probe SpGEMM (CSR)
   spgemm_bcsr     -- TPU adaptation: block-row Gustavson on the MXU
+  spgemm_pb       -- propagation-blocking scatter/merge pair (low CF)
   spmm            -- CSR x dense (square x tall-skinny use case)
   flash_attention -- online-softmax attention for the LM prefill path
 """

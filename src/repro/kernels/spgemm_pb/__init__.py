@@ -1,0 +1,1 @@
+from .ops import pb_merge, pb_scatter, spgemm_pb

@@ -1,0 +1,45 @@
+"""jnp reference twin for the propagation-blocking numeric phases.
+
+Same role as ``spgemm_hash_jnp`` / ``spgemm_bcsr``'s twin under the PR-6
+rounding contract: each partial product is rounded once (no FMA), then
+reduced with the semiring's ``segment_reduce`` in the same bucket-major
+order the Pallas merge walks.  Structure is untouched here -- it comes
+frozen from the plan -- so the twin and the kernel agree bitwise on
+indptr/indices always, bitwise on dyadic values, and to 1 ulp per
+accumulated product otherwise.
+
+The twin is also the *general-semiring* executor: the Pallas pair is
+plus_times-only (mul + add), while ``pb_numeric_ref`` threads any
+registered :class:`repro.core.semiring.Semiring` through the identical
+frozen gathers, so ``PBPlan.execute`` stays one code path per contract.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.semiring import Semiring, resolve_semiring
+
+
+def pb_numeric_ref(a_data, b_data, src_a, src_b, seg, bucket_nnz,
+                   cap_c: int, nnz_c, *, semiring="plus_times"):
+    """Reduce frozen PB plan arrays to C's value vector (shape (cap_c,)).
+
+    Pad lanes (beyond each bucket's ``bucket_nnz``) are routed to a dump
+    segment ``cap_c`` and their value forced to the semiring zero, so
+    empty segments of min_plus-style semirings never leak ``inf`` into
+    live output slots; tails beyond ``nnz_c`` are zeroed to keep the
+    capacity slack bitwise-stable.
+    """
+    sr: Semiring = resolve_semiring(semiring)
+    n_buckets, bucket_cap = src_a.shape
+    cap_a, cap_b = a_data.shape[0], b_data.shape[0]
+    lane = jnp.arange(bucket_cap, dtype=jnp.int32)
+    live = lane[None, :] < bucket_nnz[:, None]
+    av = a_data[jnp.clip(src_a, 0, cap_a - 1)]
+    bv = b_data[jnp.clip(src_b, 0, cap_b - 1)]
+    vals = jnp.where(live, sr.mul(av, bv), sr.zero)
+    s = jnp.where(live, seg, cap_c)
+    data = sr.segment_reduce(vals.ravel(), s.ravel(),
+                             num_segments=cap_c + 1)[:cap_c]
+    valid = jnp.arange(cap_c, dtype=jnp.int32) < nnz_c
+    return jnp.where(valid, data, 0)

@@ -22,15 +22,16 @@ Both layers run as ``python -m repro.verify --all`` (the CI
 """
 from .intervals import Ival, JaxprAnalyzer, Site, TOP
 from .bounds import (check_plan_vcs, verify_batch, verify_bcsr,
-                     verify_chain, verify_dist_1d, verify_spgemm,
-                     verify_summa, run_layer1)
+                     verify_chain, verify_dist_1d, verify_pb,
+                     verify_spgemm, verify_summa, run_layer1)
 from .lint import LintViolation, lint_paths, run_layer2
 from .report import Report, layer1_to_dict, layer2_to_dict
 
 __all__ = [
     "Ival", "JaxprAnalyzer", "Site", "TOP",
     "check_plan_vcs", "verify_spgemm", "verify_batch", "verify_bcsr",
-    "verify_dist_1d", "verify_summa", "verify_chain", "run_layer1",
+    "verify_dist_1d", "verify_pb", "verify_summa", "verify_chain",
+    "run_layer1",
     "LintViolation", "lint_paths", "run_layer2",
     "Report", "layer1_to_dict", "layer2_to_dict",
 ]

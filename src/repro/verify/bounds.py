@@ -188,6 +188,65 @@ def _check_bcsr_vcs(plan) -> List[VC]:
     return vcs
 
 
+def _check_pb_vcs(plan) -> List[VC]:
+    """Propagation-blocking VCs for one frozen :class:`PBPlan`: the
+    bucket layout covers the output columns, every bucket's packed
+    products fit its static capacity, all frozen gather/segment indices
+    are in-bounds, and -- the PB race-freedom invariant -- every live
+    product's output column lands inside its own bucket's column range,
+    so buckets write disjoint output slots and merge independently."""
+    vcs: List[VC] = []
+    n = plan.shape_b[1]
+    nb, bw = int(plan.n_buckets), int(plan.bucket_w)
+    bucket_nnz = np.asarray(plan.bucket_nnz).astype(np.int64)
+    src_a = np.asarray(plan.src_a)
+    src_b = np.asarray(plan.src_b)
+    seg = np.asarray(plan.seg)
+    indptr_c = np.asarray(plan.indptr_c).astype(np.int64)
+    cols_c = np.asarray(plan.cols_c).astype(np.int64)
+
+    vcs.append(_vc("bucket-cover",
+                   bw >= 1 and (bw & (bw - 1)) == 0 and nb * bw >= n,
+                   f"{nb} buckets x p2 width {bw} cover {n} columns"))
+
+    total = int(bucket_nnz.sum())
+    vcs.append(_vc("i32-flop", total == int(plan.total_flop)
+                   and total <= _I32_MAX,
+                   f"sum(bucket_nnz)={total} == total_flop, <= 2^31-1"))
+    vcs.append(_vc("bucket-capacity",
+                   int(bucket_nnz.max(initial=0)) <= int(plan.bucket_cap),
+                   f"max bucket_nnz <= bucket_cap={plan.bucket_cap}"))
+
+    lane = np.arange(src_a.shape[-1])
+    live = lane[None, :] < bucket_nnz[:, None]
+    src_ok = (np.all((src_a >= 0) & (src_a < plan.cap_a) | ~live)
+              and np.all((src_b >= 0) & (src_b < plan.cap_b) | ~live))
+    vcs.append(_vc("gather-bounds", src_ok,
+                   f"live src_a < cap_a={plan.cap_a}, "
+                   f"src_b < cap_b={plan.cap_b}"))
+    seg_ok = np.all((seg >= 0) & (seg < max(int(plan.cap_c), 1)) | ~live)
+    vcs.append(_vc("segment-bounds", seg_ok,
+                   f"live seg < cap_c={plan.cap_c}"))
+
+    # race freedom: a live product in bucket g merges into an output slot
+    # whose column is in [g*bw, (g+1)*bw)
+    g = np.arange(nb)[:, None]
+    col_of = cols_c[np.clip(seg, 0, max(int(plan.cap_c) - 1, 0))]
+    disjoint = np.all((col_of // bw == g) | ~live)
+    vcs.append(_vc("bucket-disjoint", disjoint,
+                   "every live product's output column lies in its own "
+                   "bucket's range (buckets write disjoint slots)"))
+
+    nnz_c = int(indptr_c[-1])
+    vcs.append(_vc("store-capacity",
+                   indptr_c[0] == 0 and np.all(np.diff(indptr_c) >= 0)
+                   and nnz_c == int(plan.nnz_c)
+                   and nnz_c <= int(plan.cap_c),
+                   f"indptr_c monotone, nnz_c={nnz_c} <= "
+                   f"cap_c={plan.cap_c}"))
+    return vcs
+
+
 def _check_stacked_hash_vcs(hash_sched, *, n_rows: int, n_cols: int,
                             cap_c: int, table_size: int,
                             label: str) -> List[VC]:
@@ -217,10 +276,14 @@ def check_plan_vcs(plan) -> List[VC]:
     from repro.core.bcsr import BCSRPlan
     from repro.core.chain import ChainPlan, GramPlan
     from repro.core.distributed import DistributedPlan, SummaPlan
+    from repro.core.pb import PBPlan
     from repro.core.plan import SpGEMMPlan
 
     if isinstance(plan, BCSRPlan):
         return _check_bcsr_vcs(plan)
+
+    if isinstance(plan, PBPlan):
+        return _check_pb_vcs(plan)
 
     if isinstance(plan, SpGEMMPlan):
         vcs = _check_spgemm_vcs(plan)
@@ -228,6 +291,10 @@ def check_plan_vcs(plan) -> List[VC]:
             # bcsr-routed CSR plan: the nested block plan's VCs gate too
             vcs += [VC(f"bcsr.{vc.name}", vc.ok, vc.detail)
                     for vc in _check_bcsr_vcs(plan.bcsr_plan)]
+        if plan.pb_plan is not None:
+            # pb-routed CSR plan: the nested PB plan's VCs gate too
+            vcs += [VC(f"pb.{vc.name}", vc.ok, vc.detail)
+                    for vc in _check_pb_vcs(plan.pb_plan)]
         return vcs
 
     if isinstance(plan, ChainPlan):
@@ -479,6 +546,30 @@ def verify_bcsr(plan, a, b, name: str = "") -> CaseReport:
                  expected)
 
 
+def verify_pb(plan, a: CSR, b: CSR, name: str = "") -> CaseReport:
+    """Prove one frozen :class:`repro.core.pb.PBPlan` against its
+    executor jaxpr.  The budget pins the propagation-blocking story:
+    exactly two numeric Pallas calls on the plus_times fast path -- the
+    column-bucket scatter and the per-bucket merge, kept separate so the
+    mesh path can insert an ``all_to_all`` between them -- zero ``sort``
+    (the output order was frozen at plan time), and zero ``dot_general``.
+    A general-semiring plan runs the jnp twin: zero Pallas calls, still
+    sort-free (the segment reduction is scatter-based)."""
+    vcs = check_plan_vcs(plan)
+
+    def trace(ai, aj, ax, an, bi, bj, bx, bn, _plan=plan):
+        return _plan.execute(_rebuild(a, (ai, aj, ax, an)),
+                             _rebuild(b, (bi, bj, bx, bn)))
+
+    analyzer = _analyze_traced(trace, _csr_args(a) + _csr_args(b),
+                               _csr_seeds(a) + _csr_seeds(b),
+                               _flush_discharge(vcs))
+    n_pallas = 2 if plan.semiring == "plus_times" else 0
+    expected = {"pallas_call": n_pallas, "sort": 0, "dot_general": 0,
+                **_FORBIDDEN}
+    return _case("pb", name or "pb/planned", "pb", vcs, analyzer, expected)
+
+
 def verify_batch(plan, pairs: Sequence[Tuple[CSR, CSR]],
                  name: str = "") -> CaseReport:
     """Prove one :class:`BatchedPlan` against its class programs."""
@@ -601,13 +692,13 @@ def run_layer1(kinds: Optional[Sequence[str]] = None) -> List[CaseReport]:
     one :class:`CaseReport` per case; the CLI turns them into the gating
     JSON document.
     """
-    from repro.core import (plan_batch, plan_bcsr, plan_chain, plan_spgemm,
-                            plan_spgemm_1d, plan_spgemm_summa)
+    from repro.core import (plan_batch, plan_bcsr, plan_chain, plan_pb,
+                            plan_spgemm, plan_spgemm_1d, plan_spgemm_summa)
     from repro.core.distributed import shard_csr_rows
     from repro.core.formats import BCSR
 
     kinds = set(kinds or ("spgemm", "batch", "dist_1d", "summa", "chain",
-                          "bcsr"))
+                          "bcsr", "pb"))
     cases: List[CaseReport] = []
 
     ad = _dyadic_dense(16, 12, 0.3, 0)
@@ -653,6 +744,15 @@ def run_layer1(kinds: Optional[Sequence[str]] = None) -> List[CaseReport]:
         bb3 = BCSR.from_dense(_block_dyadic(4, 5, 4, 2, 0.5, 11), (4, 2))
         plan = plan_bcsr(ba2, bb3, n_bins=3)
         cases.append(verify_bcsr(plan, ba2, bb3, name="bcsr/rect-tiles"))
+
+    if "pb" in kinds:
+        plan = plan_pb(a, b)
+        cases.append(verify_pb(plan, a, b))
+        # multi-bucket + masked variant: structural pruning at plan time,
+        # so the masked product still stages the mask-free Pallas pair
+        md = (_dyadic_dense(16, 10, 0.5, 12) > 0).astype(np.float32)
+        plan = plan_pb(a, b, mask=_csr_of(md), n_buckets=4)
+        cases.append(verify_pb(plan, a, b, name="pb/masked-4buckets"))
 
     if "chain" in kinds:
         cd = _dyadic_dense(10, 7, 0.4, 7)

@@ -349,3 +349,47 @@ if HAVE_HYPOTHESIS:
                 b, _ = draw(csr_case(m=k))
                 pairs.append((a, b))
         return pairs, semiring
+
+    @st.composite
+    def degenerate_partition_case(draw):
+        """A ``(weights, n_parts)`` pair biased toward the partition
+        degeneracies: all-zero weights, zero-weight spans, single rows,
+        and ``n_parts > n_rows``.  The consumer checks the
+        ``equal_weight_partition`` invariants (cover, monotone, balance,
+        and no all-rows-in-part-0 collapse on zero totals)."""
+        shape = draw(st.sampled_from(("zeros", "spans", "random", "tiny")))
+        if shape == "zeros":
+            n = draw(st.integers(1, 16))
+            w = np.zeros(n, np.int64)
+        elif shape == "tiny":
+            n = draw(st.integers(1, 3))
+            w = np.asarray(draw(st.lists(st.integers(0, 4),
+                                         min_size=n, max_size=n)), np.int64)
+        else:
+            n = draw(st.integers(4, 16))
+            rng = np.random.default_rng(draw(st.integers(0, 2**16)))
+            w = rng.integers(0, 9, n).astype(np.int64)
+            if shape == "spans":       # zero out a contiguous span
+                i = draw(st.integers(0, n - 1))
+                j = draw(st.integers(i, n))
+                w[i:j] = 0
+        n_parts = draw(st.sampled_from((1, 2, 3, 8, 32)))
+        return w, n_parts
+
+    @st.composite
+    def pb_case(draw):
+        """A low-compression-factor product for the propagation-blocking
+        differential layer: ``(ad, bd, n_buckets)``.
+
+        Wide-ish B with thin rows keeps flop / nnz(C) near 1 (few
+        collisions to merge -- PB's home regime); the strategy still mixes
+        in denser draws so the bucket merge sees real duplicate columns.
+        """
+        m, k = draw(DIMS), draw(DIMS)
+        n = draw(st.sampled_from((8, 16, 32)))
+        seed = draw(st.integers(0, 2**16))
+        ad = draw(dense_with_structure(m, k, seed))
+        bd = rand_dense(k, n, draw(st.sampled_from((0.05, 0.1, 0.3))),
+                        seed + 1)
+        n_buckets = draw(st.sampled_from((1, 2, 4)))
+        return ad, bd, n_buckets

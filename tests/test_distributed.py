@@ -79,8 +79,44 @@ def test_summa_panel_bounds_pins_panel_count():
     assert summa_panel_bounds(64, 8) == summa_panel_bounds(64, 8, 8)
     with pytest.raises(ValueError, match="multiple of the mesh axis"):
         summa_panel_bounds(64, 8, 12)
-    with pytest.raises(ValueError, match="must divide"):
+    with pytest.raises(ValueError, match="exceeds the contraction dim"):
         summa_panel_bounds(64, 8, 128)
+
+
+def test_equal_weight_partition_degenerates_rebalance():
+    """All-zero weights must split rows evenly, not pile every cut at n
+    (the old zero-total prefix handed part 0 all rows and left every
+    other part empty); with more parts than rows the empties spread."""
+    import numpy as np
+    from repro.core.schedule import equal_weight_partition
+
+    starts = np.asarray(equal_weight_partition(np.zeros(8, np.int64), 4))
+    assert starts[0] == 0 and starts[-1] == 8
+    assert np.diff(starts).max() == 2, starts  # fails pre-fix: [8, 0, 0, 0]
+
+    starts = np.asarray(equal_weight_partition(np.zeros(3, np.int64), 8))
+    assert starts[0] == 0 and starts[-1] == 3
+    assert np.all(np.diff(starts) >= 0)
+    assert np.diff(starts).max() == 1, starts  # empties spread, not piled
+
+
+def test_summa_panel_bounds_ragged_tail():
+    """K need not divide evenly: a prime K schedules with a short final
+    panel (the old code raised 'must divide' here)."""
+    from repro.core.distributed import summa_panel_bounds
+
+    bounds = summa_panel_bounds(13, 2)
+    assert bounds == ((0, 7), (7, 13))
+    # invariants every executor relies on: contiguous cover of [0, K),
+    # first panel widest (buffers are sized off it), monotone bounds
+    for k_dim, s, kp in ((13, 2, 2), (97, 4, 8), (10, 2, 8), (31, 1, 16)):
+        b = summa_panel_bounds(k_dim, s, kp)
+        assert len(b) == kp
+        assert b[0][0] == 0 and b[-1][1] == k_dim
+        widths = [hi - lo for lo, hi in b]
+        assert all(w >= 0 for w in widths) and max(widths) == widths[0]
+        for (_, hi), (lo2, _) in zip(b, b[1:]):
+            assert hi == lo2
 
 
 # ---------------------------------------------------------------------------
@@ -235,6 +271,184 @@ a3 = dc.replace(a, data=a.data * 3.0)
 c3 = unshard_rows(spgemm_summa(mesh, a3, b, k_panels=8, algorithm="esc"))
 assert np.array_equal(np.asarray(c3.to_dense()), 3.0 * refd)
 assert plan_cache_stats()["misses"] == after["misses"]
+print("OK")
+""", n_dev=8)
+
+
+def test_unshard_rows_roundtrip_is_bitwise_with_cap():
+    """shard -> unshard with an explicit ``cap=`` must reproduce the
+    operand bitwise -- same arrays, same structure key -- so plan reuse
+    after a round trip matches the single-node path (the old code shrank
+    capacity to nnz, making every round trip a new structure)."""
+    import numpy as np
+    from repro.core.distributed import shard_csr_rows, unshard_rows
+    from repro.core.plan import structure_key
+    from _fuzz import csr_of, rand_dense
+
+    a = csr_of(rand_dense(16, 12, 0.3, seed=3), cap=96)   # deliberate slack
+    assert int(a.nnz) < a.cap == 96
+    rt = unshard_rows(shard_csr_rows(a, 4), cap=a.cap)
+    assert rt.cap == a.cap                      # fails pre-fix: cap == nnz
+    for f in ("indptr", "indices", "data"):
+        assert np.array_equal(np.asarray(getattr(rt, f)),
+                              np.asarray(getattr(a, f))), f
+    assert int(rt.nnz) == int(a.nnz) and rt.shape == a.shape
+    assert structure_key(rt) == structure_key(a)
+    # default preserves the sharded slack instead of shrinking to nnz
+    sh = shard_csr_rows(a, 4)
+    assert unshard_rows(sh).cap == 4 * sh.cap_per
+
+
+def test_distributed_summa_ragged_prime_k():
+    """SUMMA on a prime contraction dim (regression: the old panel
+    schedule raised 'must divide' unless k_panels | K)."""
+    _run("""
+import numpy as np, jax
+from jax.sharding import Mesh
+from repro.core import CSR, plan_spgemm
+from repro.core.distributed import spgemm_summa, unshard_rows
+def int_csr(m, n, nnz, seed):
+    r = np.random.default_rng(seed)
+    return CSR.from_numpy_coo(r.integers(0, m, nnz), r.integers(0, n, nnz),
+                              r.integers(1, 5, nnz).astype(np.float32),
+                              (m, n))
+a = int_csr(8, 13, 40, 1)     # K = 13 is prime
+b = int_csr(13, 6, 30, 2)
+mesh = Mesh(np.array(jax.devices()), ("data",))
+refd = np.asarray(plan_spgemm(a, b, algorithm="esc").execute(a, b)
+                  .to_dense())
+for kp in (2, 4):             # ragged final panel: (12, 13) when kp=4
+    c = unshard_rows(spgemm_summa(mesh, a, b, k_panels=kp,
+                                  algorithm="esc"))
+    assert np.array_equal(np.asarray(c.to_dense()), refd), kp
+print("OK")
+""", n_dev=2)
+
+
+def test_distributed_1d_pb_sched_numeric_only():
+    """The 1D plan's frozen PB geometry: shard_map executes run the
+    scatter/merge Pallas pair with zero re-inspection, bit-match the
+    mesh-free host twin, and general semirings fall back to esc."""
+    _run("""
+import numpy as np, jax
+from jax.sharding import Mesh
+from repro.core import CSR, plan_spgemm
+from repro.core.distributed import shard_csr_rows, plan_spgemm_1d, \\
+    unshard_rows
+from repro.kernels.spgemm_pb import ops as pb_ops
+def int_csr(m, n, nnz, seed):
+    r = np.random.default_rng(seed)
+    return CSR.from_numpy_coo(r.integers(0, m, nnz), r.integers(0, n, nnz),
+                              r.integers(1, 5, nnz).astype(np.float32),
+                              (m, n))
+a = int_csr(32, 24, 120, 1)
+b = int_csr(24, 28, 100, 2)
+a_sh = shard_csr_rows(a, 4)
+plan = plan_spgemm_1d(a_sh, b, algorithm="pb", sorted_output=True)
+assert plan.pb_sched is not None and len(plan.pb_sched) == 6
+mesh = Mesh(np.array(jax.devices()), ("data",))
+pb_ops.reset_kernel_calls()
+c = unshard_rows(plan.execute(mesh, a_sh, b))
+cnt = pb_ops.kernel_call_counts()
+assert cnt["inspect"] == 0 and cnt["scatter"] >= 1 and cnt["merge"] >= 1
+refd = np.asarray(plan_spgemm(a, b, algorithm="esc", sorted_output=True)
+                  .execute(a, b).to_dense())
+assert np.array_equal(np.asarray(c.to_dense()), refd)
+# mesh-free twin is bitwise the mesh result
+host = plan.execute_shards_host(a_sh, b)
+mesh_out = plan.execute(mesh, a_sh, b)
+for f in ("indptr", "indices", "data", "nnz"):
+    assert np.array_equal(np.asarray(getattr(host.parts, f)),
+                          np.asarray(getattr(mesh_out.parts, f))), f
+# a general semiring keeps pb_sched=None (esc substitution in-trace)
+pg = plan_spgemm_1d(a_sh, b, algorithm="pb", semiring="min_plus")
+assert pg.pb_sched is None
+cg = unshard_rows(pg.execute(mesh, a_sh, b))
+refm = np.asarray(plan_spgemm(a, b, algorithm="esc", semiring="min_plus")
+                  .execute(a, b).to_dense())
+assert np.array_equal(np.asarray(cg.to_dense()), refm)
+print("OK")
+""", n_dev=4)
+
+
+def test_distributed_pb_summa_matches_classic_merge():
+    """PB-SUMMA's all_to_all bucket exchange must reproduce the classic
+    dense reduce-scatter merge bitwise (integer values), reuse the frozen
+    structure on reweighted operands, and never re-inspect on repeat
+    executes."""
+    _run("""
+import numpy as np, jax, dataclasses as dc
+from jax.sharding import Mesh
+from repro.core import CSR, plan_cache_stats
+from repro.core.distributed import spgemm_summa, spgemm_pb_summa, \\
+    plan_spgemm_pb_summa, unshard_rows
+from repro.kernels.spgemm_pb import ops as pb_ops
+def int_csr(m, n, nnz, seed):
+    r = np.random.default_rng(seed)
+    return CSR.from_numpy_coo(r.integers(0, m, nnz), r.integers(0, n, nnz),
+                              r.integers(1, 5, nnz).astype(np.float32),
+                              (m, n))
+a = int_csr(32, 24, 150, 1)
+b = int_csr(24, 28, 120, 2)
+mesh = Mesh(np.array(jax.devices()), ("data",))
+ref = unshard_rows(spgemm_summa(mesh, a, b, algorithm="esc"))
+plan = plan_spgemm_pb_summa(a, b, 4)
+pb_ops.reset_kernel_calls()
+c = plan.execute(mesh, a, b)
+assert pb_ops.kernel_call_counts()["inspect"] == 0
+assert np.array_equal(np.asarray(unshard_rows(c).to_dense()),
+                      np.asarray(ref.to_dense()))
+# output is sorted CSR with the exact planned structure
+assert bool(np.all(np.asarray(c.parts.nnz)
+                   == np.asarray(plan.out_nnz)))
+# repeat product hits the plan cache; reweighted values re-gather only
+before = plan_cache_stats()["misses"]
+c2 = spgemm_pb_summa(mesh, dc.replace(a, data=a.data * 2.0), b)
+assert plan_cache_stats()["misses"] == before
+assert np.array_equal(np.asarray(unshard_rows(c2).to_dense()),
+                      2.0 * np.asarray(ref.to_dense()))
+# multiple K-panels per chip stream through the same exchange
+c3 = spgemm_pb_summa(mesh, a, b, k_panels=8)
+assert np.array_equal(np.asarray(unshard_rows(c3).to_dense()),
+                      np.asarray(ref.to_dense()))
+print("OK")
+""", n_dev=4)
+
+
+def test_distributed_1d_empty_shards_execute():
+    """The shard_map executor must handle empty shards: all-zero
+    partition weights (empty operand) and more shards than rows."""
+    _run("""
+import numpy as np, jax
+from jax.sharding import Mesh
+from repro.core import CSR, plan_spgemm
+from repro.core.distributed import (shard_csr_rows, plan_spgemm_1d,
+                                    unshard_rows)
+mesh = Mesh(np.array(jax.devices()), ("data",))
+
+# all-zero weights: an empty operand has no flop anywhere -- the old
+# partition handed shard 0 every row and trailing shards zero rows;
+# either way the executor must survive and produce the empty product
+empty = CSR.from_numpy_coo(np.zeros(0, np.int64), np.zeros(0, np.int64),
+                           np.zeros(0, np.float32), (16, 8))
+b = CSR.from_numpy_coo(np.array([0, 3, 5]), np.array([1, 2, 0]),
+                       np.ones(3, np.float32), (8, 6))
+e_sh = shard_csr_rows(empty, 8, b=b)
+starts = np.asarray(e_sh.row_starts)
+assert np.diff(starts).max() <= 2, starts   # rebalanced, not piled
+ce = unshard_rows(plan_spgemm_1d(e_sh, b, algorithm="esc")
+                  .execute(mesh, e_sh, b))
+assert int(ce.nnz) == 0 and ce.shape == (16, 6)
+
+# more shards than rows: some shards are necessarily empty
+small = CSR.from_numpy_coo(np.array([0, 1, 2, 3]), np.array([0, 1, 2, 3]),
+                           np.arange(1, 5, dtype=np.float32), (4, 8))
+s_sh = shard_csr_rows(small, 8, b=b)
+ref = np.asarray(plan_spgemm(small, b, algorithm="esc")
+                 .execute(small, b).to_dense())
+cs = unshard_rows(plan_spgemm_1d(s_sh, b, algorithm="esc")
+                  .execute(mesh, s_sh, b))
+assert np.array_equal(np.asarray(cs.to_dense()), ref)
 print("OK")
 """, n_dev=8)
 

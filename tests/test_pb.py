@@ -1,0 +1,353 @@
+"""Differential suite for the propagation-blocking SpGEMM lane
+(DESIGN.md section 18, after Gu et al.'s propagation blocking).
+
+The oracle is scipy's CSR product: the planned PB path must reproduce
+its structure bit for bit -- indptr, *sorted* column order (sorted
+output is PB's contract; the structure was frozen at plan time), and
+values bitwise on dyadic fixtures (all sums exact, so reduction order
+cannot show through).  Both sides keep structurally-present entries, so
+comparisons are exact.
+
+Also pinned here: empty operands / empty products / rectangular shapes,
+unsorted inputs (expansion never needs sorted columns; the output stays
+sorted), every registered semiring through the jnp twin, masks in both
+polarities (plan-time structural pruning), bitwise structure agreement
+with the planned *hash* path under ``sorted_output=True``, the recipe's
+compression-factor gate, the ``"pb"`` plan-cache kind with
+counter-verified zero re-inspection on repeat executes, and the
+batched-kernel dispatch under ``vmap`` over a member value fleet.  The
+mesh lifts (1D ``pb_sched``, PB-SUMMA exchange) live in
+``tests/test_distributed.py``; the hypothesis property layer at the
+bottom consumes ``_fuzz.pb_case``.
+"""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import (PBPlan, clear_plan_cache, plan_cache_stats,  # noqa: E402
+                        plan_pb, plan_spgemm, spgemm)
+from repro.core.formats import CSR  # noqa: E402
+from repro.core.recipe import (PB_MAX_COMPRESSION,  # noqa: E402
+                               choose_algorithm, measure_stats)
+from repro.kernels.spgemm_pb import ops as pb_ops  # noqa: E402
+from _fuzz import (csr_of, member_value_fleet, rand_dense,  # noqa: E402
+                   scramble_rows)
+
+sp = pytest.importorskip("scipy.sparse")
+
+
+def _sp(d: np.ndarray):
+    return sp.csr_matrix(np.asarray(d, np.float32))
+
+
+def _oracle(ad: np.ndarray, bd: np.ndarray):
+    c = (_sp(ad) @ _sp(bd)).astype(np.float32)
+    c.sort_indices()
+    return c
+
+
+def _assert_matches_scipy(c: CSR, oracle) -> None:
+    """Bitwise structure + value equality against the scipy CSR product
+    (PB emits sorted columns; dyadic fixtures make the values exact)."""
+    nnz = int(c.nnz)
+    assert nnz == oracle.nnz
+    assert c.sorted_cols
+    assert np.array_equal(np.asarray(c.indptr), oracle.indptr)
+    assert np.array_equal(np.asarray(c.indices)[:nnz], oracle.indices)
+    assert np.array_equal(np.asarray(c.data)[:nnz],
+                          oracle.data.astype(np.float32))
+    # padding beyond nnz is zeroed (the CSR dump contract)
+    assert not np.any(np.asarray(c.indices)[nnz:])
+    assert not np.any(np.asarray(c.data)[nnz:])
+
+
+# ---------------------------------------------------------------------------
+# scipy differential: shapes x densities x bucket counts
+# ---------------------------------------------------------------------------
+
+GRID = [
+    # (m, k, n, da, db, n_buckets)
+    (16, 16, 16, 0.2, 0.2, None),
+    (16, 16, 16, 0.2, 0.2, 1),
+    (16, 16, 16, 0.3, 0.3, 4),
+    (24, 8, 40, 0.3, 0.15, 8),    # wide C: multi-bucket split
+    (40, 24, 8, 0.15, 0.3, 2),    # tall A, narrow C
+    (5, 7, 3, 0.6, 0.6, None),    # tiny odd shapes, dense-ish
+    (16, 16, 16, 0.05, 0.05, 4),  # near-empty
+]
+
+
+@pytest.mark.parametrize("m,k,n,da,db,nb", GRID)
+def test_pb_matches_scipy(m, k, n, da, db, nb):
+    ad = rand_dense(m, k, da, seed=m * 31 + n)
+    bd = rand_dense(k, n, db, seed=m * 37 + k)
+    a, b = csr_of(ad), csr_of(bd)
+    plan = plan_pb(a, b, n_buckets=nb, cache=False)
+    _assert_matches_scipy(plan.execute(a, b), _oracle(ad, bd))
+
+
+def test_empty_operands_and_empty_product():
+    m, k, n = 8, 6, 10
+    bd = rand_dense(k, n, 0.4, seed=3)
+    za = csr_of(np.zeros((m, k), np.float32))
+    b = csr_of(bd)
+    for aa, bb, aden, bden in [
+            (za, b, np.zeros((m, k), np.float32), bd),
+            (csr_of(rand_dense(m, k, 0.4, seed=4)),
+             csr_of(np.zeros((k, n), np.float32)),
+             rand_dense(m, k, 0.4, seed=4), np.zeros((k, n), np.float32))]:
+        plan = plan_pb(aa, bb, cache=False)
+        assert plan.nnz_c == 0 and plan.total_flop == 0
+        _assert_matches_scipy(plan.execute(aa, bb), _oracle(aden, bden))
+    # structurally-disjoint K support: nonzero operands, empty product
+    ad = np.zeros((4, 6), np.float32)
+    bd2 = np.zeros((6, 4), np.float32)
+    ad[:, :3] = rand_dense(4, 3, 0.9, seed=5)
+    bd2[3:, :] = rand_dense(3, 4, 0.9, seed=6)
+    a2, b2 = csr_of(ad), csr_of(bd2)
+    plan = plan_pb(a2, b2, cache=False)
+    assert plan.nnz_c == 0
+    _assert_matches_scipy(plan.execute(a2, b2), _oracle(ad, bd2))
+
+
+def test_unsorted_inputs_sorted_output():
+    """Expansion is order-insensitive: scrambled operand rows produce the
+    same frozen (sorted) output structure and the same values."""
+    ad = rand_dense(12, 10, 0.35, seed=7)
+    bd = rand_dense(10, 14, 0.3, seed=8)
+    a, b = csr_of(ad), csr_of(bd)
+    au, bu = scramble_rows(a), scramble_rows(b)
+    oracle = _oracle(ad, bd)
+    for aa, bb in [(au, b), (a, bu), (au, bu)]:
+        plan = plan_pb(aa, bb, cache=False)
+        _assert_matches_scipy(plan.execute(aa, bb), oracle)
+
+
+# ---------------------------------------------------------------------------
+# semirings and masks (jnp twin + plan-time structural pruning)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("semiring", ["boolean", "min_plus", "plus_first"])
+def test_general_semirings_match_esc(semiring):
+    ad = rand_dense(14, 12, 0.3, seed=9)
+    bd = rand_dense(12, 11, 0.3, seed=10)
+    a, b = csr_of(ad), csr_of(bd)
+    plan = plan_pb(a, b, semiring=semiring, cache=False)
+    c = plan.execute(a, b)
+    ref = spgemm(a, b, cap_c=max(plan.nnz_c, 1), algorithm="esc",
+                 semiring=semiring, sorted_output=True)
+    nnz = int(ref.nnz)
+    assert int(c.nnz) == nnz
+    assert np.array_equal(np.asarray(c.indptr), np.asarray(ref.indptr))
+    assert np.array_equal(np.asarray(c.indices)[:nnz],
+                          np.asarray(ref.indices)[:nnz])
+    assert np.array_equal(np.asarray(c.data)[:nnz],
+                          np.asarray(ref.data)[:nnz])
+
+
+@pytest.mark.parametrize("complement", [False, True])
+def test_masked_products_match_esc(complement):
+    ad = rand_dense(12, 10, 0.35, seed=11)
+    bd = rand_dense(10, 12, 0.35, seed=12)
+    md = (rand_dense(12, 12, 0.5, seed=13) > 0).astype(np.float32)
+    a, b, mask = csr_of(ad), csr_of(bd), csr_of(md)
+    plan = plan_pb(a, b, mask=mask, complement_mask=complement, cache=False)
+    assert plan.has_mask
+    c = plan.execute(a, b)
+    ref = spgemm(a, b, cap_c=max(plan.nnz_c, 1), algorithm="esc",
+                 mask=mask, complement_mask=complement, sorted_output=True)
+    nnz = int(ref.nnz)
+    assert int(c.nnz) == nnz
+    assert np.array_equal(np.asarray(c.indptr), np.asarray(ref.indptr))
+    assert np.array_equal(np.asarray(c.indices)[:nnz],
+                          np.asarray(ref.indices)[:nnz])
+    assert np.array_equal(np.asarray(c.data)[:nnz],
+                          np.asarray(ref.data)[:nnz])
+
+
+# ---------------------------------------------------------------------------
+# bitwise agreement with the planned hash path (ISSUE acceptance)
+# ---------------------------------------------------------------------------
+
+def test_bitwise_structure_vs_planned_hash_sorted():
+    """PB and the planned hash path under ``sorted_output=True`` freeze
+    the *same* output structure (indptr + indices bitwise); dyadic values
+    agree bitwise too, reduction order notwithstanding."""
+    ad = rand_dense(16, 14, 0.3, seed=14)
+    bd = rand_dense(14, 16, 0.3, seed=15)
+    a, b = csr_of(ad), csr_of(bd)
+    pbp = plan_pb(a, b, cache=False)
+    hp = plan_spgemm(a, b, algorithm="hash", sorted_output=True,
+                     cache=False)
+    c_pb = pbp.execute(a, b)
+    c_h = hp.execute(a, b)
+    nnz = int(c_h.nnz)
+    assert int(c_pb.nnz) == nnz == pbp.nnz_c
+    assert np.array_equal(np.asarray(c_pb.indptr), np.asarray(c_h.indptr))
+    assert np.array_equal(np.asarray(c_pb.indices)[:nnz],
+                          np.asarray(c_h.indices)[:nnz])
+    assert np.array_equal(np.asarray(c_pb.data)[:nnz],
+                          np.asarray(c_h.data)[:nnz])
+
+
+def test_dispatcher_pb_pads_to_caller_cap():
+    ad = rand_dense(10, 10, 0.3, seed=16)
+    bd = rand_dense(10, 10, 0.3, seed=17)
+    a, b = csr_of(ad), csr_of(bd)
+    nnz_c = _oracle(ad, bd).nnz
+    cap = nnz_c + 13
+    c = spgemm(a, b, cap_c=cap, algorithm="pb", sorted_output=True,
+               cache=False)
+    assert c.indices.shape[0] == cap
+    _assert_matches_scipy(c, _oracle(ad, bd))
+
+
+# ---------------------------------------------------------------------------
+# recipe gate, plan cache, zero re-inspection
+# ---------------------------------------------------------------------------
+
+def test_recipe_routes_low_compression_to_pb():
+    """A sorted AxA product whose expansion barely collapses (CF <= the
+    gate) routes to pb; a high-CF product must not."""
+    rng = np.random.default_rng(18)
+    # one nonzero per row of A in distinct columns -> zero collisions
+    ad = np.zeros((16, 16), np.float32)
+    ad[np.arange(16), rng.permutation(16)] = 1.5
+    a = csr_of(ad)
+    stats = measure_stats(a, a)
+    assert stats.compression_ratio <= PB_MAX_COMPRESSION
+    assert choose_algorithm(a, a, sorted_output=True,
+                            use_case="AxA") == "pb"
+    dense = csr_of(rand_dense(16, 16, 0.6, seed=19))
+    assert measure_stats(dense, dense).compression_ratio \
+        > PB_MAX_COMPRESSION
+    assert choose_algorithm(dense, dense, sorted_output=True,
+                            use_case="AxA") != "pb"
+
+
+def test_pb_cache_kind_and_zero_reinspection():
+    clear_plan_cache()
+    pb_ops.reset_kernel_calls()
+    ad = rand_dense(12, 12, 0.3, seed=20)
+    bd = rand_dense(12, 12, 0.3, seed=21)
+    a, b = csr_of(ad), csr_of(bd)
+    plan = plan_pb(a, b)
+    assert isinstance(plan, PBPlan)
+    assert pb_ops.kernel_call_counts()["inspect"] == 1
+    assert plan_cache_stats()["kinds"].get("pb") == 1
+
+    c1 = plan.execute(a, b)
+    c2 = plan.execute(a, b)
+    cnt = pb_ops.kernel_call_counts()
+    assert cnt["inspect"] == 1            # executes never re-inspect
+    assert cnt["scatter"] >= 2 and cnt["merge"] >= 2
+    assert np.array_equal(np.asarray(c1.data), np.asarray(c2.data))
+
+    replanned = plan_pb(a, b)             # cache hit: no new inspection
+    assert replanned is plan
+    assert pb_ops.kernel_call_counts()["inspect"] == 1
+
+
+def test_nested_pb_plan_in_spgemm_plan():
+    ad = rand_dense(10, 8, 0.3, seed=22)
+    bd = rand_dense(8, 12, 0.3, seed=23)
+    a, b = csr_of(ad), csr_of(bd)
+    plan = plan_spgemm(a, b, algorithm="pb", sorted_output=True,
+                       cache=False)
+    assert isinstance(plan.pb_plan, PBPlan)
+    c = plan.execute(a, b)
+    oracle = _oracle(ad, bd)
+    nnz = int(c.nnz)
+    assert nnz == oracle.nnz
+    assert np.array_equal(np.asarray(c.indptr), oracle.indptr)
+    assert np.array_equal(np.asarray(c.indices)[:nnz], oracle.indices)
+    assert np.array_equal(np.asarray(c.data)[:nnz],
+                          oracle.data.astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# layer-1 verifier: clean plans prove, perturbed plans are rejected
+# ---------------------------------------------------------------------------
+
+def test_verify_pb_clean_and_rejects_perturbations():
+    import dataclasses
+
+    from repro.verify import check_plan_vcs, verify_pb
+
+    ad = rand_dense(12, 10, 0.3, seed=27)
+    bd = rand_dense(10, 12, 0.3, seed=28)
+    a, b = csr_of(ad), csr_of(bd)
+    plan = plan_pb(a, b, cache=False)
+    assert plan.total_flop > 0
+    case = verify_pb(plan, a, b)
+    assert case.budget["ok"], case.budget
+    assert not case.violations and all(vc.ok for vc in case.vcs)
+
+    # live segment slots pushed past cap_c: segment-bounds must fire
+    bad = dataclasses.replace(plan, seg=plan.seg + plan.cap_c)
+    failed = {vc.name for vc in check_plan_vcs(bad) if not vc.ok}
+    assert "segment-bounds" in failed
+    # bucket counts past the static capacity: bucket-capacity must fire
+    bad = dataclasses.replace(
+        plan, bucket_nnz=plan.bucket_nnz + plan.bucket_cap + 1)
+    failed = {vc.name for vc in check_plan_vcs(bad) if not vc.ok}
+    assert "bucket-capacity" in failed
+
+
+# ---------------------------------------------------------------------------
+# batched dispatch under vmap (member value fleet)
+# ---------------------------------------------------------------------------
+
+def test_vmap_value_fleet_dispatches_batched_kernels():
+    ad = rand_dense(10, 10, 0.3, seed=24)
+    bd = rand_dense(10, 10, 0.3, seed=25)
+    a, b = csr_of(ad), csr_of(bd)
+    plan = plan_pb(a, b, cache=False)
+    fleet = member_value_fleet(ad, 3, seed=26)   # (3, nnz) scaled values
+
+    def run(vals):
+        a2 = CSR(a.indptr, a.indices, vals, a.nnz, a.shape, a.sorted_cols)
+        return plan.execute(a2, b).data
+
+    pb_ops.reset_kernel_calls()
+    out = jax.vmap(run)(jnp.asarray(fleet))
+    cnt = pb_ops.kernel_call_counts()
+    assert cnt["batched_scatter"] >= 1 and cnt["batched_merge"] >= 1
+    assert cnt["inspect"] == 0
+    for e in range(3):
+        ref = plan.execute(
+            CSR(a.indptr, a.indices, jnp.asarray(fleet[e]), a.nnz,
+                a.shape, a.sorted_cols), b).data
+        assert np.array_equal(np.asarray(out[e]), np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property layer (optional extra)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings
+    from _fuzz import pb_case
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=40, deadline=None)
+    @given(pb_case())
+    def test_fuzz_pb_vs_scipy(case):
+        """Property layer: any low-compression product (forced empty
+        rows/columns, mixed densities, every bucket count) planned and
+        executed through the PB lane matches the scipy oracle exactly."""
+        ad, bd, n_buckets = case
+        a, b = csr_of(ad), csr_of(bd)
+        plan = plan_pb(a, b, n_buckets=n_buckets, cache=False)
+        _assert_matches_scipy(plan.execute(a, b), _oracle(ad, bd))

@@ -54,6 +54,31 @@ def test_lowest_p2():
     assert sched.lowest_p2(1000) == 1024
 
 
+try:
+    from _fuzz import degenerate_partition_case
+    HAVE_DEGEN = True
+except ImportError:
+    HAVE_DEGEN = False
+
+
+@pytest.mark.skipif(not HAVE_DEGEN, reason="hypothesis unavailable")
+@given(case=degenerate_partition_case() if HAVE_DEGEN else st.none())
+def test_equal_weight_partition_degenerate_invariants(case):
+    w, n_parts = case
+    n, total = w.shape[0], int(w.sum())
+    starts = np.asarray(sched.equal_weight_partition(w, n_parts))
+    assert starts.shape == (n_parts + 1,)
+    assert starts[0] == 0 and starts[-1] == n
+    assert np.all(np.diff(starts) >= 0)
+    # balance: every part's weight <= ceil(total/n_parts) + max weight
+    bound = -(-total // n_parts) + (int(w.max()) if n else 0)
+    for s in range(n_parts):
+        assert int(w[starts[s]:starts[s + 1]].sum()) <= max(bound, 0)
+    # zero totals must not collapse onto one part
+    if total == 0 and n >= n_parts:
+        assert np.diff(starts).max() <= -(-n // n_parts)
+
+
 @given(seed=st.integers(0, 10))
 def test_max_flop_per_bin_row_bounds_table(seed):
     a = rmat_csr(5, 4, "G500", seed=seed)
